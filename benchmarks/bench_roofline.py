@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run sweep results (deliverable g).
+
+Reads results/dryrun_*.jsonl produced by ``repro.launch.dryrun`` and
+emits the per-(arch x shape x mesh) roofline terms. If no sweep results
+exist yet, emits a pointer row instead of failing (the sweep takes ~1h;
+it runs via ``python -m repro.launch.dryrun --all``)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_GLOB = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "dryrun_*.jsonl",
+)
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    files = sorted(glob.glob(RESULTS_GLOB))
+    if not files:
+        return [{"table": "roofline", "status": "no dry-run results yet",
+                 "hint": "PYTHONPATH=src python -m repro.launch.dryrun "
+                         "--multi-pod both --out results/dryrun.jsonl"}]
+    seen = {}
+    for path in files:
+        with open(path) as fh:
+            for line in fh:
+                r = json.loads(line)
+                key = (r["arch"], r["shape"], r["mesh"])
+                seen[key] = r  # newest file wins
+    for (arch, shape, mesh), r in sorted(seen.items()):
+        if r["status"] != "ok":
+            rows.append({"table": "roofline", "arch": arch, "shape": shape,
+                         "mesh": mesh, "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))[:120]})
+            continue
+        rows.append({
+            "table": "roofline",
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "status": "ok",
+            "t_compute_s": round(r["t_compute"], 6),
+            "t_memory_s": round(r["t_memory"], 6),
+            "t_collective_s": round(r["t_collective"], 6),
+            "dominant": r["dominant"],
+            "useful_flops_frac": round(r["useful_flops_fraction"], 4),
+            "roofline_frac": round(r["roofline_fraction"], 4),
+        })
+    return rows

@@ -1,0 +1,73 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline).
+
+  bench_throughput  — Fig. 8/9 (total processed, throughput trendline+R^2)
+  bench_failure     — Fig. 10 (failure sweep p in {0,30,60,90}%)
+  bench_completion  — Fig. 11 / Eq. (1)-(2) (+ beyond-paper fix)
+  bench_scheduler   — beyond-paper scheduler x capacity sweep
+  bench_kernels     — kernel tiling numbers + CPU reference timings
+  bench_roofline    — the 40-cell dry-run roofline table
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT]
+Prints one CSV-ish line per result row: ``table,key=value,...``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _fmt(row: dict) -> str:
+    table = row.get("table", "?")
+    rest = ",".join(f"{k}={v}" for k, v in row.items() if k != "table")
+    return f"{table},{rest}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single bench (throughput|failure|completion|"
+                         "scheduler|kernels|roofline)")
+    ap.add_argument("--json", default=None, help="also dump rows as JSONL")
+    args = ap.parse_args()
+
+    from benchmarks import (  # deferred: jax import cost
+        bench_completion,
+        bench_failure,
+        bench_kernels,
+        bench_roofline,
+        bench_scheduler,
+        bench_throughput,
+    )
+
+    benches = {
+        "throughput": bench_throughput.run,
+        "failure": bench_failure.run,
+        "completion": bench_completion.run,
+        "scheduler": bench_scheduler.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    all_rows = []
+    for name, fn in benches.items():
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        rows = fn()
+        for row in rows:
+            print(_fmt(row), flush=True)
+        all_rows.extend(rows)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            for row in all_rows:
+                fh.write(json.dumps(row) + "\n")
+
+
+if __name__ == "__main__":
+    main()

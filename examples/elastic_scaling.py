@@ -1,0 +1,67 @@
+"""Elastic scaling demo: a bursty workload drives the autoscaler.
+
+A trajectory stream arrives in waves; the elastic worker service watches
+the task mailboxes and scales the TCMM task pool out under each burst and
+back in when the backlog drains — the paper's "react to changes in
+workload by increasing or decreasing the resources".
+
+Run:  PYTHONPATH=src python examples/elastic_scaling.py
+"""
+
+from repro.apps.tcmm import MicroClusterJob
+from repro.configs.tcmm import TCMMConfig
+from repro.core.elastic import AutoscalerConfig
+from repro.core.reactive import ReactiveJob
+from repro.data.sources import TrajectorySource
+from repro.data.topics import MessageLog
+
+
+def main() -> None:
+    log = MessageLog()
+    log.create_topic("trajectories", 4)
+    src = TrajectorySource(num_taxis=40, seed=1)
+    stream = src.stream(10_000)
+
+    job = ReactiveJob(
+        "micro", log, "trajectories", MicroClusterJob(TCMMConfig()),
+        initial_tasks=2, scheduler="jsq", batch_n=32,
+        autoscaler=AutoscalerConfig(
+            high_watermark=24, low_watermark=2,
+            min_workers=2, max_workers=16, cooldown=3.0,
+        ),
+    )
+
+    sizes = []
+    t = 0.0
+    for phase, burst in enumerate([40, 400, 40, 600, 0, 0, 0]):
+        for _ in range(10):  # 10 ticks per phase
+            t += 1.0
+            for _ in range(burst // 10):
+                try:
+                    key, p = next(stream)
+                except StopIteration:
+                    break
+                log.publish("trajectories", payload=p, key=key)
+            job.step(now=t, task_budget=4)
+            sizes.append(len(job.tasks))
+        print(f"phase {phase} (burst={burst:4d}/tick x10): "
+              f"tasks={len(job.tasks):3d} backlog={job.backlog():5d}")
+
+    # drain
+    while job.backlog():
+        t += 1.0
+        job.step(now=t, task_budget=4)
+    for _ in range(5):
+        t += 1.0
+        job.step(now=t)
+
+    print(f"\npeak pool size: {max(sizes)} (started at 2)")
+    print(f"final pool size after drain: {len(job.tasks)}")
+    print(f"scale events: {len(job.pool.scale_events)}")
+    assert max(sizes) > 2, "should have scaled out under the bursts"
+    assert len(job.tasks) < max(sizes), "should have scaled back in"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

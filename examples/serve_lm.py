@@ -1,0 +1,15 @@
+"""Continuous-batched serving of a (reduced-config) model: a burst of
+requests with ragged prompt lengths flows through the request mailbox into
+decode slots; slots free on completion and admit the next request.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "llama3.2-1b", "--requests", "24",
+                            "--slots", "4", "--max-new-tokens", "10"]
+    raise SystemExit(main(argv))

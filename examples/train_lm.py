@@ -1,0 +1,24 @@
+"""End-to-end LM training on the Reactive Liquid data path.
+
+Trains a (reduced-config) llama3.2 on synthetic token streams fed through
+the virtual messaging layer, with event-sourced checkpoints.  Pass
+``--full-size`` on real hardware for the 1B config; the defaults are
+CPU-sized so the example finishes in ~a minute.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 100]
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "llama3.2-1b",
+        "--steps", "60",
+        "--batch-size", "8",
+        "--seq-len", "64",
+        "--checkpoint-dir", "/tmp/repro-train-lm",
+        "--checkpoint-every", "20",
+    ]
+    raise SystemExit(main(argv))

@@ -1,0 +1,9 @@
+"""repro — Reactive Liquid in JAX.
+
+An elastic, resilient, multi-pod training/serving framework implementing
+Mirvakili, Fazli & Habibi, "Reactive Liquid: Optimized Liquid Architecture
+for Elastic and Resilient Distributed Data Processing" (2019), adapted to
+TPU/JAX per DESIGN.md.
+"""
+
+__version__ = "0.1.0"

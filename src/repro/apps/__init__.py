@@ -1,0 +1,1 @@
+from repro.apps.tcmm import MicroClusterState, MicroClusterJob, MacroClusterJob

@@ -1,0 +1,13 @@
+from repro.config.base import (
+    ArchConfig,
+    AttentionKind,
+    FFNKind,
+    LayerSpec,
+    MoEConfig,
+    ShapeSpec,
+    SHAPES,
+    TrainingConfig,
+    register_arch,
+    get_arch,
+    list_archs,
+)

@@ -1,0 +1,211 @@
+"""Config system: architecture descriptions, shape specs, registry.
+
+Every assigned architecture is a declarative ``ArchConfig``; the model
+zoo (``repro.models.zoo``) interprets it.  Configs are plain frozen
+dataclasses — picklable, hashable, diffable — and each architecture file
+in ``repro/configs/`` registers one full-size config plus a reduced
+``smoke`` variant used by CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from enum import Enum
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class AttentionKind(str, Enum):
+    FULL = "full"                # dense causal attention
+    SLIDING = "sliding"          # sliding-window (SWA)
+    NONE = "none"                # attention-free (SSM layer)
+    CROSS = "cross"              # encoder-decoder cross attention
+
+
+class FFNKind(str, Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    NONE = "none"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # Auxiliary load-balance loss weight (Switch-style).
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba-2 SSD block hyperparameters."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 64
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One (possibly repeated) layer 'flavor' in the depth pattern."""
+
+    attention: AttentionKind = AttentionKind.FULL
+    ffn: FFNKind = FFNKind.DENSE
+    window: int = 0              # >0 for sliding-window layers
+    is_mamba: bool = False
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | vlm | hybrid | audio | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # Depth pattern: layer i uses pattern[i % len(pattern)]. Default: all-FULL.
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # Encoder (enc-dec archs only).
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # fixed source length (stub frontend)
+    # Modality stub: inputs arrive as precomputed embeddings of this length.
+    frontend_tokens: int = 0         # e.g. image patches prepended to text
+    max_seq_len: int = 131072
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # logit soft cap (gemma-style); 0 = off
+    logit_softcap: float = 0.0
+    # residual scaling (minicpm depth-scaled residuals); 1.0 = off
+    residual_scale: float = 1.0
+    # parallel attention+FFN block (command-r style)
+    parallel_block: bool = False
+    # Whether the full-attention path is sub-quadratic enough for long_500k.
+    supports_long_context: bool = False
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    def layer_spec(self, i: int) -> LayerSpec:
+        return self.pattern[i % len(self.pattern)]
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        attn = q + kv + o
+        dense_ffn = 3 * d * ff  # gated (SwiGLU)
+        total = v * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.num_layers):
+            spec = self.layer_spec(i)
+            if spec.is_mamba and self.mamba is not None:
+                m = self.mamba
+                d_in = m.expand * d
+                nheads = d_in // m.head_dim
+                total += d * (2 * d_in + 2 * m.d_state)  # in_proj-ish
+                total += d_in * d  # out proj
+                total += nheads * m.d_state * m.head_dim // max(nheads, 1)
+            elif spec.attention != AttentionKind.NONE:
+                total += attn
+            if spec.ffn == FFNKind.MOE and self.moe is not None:
+                total += self.moe.num_experts * dense_ffn + d * self.moe.num_experts
+            elif spec.ffn == FFNKind.DENSE:
+                total += dense_ffn
+            total += 2 * d  # norms
+        enc_d = d
+        for _ in range(self.encoder_layers):
+            total += attn + dense_ffn + 2 * enc_d
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top_k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_ffn = 3 * d * ff
+        inactive_experts = self.moe.num_experts - self.moe.top_k
+        n_moe_layers = sum(
+            1
+            for i in range(self.num_layers)
+            if self.layer_spec(i).ffn == FFNKind.MOE
+        )
+        return self.param_count() - n_moe_layers * inactive_experts * dense_ffn
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainingConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip_norm: float = 1.0
+    schedule: str = "cosine"          # "cosine" | "wsd" | "constant"
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    stable_steps: int = 0             # WSD only
+    microbatch_size: int = 0          # 0 = no accumulation
+    remat_policy: str = "none"        # none | full | dots_saveable
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # bf16 moments fit 400B-class models in 16 GB/chip (DESIGN.md §4).
+    optimizer_state_dtype: str = "float32"
+    grad_compression: str = "none"    # none | int8 | topk
+    seed: int = 0
+
+
+# --- registry ---------------------------------------------------------------
+
+_ARCHS: Dict[str, Tuple[ArchConfig, ArchConfig]] = {}
+
+
+def register_arch(full: ArchConfig, smoke: ArchConfig) -> ArchConfig:
+    _ARCHS[full.name] = (full, smoke)
+    return full
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    import repro.configs  # noqa: F401  (registers everything)
+
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_ARCHS)}")
+    full, small = _ARCHS[name]
+    return small if smoke else full
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_ARCHS)

@@ -1,0 +1,42 @@
+"""command-r-plus-104b [dense]: 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000 — GQA, no biases, parallel attention+FFN block
+(Cohere style). [hf:CohereForAI/c4ai-command-r-plus; unverified]
+"""
+
+from repro.config.base import ArchConfig, register_arch
+
+FULL = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    head_dim=128,
+    max_seq_len=131072,
+    rope_theta=75_000_000.0,
+    tie_embeddings=True,
+    parallel_block=True,
+    supports_long_context=False,
+    notes="long_500k skipped: pure full attention. Largest dense cell: "
+    "FSDP+TP sharding mandatory (see distributed.sharding).",
+)
+
+SMOKE = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=2,
+    d_model=96,
+    num_heads=6,
+    num_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    head_dim=16,
+    max_seq_len=256,
+    tie_embeddings=True,
+    parallel_block=True,
+)
+
+register_arch(FULL, SMOKE)

@@ -1,0 +1,59 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144 — 5:1 local:global interleave, 128k context.
+[hf:google/gemma-3-4b-pt; unverified]
+
+The 5:1 pattern: five sliding-window (W=1024) layers then one global
+layer, repeating. head_dim=256 (gemma3 uses wide heads: 8 x 256 = 2048,
+decoupled from d_model). The dominant local attention makes long_500k
+feasible (only ~6 global layers hold full KV at B=1) — run, with a note.
+"""
+
+from repro.config.base import (
+    ArchConfig,
+    AttentionKind,
+    FFNKind,
+    LayerSpec,
+    register_arch,
+)
+
+_LOCAL = LayerSpec(attention=AttentionKind.SLIDING, ffn=FFNKind.DENSE, window=1024)
+_GLOBAL = LayerSpec(attention=AttentionKind.FULL, ffn=FFNKind.DENSE)
+
+FULL = ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    d_ff=10240,
+    vocab_size=262144,
+    head_dim=256,
+    pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+    max_seq_len=131072,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    supports_long_context=True,
+    notes="5:1 local(W=1024):global; long_500k runs — global layers hold "
+    "full KV but only ~6 of 34 layers at B=1 (see DESIGN.md).",
+)
+
+SMOKE = ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    num_layers=6,            # one full 5:1 period
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    pattern=(
+        LayerSpec(attention=AttentionKind.SLIDING, ffn=FFNKind.DENSE, window=8),
+    ) * 5 + (_GLOBAL,),
+    max_seq_len=256,
+    tie_embeddings=True,
+    supports_long_context=True,
+)
+
+register_arch(FULL, SMOKE)

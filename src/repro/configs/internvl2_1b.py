@@ -1,0 +1,47 @@
+"""internvl2-1b [vlm]: 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 — InternViT vision frontend + Qwen2-0.5B-class LM backbone.
+[arXiv:2404.16821; hf]
+
+Per the assignment, the ViT frontend is a STUB: ``input_specs()`` supplies
+precomputed patch embeddings (global_batch, 256, d_model) which the model
+prepends to the token embeddings (vision tokens attend causally like
+prefix tokens).
+"""
+
+from repro.config.base import ArchConfig, register_arch
+
+FULL = ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    head_dim=64,
+    frontend_tokens=256,  # stubbed ViT patch embeddings
+    max_seq_len=32768,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    supports_long_context=False,
+    notes="long_500k skipped: full attention. Vision frontend stubbed as "
+    "precomputed patch embeddings per the assignment.",
+)
+
+SMOKE = ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    frontend_tokens=8,
+    max_seq_len=256,
+    tie_embeddings=True,
+)
+
+register_arch(FULL, SMOKE)

@@ -1,0 +1,76 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16 experts top-2 — Mamba+attention 1:7 interleave, MoE
+every other layer. [arXiv:2403.19887; hf]
+
+Depth pattern (period 8, repeated 4x): attention at index 4 (offset per
+the Jamba paper: one attention layer per 8, rest Mamba), MoE FFN on odd
+indices, dense FFN on even.  We implement the Mamba sub-layers with the
+Mamba-2 SSD formulation (hardware adaptation: one chunked-scan kernel
+serves both ssm archs; Jamba v0.1 itself uses Mamba-1 — recorded in
+DESIGN.md as an assumption change).
+
+State (not KV) dominates long contexts: only 4 of 32 layers hold KV, so
+long_500k runs.
+"""
+
+from repro.config.base import (
+    ArchConfig,
+    AttentionKind,
+    FFNKind,
+    LayerSpec,
+    MambaConfig,
+    MoEConfig,
+    register_arch,
+)
+
+
+def _period(window_attn_idx: int = 4):
+    out = []
+    for i in range(8):
+        ffn = FFNKind.MOE if i % 2 == 1 else FFNKind.DENSE
+        if i == window_attn_idx:
+            out.append(LayerSpec(attention=AttentionKind.FULL, ffn=ffn))
+        else:
+            out.append(
+                LayerSpec(attention=AttentionKind.NONE, ffn=ffn, is_mamba=True)
+            )
+    return tuple(out)
+
+
+FULL = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    head_dim=128,
+    pattern=_period(),
+    moe=MoEConfig(num_experts=16, top_k=2, capacity_factor=1.25),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2, head_dim=64, chunk_size=64),
+    max_seq_len=262144,
+    supports_long_context=True,
+    notes="1:7 attn:mamba, MoE every other FFN; long_500k runs "
+    "(KV only in 4/32 layers; SSD state elsewhere).",
+)
+
+SMOKE = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=8,  # one full period
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    pattern=_period(),
+    moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=0.0),
+    mamba=MambaConfig(d_state=8, d_conv=4, expand=2, head_dim=16, chunk_size=16),
+    max_seq_len=256,
+    supports_long_context=True,
+)
+
+register_arch(FULL, SMOKE)

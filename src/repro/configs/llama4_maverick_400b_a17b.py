@@ -1,0 +1,61 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128 experts top-1, interleaved dense/MoE FFN,
+early-fusion multimodal (frontend out of scope for the LM backbone cells).
+[hf:meta-llama/Llama-4-Maverick-17B-128E; unverified]
+
+400B total / ~17B active. Training this cell requires bf16 optimizer
+moments to fit 16 GB/chip at 256 chips (TrainingConfig override in the
+dry-run; see DESIGN.md §5).
+"""
+
+from repro.config.base import (
+    ArchConfig,
+    AttentionKind,
+    FFNKind,
+    LayerSpec,
+    MoEConfig,
+    register_arch,
+)
+
+FULL = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,
+    # Interleaved: dense FFN / MoE FFN alternating.
+    pattern=(
+        LayerSpec(attention=AttentionKind.FULL, ffn=FFNKind.DENSE),
+        LayerSpec(attention=AttentionKind.FULL, ffn=FFNKind.MOE),
+    ),
+    moe=MoEConfig(num_experts=128, top_k=1, capacity_factor=1.25),
+    max_seq_len=131072,
+    rope_theta=500_000.0,
+    supports_long_context=False,
+    notes="long_500k skipped: full attention. top-1 routing (Switch-style);"
+    " 128-way EP over the model axis.",
+)
+
+SMOKE = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    pattern=(
+        LayerSpec(attention=AttentionKind.FULL, ffn=FFNKind.DENSE),
+        LayerSpec(attention=AttentionKind.FULL, ffn=FFNKind.MOE),
+    ),
+    moe=MoEConfig(num_experts=4, top_k=1, capacity_factor=0.0),
+    max_seq_len=256,
+)
+
+register_arch(FULL, SMOKE)

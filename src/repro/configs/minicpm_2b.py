@@ -1,0 +1,42 @@
+"""minicpm-2b [dense]: 40L d_model=2304 36H (kv=36, i.e. MHA) d_ff=5760
+vocab=122753 — llama-like with depth-scaled residuals and the WSD
+(warmup-stable-decay) learning-rate schedule. [arXiv:2404.06395; hf]
+"""
+
+from repro.config.base import ArchConfig, register_arch
+
+FULL = ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    head_dim=64,
+    max_seq_len=4096,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    residual_scale=1.4 / (40 ** 0.5),  # MiniCPM depth-scaled residual
+    supports_long_context=False,
+    notes="WSD schedule (TrainingConfig.schedule='wsd'); "
+    "long_500k skipped: pure full attention.",
+)
+
+SMOKE = ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=3,
+    d_model=72,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=144,
+    vocab_size=512,
+    head_dim=12,
+    max_seq_len=256,
+    tie_embeddings=True,
+    residual_scale=1.4 / (3 ** 0.5),
+)
+
+register_arch(FULL, SMOKE)

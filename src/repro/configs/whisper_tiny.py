@@ -1,0 +1,55 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 —
+encoder-decoder with a conv frontend STUB. [arXiv:2212.04356; unverified]
+
+Per the assignment the conv frontend is stubbed: ``input_specs()``
+supplies precomputed frame embeddings (global_batch, 1500, d_model) for
+the encoder. Decoder layers carry self-attention + cross-attention to the
+encoder output. Decode shapes run the decoder against its own KV cache
+plus the fixed 1500-frame cross-attention context.
+"""
+
+from repro.config.base import (
+    ArchConfig,
+    AttentionKind,
+    FFNKind,
+    LayerSpec,
+    register_arch,
+)
+
+FULL = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,  # decoder layers
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    pattern=(LayerSpec(attention=AttentionKind.CROSS, ffn=FFNKind.DENSE),),
+    encoder_layers=4,
+    encoder_seq=1500,
+    max_seq_len=4096,
+    supports_long_context=False,
+    notes="enc-dec; conv frontend stubbed as precomputed frame embeddings. "
+    "long_500k skipped: decoder trained to 448 positions; 500k decode is "
+    "meaningless for this arch (DESIGN.md §Arch-applicability).",
+)
+
+SMOKE = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    pattern=(LayerSpec(attention=AttentionKind.CROSS, ffn=FFNKind.DENSE),),
+    encoder_layers=2,
+    encoder_seq=32,
+    max_seq_len=128,
+)
+
+register_arch(FULL, SMOKE)

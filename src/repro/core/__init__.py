@@ -1,0 +1,13 @@
+"""The paper's contribution: virtual messaging, supervision, elasticity,
+event-sourced state, CRDTs, schedulers, and the Liquid/Reactive-Liquid
+pipelines over a deterministic discrete-event cluster simulator."""
+
+from repro.core.messages import Message, Mailbox, MessageBus
+from repro.core.crdt import GCounter, PNCounter, LWWRegister, GSet, ORSet, VClock
+from repro.core.state import Event, EventJournal, Snapshot, EventSourcedState
+from repro.core.scheduler import (
+    RoundRobinScheduler,
+    JoinShortestQueueScheduler,
+    PowerOfTwoScheduler,
+    make_scheduler,
+)

@@ -1,0 +1,266 @@
+"""The live Reactive Liquid pipeline (paper §3.2).
+
+Wires the five layers together over real messages:
+
+  messaging layer (``repro.data.topics``)
+    → virtual messaging layer (``VirtualConsumerGroup`` / producer pool)
+      → asynchronous messaging layer (task ``Mailbox``es)
+        → processing layer (``ReactiveTask`` pool, elastic)
+  with the reactive processing layer's three services — supervision,
+  elastic workers, event-sourced state — attached.
+
+This is the step-driven implementation used by tests, the TCMM app, the
+training data pipeline, and the failure-drill example.  The thread-backed
+variant lives in ``repro.core.runtime``; the timing model for the paper's
+figures in ``repro.core.simulation``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.elastic import AutoscalerConfig, WorkerPoolController
+from repro.core.messages import Mailbox, Message
+from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.state import EventJournal
+from repro.core.supervision import HeartbeatDetector, Supervisor
+from repro.core.virtual_messaging import VirtualConsumerGroup, VirtualProducerGroup
+from repro.data.topics import MessageLog, Topic
+
+ProcessFn = Callable[[Message], List[Any]]
+
+
+@dataclass
+class ReactiveTaskStats:
+    processed: int = 0
+    emitted: int = 0
+    deduped: int = 0
+
+
+class ReactiveTask:
+    """A processing task fed by its mailbox.
+
+    Exactly-once *effects* on top of at-least-once delivery: tasks track
+    seen ``msg_id``s (bounded) and skip duplicates caused by Let-It-Crash
+    redelivery.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(
+        self,
+        job_name: str,
+        process: ProcessFn,
+        producer_group: Optional[VirtualProducerGroup],
+        mailbox_capacity: int = 0,
+        dedup_window: int = 65536,
+    ) -> None:
+        self.task_id = next(ReactiveTask._ids)
+        self.name = f"{job_name}:task{self.task_id}"
+        self.mailbox = Mailbox(self.name, capacity=mailbox_capacity)
+        self.process = process
+        self.producer_group = producer_group
+        self.stats = ReactiveTaskStats()
+        self._seen: Dict[int, None] = {}
+        self._dedup_window = dedup_window
+        self.alive = True
+
+    def step(self, max_messages: int = 8) -> int:
+        n = 0
+        while n < max_messages and self.alive:
+            msg = self.mailbox.get()
+            if msg is None:
+                break
+            if msg.msg_id in self._seen:
+                self.stats.deduped += 1
+                continue
+            self._seen[msg.msg_id] = None
+            if len(self._seen) > self._dedup_window:
+                # Drop oldest half (insertion-ordered dict).
+                for k in list(self._seen)[: self._dedup_window // 2]:
+                    del self._seen[k]
+            outputs = self.process(msg)
+            self.stats.processed += 1
+            if self.producer_group is not None:
+                for payload in outputs:
+                    self.producer_group.submit(
+                        Message(
+                            topic=self.producer_group.topic.name,
+                            payload=payload,
+                            created_at=msg.created_at,
+                        )
+                    )
+                    self.stats.emitted += 1
+            n += 1
+        return n
+
+
+class ReactiveJob:
+    """A job on the Reactive Liquid stack.
+
+    The task pool is elastic (autoscaled on mailbox depth) and unlimited
+    by partition count; virtual consumers are supervised, stateful
+    (journaled offsets) workers.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        log: MessageLog,
+        in_topic: str,
+        process: ProcessFn,
+        out_topic: Optional[str] = None,
+        initial_tasks: int = 4,
+        scheduler: str = "round_robin",
+        batch_n: int = 10,
+        mailbox_capacity: int = 0,
+        autoscaler: Optional[AutoscalerConfig] = None,
+        journal_factory: Optional[Callable[[int], EventJournal]] = None,
+        supervisor: Optional[Supervisor] = None,
+        heartbeat_timeout: float = 10.0,
+        elastic: bool = True,
+    ) -> None:
+        self.name = name
+        self.elastic = elastic
+        self.log = log
+        self.topic: Topic = log.get(in_topic)
+        self.process = process
+        self.scheduler_name = scheduler
+        self.mailbox_capacity = mailbox_capacity
+        self.producer_group = (
+            VirtualProducerGroup(log.get(out_topic)) if out_topic else None
+        )
+        self.consumer_group = VirtualConsumerGroup(
+            name,
+            self.topic,
+            scheduler_factory=lambda: make_scheduler(scheduler),
+            batch_size=batch_n,
+            journal_factory=journal_factory,
+        )
+        self.tasks: List[ReactiveTask] = []
+        self.pool = WorkerPoolController(
+            initial_tasks,
+            autoscaler
+            or AutoscalerConfig(min_workers=1, max_workers=256, cooldown=0.0),
+        )
+        self.supervisor = supervisor or Supervisor(f"{name}-supervisor")
+        self.heartbeat_timeout = heartbeat_timeout
+        # Work done by tasks that have since been retired or replaced —
+        # without this, scale-in would silently erase progress accounting.
+        self._retired_processed = 0
+        self._retired_emitted = 0
+        for _ in range(initial_tasks):
+            self._spawn_task()
+        for vc in self.consumer_group.consumers:
+            self._supervise_vc(vc.partition)
+
+    # -- supervision hooks -------------------------------------------------
+    def _supervise_vc(self, partition: int) -> None:
+        self.supervisor.supervise(
+            f"{self.name}:vc{partition}",
+            restart=lambda p=partition: self.consumer_group.restart_consumer(p),
+            detector=HeartbeatDetector(self.heartbeat_timeout),
+        )
+
+    def _spawn_task(self) -> ReactiveTask:
+        task = ReactiveTask(
+            self.name,
+            self.process,
+            self.producer_group,
+            mailbox_capacity=self.mailbox_capacity,
+        )
+        self.tasks.append(task)
+        self.supervisor.supervise(
+            task.name,
+            restart=lambda t=task: self._restart_task(t),
+            detector=HeartbeatDetector(self.heartbeat_timeout),
+        )
+        return task
+
+    def _restart_task(self, task: ReactiveTask) -> None:
+        """Let-It-Crash: fresh instance; pending mailbox moves over. The
+        old supervision entry is replaced by one for the fresh task —
+        otherwise the dead child would be 'restarted' (and its stats
+        re-counted) on every subsequent check."""
+        if task not in self.tasks:
+            return  # already replaced by an earlier restart
+        fresh = ReactiveTask(
+            self.name, self.process, self.producer_group, self.mailbox_capacity
+        )
+        for msg in task.mailbox.drain():
+            fresh.mailbox.put(msg)
+        self.tasks[self.tasks.index(task)] = fresh
+        task.alive = False
+        self._retired_processed += task.stats.processed
+        self._retired_emitted += task.stats.emitted
+        self.supervisor.unsupervise(task.name)
+        self.supervisor.supervise(
+            fresh.name,
+            restart=lambda t=fresh: self._restart_task(t),
+            detector=HeartbeatDetector(self.heartbeat_timeout),
+        )
+
+    def _retire_task(self) -> None:
+        if len(self.tasks) <= 1:
+            return
+        victim = min(self.tasks, key=lambda t: t.mailbox.depth())
+        self.tasks.remove(victim)
+        victim.alive = False
+        self._retired_processed += victim.stats.processed
+        self._retired_emitted += victim.stats.emitted
+        self.supervisor.unsupervise(victim.name)
+        boxes = [t.mailbox for t in self.tasks]
+        sched = make_scheduler(self.scheduler_name)
+        for msg in victim.mailbox.drain():
+            boxes[sched.pick(boxes)].put(msg)
+
+    # -- main loop ----------------------------------------------------------
+    def step(self, now: float = 0.0, task_budget: int = 8) -> int:
+        """One pipeline round: consume->forward, process, publish, scale."""
+        self.consumer_group.step_all([t.mailbox for t in self.tasks], now=now)
+        processed = sum(t.step(task_budget) for t in self.tasks)
+        if self.producer_group is not None:
+            self.producer_group.step_all()
+        # Heartbeats: live components beat; the supervisor check restarts
+        # any that a failure drill silenced (see examples/failure_drill).
+        for t in self.tasks:
+            if t.alive:
+                self.supervisor.heartbeat(t.name, now)
+        for vc in self.consumer_group.consumers:
+            if vc.alive:
+                self.supervisor.heartbeat(f"{self.name}:vc{vc.partition}", now)
+        self.supervisor.check(now)
+        # Elasticity.
+        if self.elastic:
+            decision, _ = self.pool.observe(
+                [t.mailbox.depth() for t in self.tasks], now=now
+            )
+            while len(self.tasks) < self.pool.target_size:
+                self._spawn_task()
+            while len(self.tasks) > self.pool.target_size:
+                self._retire_task()
+        return processed
+
+    def run_to_completion(self, max_rounds: int = 1_000_000) -> int:
+        total = 0
+        idle = 0
+        for r in range(max_rounds):
+            n = self.step(now=float(r))
+            total += n
+            backlog = self.consumer_group.total_lag() + sum(
+                t.mailbox.depth() for t in self.tasks
+            )
+            idle = idle + 1 if n == 0 and backlog == 0 else 0
+            if idle >= 2:
+                break
+        return total
+
+    def total_processed(self) -> int:
+        return self._retired_processed + sum(t.stats.processed for t in self.tasks)
+
+    def backlog(self) -> int:
+        return self.consumer_group.total_lag() + sum(
+            t.mailbox.depth() for t in self.tasks
+        )

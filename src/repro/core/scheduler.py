@@ -1,0 +1,125 @@
+"""Message-distribution schedulers.
+
+The paper's virtual consumers forward messages to task mailboxes with no
+load awareness (effectively round-robin), which is exactly why its Fig. 11
+completion time regresses: mailbox waiting time ``t_wi`` grows unboundedly
+on slow tasks.  §5 of the paper names "a message distribution scheduler
+algorithm which distributes the messages among the tasks" as the open
+problem.
+
+We ship three schedulers:
+
+  * ``RoundRobinScheduler`` — the paper-faithful baseline.
+  * ``JoinShortestQueueScheduler`` — route to the task with minimum queue
+    depth (JSQ); optimal among non-anticipating policies for homogeneous
+    servers.
+  * ``PowerOfTwoScheduler`` — sample d=2 tasks, pick the shorter queue
+    (Mitzenmacher 2001).  O(1) state inspection per message, near-JSQ tail
+    latency; this is the variant that scales to thousands of tasks because
+    JSQ's full scan is itself a contention point (which the Reactive
+    Manifesto forbids).
+
+``benchmarks/bench_scheduler.py`` reproduces the paper's completion-time
+regression under RR and shows JSQ/P2C close it — the beyond-paper result.
+
+The same interface also drives MoE token routing at silicon scale (see
+DESIGN.md §5): experts are "tasks", tokens are "messages", and capacity
+overflow is mailbox backpressure.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Callable, List, Protocol, Sequence
+
+
+class QueueView(Protocol):
+    """Anything with a depth() — Mailbox satisfies this."""
+
+    def depth(self) -> int: ...
+
+
+class Scheduler:
+    """Chooses the destination task index for each message."""
+
+    name = "base"
+
+    def pick(self, queues: Sequence[QueueView]) -> int:
+        raise NotImplementedError
+
+    def reset(self, num_tasks: int) -> None:  # pragma: no cover - default
+        pass
+
+
+class RoundRobinScheduler(Scheduler):
+    """Paper-faithful: cycle through tasks, ignoring load."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def reset(self, num_tasks: int) -> None:
+        self._next = 0
+
+    def pick(self, queues: Sequence[QueueView]) -> int:
+        i = self._next % len(queues)
+        self._next = (self._next + 1) % len(queues)
+        return i
+
+
+class JoinShortestQueueScheduler(Scheduler):
+    """Route to the minimum-depth queue; ties broken by lowest index."""
+
+    name = "jsq"
+
+    def pick(self, queues: Sequence[QueueView]) -> int:
+        best, best_depth = 0, queues[0].depth()
+        for i in range(1, len(queues)):
+            d = queues[i].depth()
+            if d < best_depth:
+                best, best_depth = i, d
+        return best
+
+
+class PowerOfTwoScheduler(Scheduler):
+    """Sample two queues uniformly, route to the shorter."""
+
+    name = "pow2"
+
+    def __init__(self, seed: int = 0) -> None:
+        self._rng = random.Random(seed)
+
+    def reset(self, num_tasks: int) -> None:
+        pass
+
+    def pick(self, queues: Sequence[QueueView]) -> int:
+        n = len(queues)
+        if n == 1:
+            return 0
+        i = self._rng.randrange(n)
+        j = self._rng.randrange(n - 1)
+        if j >= i:
+            j += 1
+        return i if queues[i].depth() <= queues[j].depth() else j
+
+
+_REGISTRY: dict[str, Callable[[], Scheduler]] = {
+    "round_robin": RoundRobinScheduler,
+    "jsq": JoinShortestQueueScheduler,
+    "pow2": PowerOfTwoScheduler,
+}
+
+
+def make_scheduler(name: str, **kwargs) -> Scheduler:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+    return factory(**kwargs)  # type: ignore[call-arg]
+
+
+def scheduler_names() -> List[str]:
+    return sorted(_REGISTRY)

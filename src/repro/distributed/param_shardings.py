@@ -1,0 +1,273 @@
+"""Path-based parameter / optimizer / cache sharding assignment.
+
+Given an ``eval_shape`` pytree of the train state (or cache), assign each
+leaf a PartitionSpec from its tree path + shape, under a rule set that was
+pre-validated for divisibility by ``make_rules`` (pjit rejects
+non-divisible argument shardings, so every rule here is exact).
+
+Conventions (leading stack axes — the scan/period axis, detected as
+"extra" dims beyond the logical rank — are never sharded):
+
+  embed.tok        [V, D]        -> (vocab, fsdp)
+  embed.unembed    [D, V]        -> (fsdp, vocab)
+  attn wq/wk/wv    [D, H, hd]    -> (fsdp, heads|None, head_dim|None)
+  attn wo          [H, hd, D]    -> (heads, head_dim, fsdp)
+  mlp w_gate/w_up  [D, F]        -> (fsdp, ffn)
+  mlp w_down       [F, D]        -> (ffn, fsdp)
+  moe router       [D, E]        -> (fsdp, None)
+  moe w_gate/w_up  [E, D, F]     -> (expert, fsdp, ffn_if_no_ep)
+  moe w_down       [E, F, D]     -> (expert, ffn_if_no_ep, fsdp)
+  mamba in_proj    [D, X]        -> (fsdp, mamba_inner)
+  mamba out_proj   [X, D]        -> (mamba_inner, fsdp)
+  conv_w/conv_b/norms/scalars    -> replicated
+  kv cache k/v     [B, S, Hkv, hd] -> (batch, kv_seq, kv_heads, None)
+  mamba cache ssm  [B, H, N, P]  -> (batch, mamba_heads, None, None)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from repro.config.base import ArchConfig
+from repro.distributed.sharding import AxisRules, MEGATRON_RULES
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape.get(a, 1)
+        return out
+    return mesh.shape.get(axis, 1)
+
+
+def make_rules(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    long_context: bool = False,
+    seq_parallel: bool = False,
+    kv_headdim_shard: bool = False,
+    fsdp: bool = True,
+    capacity_shard: bool = False,
+    kv_seq_model: bool = False,
+) -> AxisRules:
+    """Megatron-style base rules, pruned to what divides exactly for this
+    arch on this mesh. pjit rejects non-divisible argument shardings, so
+    every surviving rule is safe by construction."""
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+    pod = mesh.shape.get("pod", 1)
+    rules: AxisRules = dict(MEGATRON_RULES)
+    rules["batch"] = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    hd = cfg.resolved_head_dim
+    if cfg.num_heads % model != 0:
+        rules["heads"] = None
+    if cfg.num_kv_heads % model != 0:
+        rules["kv_heads"] = None
+    # If heads can't shard, try the head_dim lanes instead (wide-head
+    # archs like gemma3: 8 heads x 256 dims on a 16-way model axis).
+    if rules["heads"] is None and rules["kv_heads"] is None and hd % model == 0:
+        rules["head_dim"] = "model"
+    else:
+        rules["head_dim"] = None
+    rules["kv_head_dim"] = rules["head_dim"]
+    if (
+        kv_headdim_shard
+        and rules["kv_heads"] is None
+        and rules["kv_head_dim"] is None
+        and hd % model == 0
+    ):
+        # GQA with kv_heads < model axis: shard the cache's head_dim lanes
+        # instead of replicating the KV cache across the TP group (§Perf
+        # cell A — a replicated 32k x B128 cache cannot fit HBM on the
+        # 104B dense arch).
+        rules["kv_head_dim"] = "model"
+    if cfg.d_ff == 0 or cfg.d_ff % model != 0:
+        rules["ffn"] = None
+    if cfg.vocab_size % model != 0:
+        rules["vocab"] = None
+    if cfg.d_model % data != 0:
+        rules["embed_fsdp"] = None
+    if cfg.moe is not None:
+        if cfg.moe.num_experts % model != 0:
+            rules["expert"] = None
+        # EP off -> TP inside the expert ff dim instead (never both: an
+        # axis may appear at most once in a PartitionSpec).
+        rules["expert_ffn"] = rules.get("ffn") if rules["expert"] is None else None
+    if cfg.mamba is not None:
+        d_in = cfg.mamba.expand * cfg.d_model
+        nheads = d_in // cfg.mamba.head_dim
+        if d_in % model != 0:
+            rules["mamba_inner"] = None
+        if nheads % model != 0:
+            rules["mamba_heads"] = None
+    if long_context:
+        # batch can't shard at all (B=1): context-parallel KV over data.
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    if seq_parallel:
+        # context/sequence parallelism: activations' seq dim over model.
+        # head_dim TP must come off — an axis may appear once per spec,
+        # and the whole point is to stop paying the attention-score
+        # all-reduce that head_dim-contraction sharding induces.
+        rules["seq"] = "model"
+        rules["head_dim"] = None
+        rules["kv_head_dim"] = None
+        if rules.get("vocab") == "model":
+            rules["vocab"] = None  # logits [B, seq, vocab]: one axis each
+    if not fsdp:
+        # ZeRO-style weight sharding off (decode cells: per-step parameter
+        # all-gathers are pure overhead when there is no optimizer state).
+        rules["embed_fsdp"] = None
+    if kv_seq_model:
+        # Decode: shard the KV cache's SEQ dim over model instead of any
+        # head/head_dim contraction sharding — attention over local seq
+        # shards plus small softmax-stat combines, instead of
+        # all-gathering the cache (§Perf cell B iteration 4).
+        rules["kv_seq"] = "model"
+        rules["kv_head_dim"] = None
+        rules["head_dim"] = None
+    if capacity_shard:
+        # MoE expert buffers [e, cap, d]: cap over data makes expert
+        # compute data x model parallel instead of model-only (§Perf cell
+        # C iteration 2) — without it every model shard redoes the full
+        # capacity batch of its experts.
+        rules["capacity"] = "data"
+    return rules
+
+
+def _name_of(entry) -> Optional[str]:
+    if isinstance(entry, DictKey):
+        return str(entry.key)
+    if isinstance(entry, GetAttrKey):
+        return entry.name
+    return None
+
+
+def _path_names(path) -> list:
+    return [n for n in (_name_of(p) for p in path) if n is not None]
+
+
+# spec patterns by trailing-name; ranks are the logical (unstacked) ranks.
+def _logical_spec(names: list, rules: AxisRules, moe_ep: bool) -> Tuple[Axis, ...]:
+    last = names[-1] if names else ""
+    in_moe = "moe" in names
+    in_mamba = "mamba" in names
+    fsdp = rules.get("embed_fsdp")
+    if last == "tok":
+        return (rules.get("vocab"), fsdp)
+    if last == "unembed":
+        return (fsdp, rules.get("vocab"))
+    if last == "wq":
+        return (fsdp, rules.get("heads"), rules.get("head_dim"))
+    if last in ("wk", "wv"):
+        return (fsdp, rules.get("kv_heads"), rules.get("kv_head_dim"))
+    if last == "wo":
+        return (rules.get("heads"), rules.get("head_dim"), fsdp)
+    if last in ("w_gate", "w_up"):
+        if in_moe:
+            return (rules.get("expert"), fsdp, rules.get("expert_ffn"))
+        return (fsdp, rules.get("ffn"))
+    if last == "w_down":
+        if in_moe:
+            return (rules.get("expert"), rules.get("expert_ffn"), fsdp)
+        return (rules.get("ffn"), fsdp)
+    if last == "router":
+        return (fsdp, None)
+    if last == "in_proj":
+        return (fsdp, rules.get("mamba_inner"))
+    if last == "out_proj":
+        return (rules.get("mamba_inner"), fsdp)
+    if last in ("conv_w", "conv_b", "dt_bias", "A_log", "D", "norm_w"):
+        return None  # replicated (tiny)
+    # norms, scalars, everything else: replicated
+    return None
+
+
+def spec_for_param(path, leaf, rules: AxisRules, moe_ep: bool) -> P:
+    names = _path_names(path)
+    logical = _logical_spec(names, rules, moe_ep)
+    rank = np.ndim(leaf)
+    if logical is None:
+        return P()
+    pad = rank - len(logical)
+    if pad < 0:  # unexpectedly small leaf: replicate
+        return P()
+    return P(*([None] * pad + list(logical)))
+
+
+def params_shardings(params_shape, cfg: ArchConfig, mesh: Mesh, rules: AxisRules):
+    moe_ep = (
+        cfg.moe is not None
+        and rules.get("expert") is not None
+    )
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, spec_for_param(path, leaf, rules, moe_ep)
+        ),
+        params_shape,
+    )
+
+
+def train_state_shardings(state_shape, cfg: ArchConfig, mesh: Mesh, rules: AxisRules):
+    """TrainState(params, opt(step, mu, nu), ef, rng): moments and EF mirror
+    the param specs; step/rng replicate."""
+    moe_ep = cfg.moe is not None and rules.get("expert") is not None
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        if names and names[0] in ("step", "rng") or np.ndim(leaf) == 0:
+            return NamedSharding(mesh, P())
+        # strip the TrainState/AdamWState prefix (params/opt/mu/nu/ef)
+        return NamedSharding(mesh, spec_for_param(path, leaf, rules, moe_ep))
+
+    return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def cache_shardings(cache_shape, cfg: ArchConfig, mesh: Mesh, rules: AxisRules):
+    """KV / mamba cache specs (decode path)."""
+    batch = rules.get("batch")
+    kv_seq = rules.get("kv_seq")
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        rank = np.ndim(leaf)
+        last = names[-1] if names else ""
+        if last in ("k", "v"):
+            logical = (batch, kv_seq, rules.get("kv_heads"), rules.get("kv_head_dim"))
+        elif last == "slot_pos":
+            logical = (batch, kv_seq)
+        elif last == "pos":
+            logical = (batch,)
+        elif last == "conv":
+            logical = (batch, None, rules.get("mamba_inner"))
+        elif last == "ssm":
+            logical = (batch, rules.get("mamba_heads"), None, None)
+        else:
+            return NamedSharding(mesh, P())
+        pad = rank - len(logical)
+        if pad < 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([None] * pad + list(logical))))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def batch_shardings(specs: Dict[str, Any], mesh: Mesh, rules: AxisRules):
+    batch = rules.get("batch")
+    out = {}
+    for k, v in specs.items():
+        rank = len(v.shape)
+        out[k] = NamedSharding(mesh, P(*([batch] + [None] * (rank - 1))))
+    return out

@@ -1,0 +1,124 @@
+"""Logical-axis sharding (MaxText-style logical→physical rules).
+
+Models annotate tensors with *logical* axis names ("batch", "embed",
+"heads", "expert", ...).  A rule table — installed for the duration of a
+``with axis_rules(...)`` block — maps logical names to physical mesh axes
+("data", "model", "pod").  Outside any rules context (CPU unit tests) the
+annotations are no-ops, so model code is identical on 1 device and 512.
+
+Baseline rule sets live here too: ``MEGATRON_RULES`` (TP on model axis +
+FSDP on data axis for large tensors, batch over data(+pod)) and variants
+used by the §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import contextvars
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisRules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+_rules: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    token = _rules.set(rules)
+    try:
+        yield
+    finally:
+        _rules.reset(token)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _rules.get()
+
+
+def logical_spec(*names: Optional[str]) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules."""
+    rules = _rules.get()
+    if rules is None:
+        return P()
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical names; no-op without rules."""
+    rules = _rules.get()
+    if rules is None:
+        return x
+    spec = P(*[rules.get(n) if n is not None else None for n in names])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_spec(names: Sequence[Optional[str]]) -> P:
+    return logical_spec(*names)
+
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+# Baseline: Megatron TP on "model" + ZeRO/FSDP on "data" for the big weight
+# matrices; batch over (pod, data). Logical names used by repro.models.
+MEGATRON_RULES: AxisRules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,                  # residual-stream seq dim (SP shards it)
+    # seq dim INSIDE attention/mlp/mamba blocks: always unconstrained —
+    # under sequence parallelism the internals shard heads/ffn while the
+    # residual stream holds the seq sharding (Megatron-SP structure).
+    "seq_inner": None,
+    "embed": None,                # residual stream replicated across model
+    "heads": "model",             # attention heads split over model axis
+    "kv_heads": "model",
+    "head_dim": None,
+    # K/V (and KV-cache) head_dim: defaults to follow head_dim; the
+    # kv_headdim_shard option shards it when kv_heads can't divide the
+    # model axis (GQA decode: a replicated cache can exceed HBM).
+    "kv_head_dim": None,
+    "ffn": "model",               # MLP hidden split over model
+    "expert": "model",            # MoE experts over model (EP)
+    # expert-inner ff dim: only sharded when EP is off (an axis can appear
+    # once per spec); make_rules sets this per arch.
+    "expert_ffn": None,
+    "capacity": None,
+    "vocab": "model",             # vocab-parallel embedding/unembed
+    # weights: FSDP shards the non-TP dim over data
+    "embed_fsdp": "data",
+    "layers": None,               # the scan/stack axis is never sharded
+    "conv": None,
+    "state": None,
+    "mamba_heads": "model",
+    "mamba_inner": "model",
+    # long-context decode: KV sharded over data when batch can't be
+    "kv_seq": None,
+}
+
+# Context-parallel variant for long_500k (batch=1): shard the KV/state
+# sequence dim over data.
+LONG_CONTEXT_RULES: AxisRules = dict(MEGATRON_RULES)
+LONG_CONTEXT_RULES.update({"kv_seq": "data", "batch": "pod"})
+
+# Sequence-parallel variant (hillclimb): residual stream's seq dim sharded
+# over model between blocks (Korthikanti et al.), halving norm/residual
+# memory traffic and turning TP all-reduces into reduce-scatter+all-gather.
+SEQPAR_RULES: AxisRules = dict(MEGATRON_RULES)
+SEQPAR_RULES.update({"seq": "model"})
+
+
+def rules_for(name: str) -> AxisRules:
+    table = {
+        "megatron": MEGATRON_RULES,
+        "long_context": LONG_CONTEXT_RULES,
+        "seqpar": SEQPAR_RULES,
+    }
+    if name not in table:
+        raise KeyError(f"unknown rule set {name!r}; available {sorted(table)}")
+    return table[name]

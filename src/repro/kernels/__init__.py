@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has:
+  kernel.py -- pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd public wrapper (shape checks, dtype policy, interpret flag)
+  ref.py    -- pure-jnp oracle used by the allclose test sweeps
+
+This container is CPU-only: kernels are validated in interpret=True mode
+(the kernel body executes in Python per block) against the oracles; the
+dry-run lowers the pure-jnp model path (see DESIGN.md s5).
+"""

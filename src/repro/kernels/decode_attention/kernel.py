@@ -1,0 +1,127 @@
+"""Single-token decode attention kernel (TPU Pallas).
+
+Decode is memory-bound: the whole KV cache streams HBM->VMEM once per
+step while compute is a handful of GEMVs.  The kernel therefore optimizes
+for exactly one thing: **read each KV block once for the whole GQA
+group**.  Grid = (B, Hkv, S/block_k); the q block holds all G = H/Hkv
+query heads of the kv head, so arithmetic intensity per KV byte is G x
+that of a per-head loop (the flash kernel's schedule).  G x 128-dim GEMVs
+also batch into one (G, d) x (d, block_k) MXU matmul.
+
+Running softmax stats (m, l) and the (G, d) accumulator sit in VMEM
+scratch across the sequential S-steps, exactly like the flash kernel.
+kv_len masking handles ragged batches (continuous batching feeds
+sequences of different lengths).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    kv_len_ref,  # [1] int32 (scalar prefetch-style, small block)
+    q_ref,       # [1, 1, G, d]
+    k_ref,       # [1, block_k, 1, d]
+    v_ref,       # [1, block_k, 1, d]
+    o_ref,       # [1, 1, G, d]
+    m_ref,       # scratch [G, 1] f32
+    l_ref,       # scratch [G, 1] f32
+    acc_ref,     # scratch [G, d] f32
+    *,
+    sm_scale: float,
+    window: int,
+    block_k: int,
+    kv_steps: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)  # [G, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T) * sm_scale  # [G, bk] (one MXU matmul per block)
+
+    kv_len = kv_len_ref[0]
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = k_pos < kv_len
+    if window > 0:
+        mask = mask & (k_pos > kv_len - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ik == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jax.Array,        # [B, H, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    kv_len: jax.Array,   # [B] int32
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    assert s % block_k == 0, (s, block_k)
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    kv_steps = s // block_k
+    # Head h belongs to kv-head h // g, so [B, H, d] -> [B, Hkv, G, d]
+    # groups each kv head's queries contiguously.
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        sm_scale=scale,
+        window=window,
+        block_k=block_k,
+        kv_steps=kv_steps,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, ik: (b_,)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, ik: (b_, ik, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

@@ -1,0 +1,35 @@
+"""Public wrapper for the decode attention kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "sm_scale", "block_k", "interpret"),
+)
+def decode_attention(
+    q: jax.Array,        # [B, H, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    kv_len: jax.Array,   # [B]
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    if q.ndim != 3:
+        raise ValueError("q must be [B, H, D] (one token per sequence)")
+    if q.shape[1] % k_cache.shape[2] != 0:
+        raise ValueError("num_heads must be a multiple of num_kv_heads")
+    bk = min(block_k, k_cache.shape[1])
+    return decode_attention_fwd(
+        q, k_cache, v_cache, kv_len,
+        window=window, sm_scale=sm_scale, block_k=bk, interpret=interpret,
+    )

@@ -1,0 +1,154 @@
+"""Flash attention forward kernel (TPU Pallas).
+
+Online-softmax tiling: grid = (B, H, Tq/block_q, Skv/block_k).  On TPU the
+grid is executed sequentially in row-major order, so for a fixed
+(b, h, iq) the kv index is the innermost loop and the running softmax
+statistics (m, l) and the output accumulator live in VMEM scratch across
+kv steps — the classic FlashAttention-2 schedule mapped onto the TPU's
+sequential-grid model (no atomics, no semaphores needed).
+
+VMEM working set per step (bf16 in, fp32 accum):
+    q:   block_q * d * 4
+    k,v: 2 * block_k * d * 2
+    acc: block_q * d * 4 (+ m, l)
+With block_q = block_k = 512 and d = 128 this is ~0.9 MB — comfortably
+inside the ~16 MB VMEM budget, and all matmul dims are multiples of the
+128x128 MXU tile.
+
+GQA: kernel operates per *query* head; the BlockSpec index map divides by
+the group size to pick the shared KV head, so KV blocks are re-read per
+query head (the decode kernel amortizes instead — see decode_attention).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # [1, block_q, 1, d]
+    k_ref,  # [1, block_k, 1, d]
+    v_ref,  # [1, block_k, 1, d]
+    o_ref,  # [1, block_q, 1, d]
+    m_ref,  # scratch [block_q, 1] f32
+    l_ref,  # scratch [block_q, 1] f32
+    acc_ref,  # scratch [block_q, d] f32
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    kv_steps: int,
+    q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T) * sm_scale  # [bq, bk] (MXU)
+
+    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones((block_q, block_k), dtype=bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]  # [bq]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)  # rescale of old accumulator
+    p = jnp.exp(s - m_cur[:, None])  # [bq, bk]
+    # Fully-masked rows (early causal blocks): keep stats neutral.
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ik == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # [B, T, H, D]
+    k: jax.Array,  # [B, S, Hkv, D]
+    v: jax.Array,  # [B, S, Hkv, D]
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert t % block_q == 0, (t, block_q)
+    assert s % block_k == 0, (s, block_k)
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    kv_steps = s // block_k
+
+    kernel = functools.partial(
+        _attn_kernel,
+        sm_scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        kv_steps=kv_steps,
+        q_offset=q_offset,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, t // block_q, kv_steps),
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, d), lambda b_, h_, iq, ik, g=g: (b_, ik, h_ // g, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, d), lambda b_, h_, iq, ik, g=g: (b_, ik, h_ // g, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

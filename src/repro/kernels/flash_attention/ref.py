@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal +
+sliding-window)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, T, H, D]
+    k: jax.Array,  # [B, S, Hkv, D]
+    v: jax.Array,  # [B, S, Hkv, D]
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,  # [B] valid KV prefix lengths
+    q_offset: int = 0,  # absolute position of q[0] (decode: cache length)
+) -> jax.Array:
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, t, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k.astype(jnp.float32)) * scale
+
+    q_pos = q_offset + jnp.arange(t)[:, None]  # [t, 1]
+    kv_pos = jnp.arange(s)[None, :]  # [1, s]
+    mask = jnp.ones((t, s), dtype=bool)
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    if window > 0:
+        mask = mask & (kv_pos > q_pos - window)
+    mask = mask[None, None, None, :, :]
+    if kv_len is not None:
+        mask = mask & (kv_pos[None, :, :] < kv_len[:, None, None])[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.moe_gating.ops import moe_gating
+from repro.kernels.moe_gating.ref import moe_gating_ref

@@ -1,0 +1,122 @@
+"""Fused MoE gating kernel (TPU Pallas).
+
+Fuses softmax + top-k + capacity assignment in one pass over token
+blocks.  The sequential-grid property of TPU Pallas does the heavy
+lifting again: per-expert assignment counters live in VMEM scratch and
+carry across token blocks, so first-come-first-served capacity positions
+— a prefix-sum over the whole token axis, awkward for a data-parallel
+formulation — fall out of the grid order for free.
+
+This is the paper's scheduling idea at silicon scale: tokens = messages,
+experts = tasks, the counter vector = mailbox depths, capacity = bounded
+mailboxes.  (A JSQ-style *load-aware* router would read those counters
+before choosing the expert — the same fix §5 of the paper asks for; the
+top-k router is "affinity routing" with backpressure.)
+
+Block shapes: logits block (block_n, E) with E padded to the 128-lane
+boundary by the wrapper; counters (1, E) int32 scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gating_kernel(
+    logits_ref,  # [block_n, E]
+    idx_ref,     # out [block_n, K] int32
+    gate_ref,    # out [block_n, K] f32
+    pos_ref,     # out [block_n, K] int32
+    keep_ref,    # out [block_n, K] int32 (bool as int)
+    counts_ref,  # scratch [1, E] int32 — running per-expert fill
+    *,
+    top_k: int,
+    capacity: int,
+    num_experts: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = logits_ref[...].astype(jnp.float32)  # [bn, E]
+    # softmax (masked lanes were set to -inf by the wrapper)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    ex = jnp.exp(x - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+    bn = probs.shape[0]
+    counts = counts_ref[0, :]  # [E]
+    remaining = probs
+    gate_cols = []
+    idx_cols = []
+    pos_cols = []
+    keep_cols = []
+    for kk in range(top_k):  # top_k is 1 or 2 for all assigned archs
+        g = jnp.max(remaining, axis=-1)  # [bn]
+        a = jnp.argmax(remaining, axis=-1).astype(jnp.int32)  # [bn]
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, (bn, num_experts), 1)
+            == a[:, None]
+        )
+        # FCFS position: running count + # of same-expert choices above me
+        # in this block (token order), computed with a prefix sum.
+        within = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - onehot
+        pos = counts[None, :] + within  # [bn, E]
+        my_pos = jnp.sum(jnp.where(onehot, pos, 0), axis=-1)  # [bn]
+        counts = counts + jnp.sum(onehot.astype(jnp.int32), axis=0)
+        gate_cols.append(g)
+        idx_cols.append(a)
+        pos_cols.append(my_pos)
+        keep_cols.append((my_pos < capacity).astype(jnp.int32))
+        remaining = jnp.where(onehot, -jnp.inf, remaining)
+
+    counts_ref[0, :] = counts
+    gates = jnp.stack(gate_cols, axis=1)  # [bn, K]
+    denom = jnp.clip(jnp.sum(gates, axis=1, keepdims=True), 1e-9)
+    gate_ref[...] = (gates / denom).astype(gate_ref.dtype)
+    idx_ref[...] = jnp.stack(idx_cols, axis=1)
+    pos_ref[...] = jnp.stack(pos_cols, axis=1)
+    keep_ref[...] = jnp.stack(keep_cols, axis=1)
+
+
+def moe_gating_fwd(
+    logits: jax.Array,  # [N, E]
+    top_k: int,
+    capacity: int,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    n, e = logits.shape
+    assert n % block_n == 0, (n, block_n)
+
+    kernel = functools.partial(
+        _gating_kernel, top_k=top_k, capacity=capacity, num_experts=e
+    )
+    idx, gate, pos, keep = pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_n, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, top_k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((n, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((n, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((n, top_k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, e), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return idx, gate, pos, keep.astype(bool)

@@ -1,0 +1,53 @@
+"""Oracle for the fused MoE gating kernel.
+
+Given router logits, produce for each token's top-k choices:
+  expert index, gate weight (renormalized over top-k),
+  position within the expert's capacity buffer, keep flag.
+
+Capacity contract (matches the kernel): within each block of ``block_n``
+tokens, **choice-rank-major FCFS** — rank-0 (primary) choices claim
+capacity before any rank-1 choice; blocks are processed in order with the
+per-expert counters carried across.  Under contention this drops
+secondary routes first (Switch-Transformer style): a token keeps its
+primary expert as long as possible.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gating_ref(
+    logits: jax.Array,  # [N, E] router logits
+    top_k: int,
+    capacity: int,
+    block_n: int = 256,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    n, e = logits.shape
+    block_n = min(block_n, n)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)  # [N, k]
+    gates = gates / jnp.clip(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((e,), dtype=jnp.int32)
+    pos = jnp.zeros((n, top_k), dtype=jnp.int32)
+    for start in range(0, n, block_n):  # block-sequential, as on TPU
+        for kk in range(top_k):  # rank-major within the block
+            blk_idx = idx[start : start + block_n, kk]
+            onehot = jax.nn.one_hot(blk_idx, e, dtype=jnp.int32)  # [bn, E]
+            within = jnp.cumsum(onehot, axis=0) - onehot
+            p = counts[None, :] + within
+            pos = pos.at[start : start + block_n, kk].set(
+                jnp.sum(p * onehot, axis=-1)
+            )
+            counts = counts + jnp.sum(onehot, axis=0)
+    keep = pos < capacity
+    return (
+        idx.astype(jnp.int32),
+        gates.astype(jnp.float32),
+        pos.astype(jnp.int32),
+        keep,
+    )

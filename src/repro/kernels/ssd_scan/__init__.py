@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_chunked
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_sequential_ref

@@ -1,0 +1,122 @@
+"""Mamba-2 SSD chunked scan kernel (TPU Pallas).
+
+One grid step = one (batch, head, chunk) cell.  The chunk axis is the
+innermost grid dimension, so for a fixed (b, h) the TPU executes chunks
+sequentially and the SSM state [N, P] lives in VMEM scratch across grid
+steps — the inter-chunk linear recurrence costs nothing extra, while the
+intra-chunk compute is three MXU matmuls:
+
+    att   = tril(C B^T * decay)        [Q x Q]
+    y     = att @ x  +  (C * in_decay) @ S_prev
+    S_new = chunk_decay * S_prev + (B * end_decay)^T @ x
+
+VMEM per step (Q=chunk, N=d_state, P=head_dim, fp32 accum):
+Q*(2N+P)*2 in + Q*P out + N*P state + Q*Q scratch ~ 1 MB at
+Q=128, N=128, P=64 — MXU-aligned and far under budget.
+
+The GPU implementation in the Mamba-2 paper leans on warp-level
+reductions for the segsum; on TPU the cumulative-sum over a 128-long
+chunk vectorizes on the VPU and the rest is systolic matmuls — the
+insight (chunked state-passing duality) transfers, the mechanism changes
+(DESIGN.md hardware-adaptation notes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,   # [1, Q, 1, P]
+    a_ref,   # [1, Q, 1]
+    b_ref,   # [1, Q, N]
+    c_ref,   # [1, Q, N]
+    y_ref,   # out [1, Q, 1, P]
+    s_out_ref,  # out [1, 1, N, P] final state per (b,h)
+    state_ref,  # scratch [N, P] f32
+    *,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [Q, P]
+    a = a_ref[0, :, 0].astype(jnp.float32)     # [Q]
+    B = b_ref[0, :, :].astype(jnp.float32)     # [Q, N]
+    C = c_ref[0, :, :].astype(jnp.float32)     # [Q, N]
+    q = x.shape[0]
+
+    log_a = jnp.log(jnp.maximum(a, 1e-20))
+    cum = jnp.cumsum(log_a)  # [Q] inclusive
+
+    # intra-chunk: att[t, s] = (C_t . B_s) * exp(cum_t - cum_s), s <= t
+    rel = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    )
+    decay = jnp.exp(jnp.where(tri, rel, -jnp.inf))
+    att = jnp.dot(C, B.T) * decay  # [Q, Q] (MXU)
+    y = jnp.dot(att, x)  # [Q, P] (MXU)
+
+    # inter-chunk: y += (C * exp(cum)) @ S_prev
+    s_prev = state_ref[...]
+    in_decay = jnp.exp(cum)[:, None]  # [Q, 1]
+    y = y + jnp.dot(C * in_decay, s_prev)  # [Q,N]x[N,P] (MXU)
+
+    # state update: S = exp(cum_Q) * S_prev + (B * exp(cum_Q - cum))^T @ x
+    end_decay = jnp.exp(cum[-1] - cum)[:, None]  # [Q, 1]
+    s_new = jnp.exp(cum[-1]) * s_prev + jnp.dot((B * end_decay).T, x)
+    state_ref[...] = s_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _emit_state():
+        s_out_ref[0, 0, :, :] = s_new.astype(s_out_ref.dtype)
+
+
+def ssd_chunked_fwd(
+    x: jax.Array,  # [B, T, H, P] (dt-scaled input)
+    a: jax.Array,  # [B, T, H] decay
+    B: jax.Array,  # [B, T, N]
+    C: jax.Array,  # [B, T, N]
+    chunk: int,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, t, h, p = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc)
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ic: (b_, ic, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, ic: (b_, ic, h_)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ic: (b_, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ic: (b_, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ic: (b_, ic, h_, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, a, B, C)
+    return y, final_state

@@ -1,0 +1,5 @@
+"""Oracles for the SSD chunked-scan kernel: re-export the model-layer
+chunked implementation (structural reference) and the O(T) sequential
+scan (ground truth)."""
+
+from repro.models.mamba2 import ssd_chunked_ref, ssd_sequential_ref  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.kernels.tcmm_assign.ops import tcmm_assign
+from repro.kernels.tcmm_assign.ref import tcmm_assign_ref

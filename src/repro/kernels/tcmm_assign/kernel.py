@@ -1,0 +1,81 @@
+"""TCMM nearest-micro-cluster assignment kernel (TPU Pallas).
+
+The paper's own compute hot spot: "TCMM algorithm searches through the
+micro-clusters for the nearest one to input data. The micro-clusters size
+grows over time and decelerates the micro-clustering" (§4.4.1).  The
+search is a dense distance computation — on TPU that is one MXU matmul
+per point block:
+
+    d2 = |p|^2 - 2 p C^T + |c|^2
+
+Grid = (N / block_n,).  The centroid table (M x F, M <= 1024, small F)
+fits VMEM whole and is re-used by every block — the classic
+stream-the-points / pin-the-table schedule.  Invalid (not-yet-allocated)
+micro-cluster rows are masked to +inf before the argmin.
+
+The wrapper pads F to the 128-lane boundary; padding contributes zeros to
+both |.|^2 terms and the cross term, so distances are unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(
+    points_ref,     # [block_n, F]
+    centroids_ref,  # [M, F]
+    valid_ref,      # [1, M] int32
+    idx_ref,        # out [block_n] i32  (as [block_n, 1])
+    dist_ref,       # out [block_n] f32  (as [block_n, 1])
+):
+    p = points_ref[...].astype(jnp.float32)       # [bn, F]
+    c = centroids_ref[...].astype(jnp.float32)    # [M, F]
+    valid = valid_ref[0, :] > 0                   # [M]
+
+    cross = jnp.dot(p, c.T)  # [bn, M] (MXU)
+    d2 = (
+        jnp.sum(p * p, axis=1, keepdims=True)
+        - 2.0 * cross
+        + jnp.sum(c * c, axis=1)[None, :]
+    )
+    d2 = jnp.where(valid[None, :], d2, jnp.inf)
+    idx_ref[:, 0] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[:, 0] = jnp.min(d2, axis=1)
+
+
+def tcmm_assign_fwd(
+    points: jax.Array,     # [N, F]
+    centroids: jax.Array,  # [M, F]
+    valid: jax.Array,      # [M] bool
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    n, f = points.shape
+    m = centroids.shape[0]
+    assert n % block_n == 0, (n, block_n)
+
+    idx, dist = pl.pallas_call(
+        _assign_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((m, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(points, centroids, valid.astype(jnp.int32)[None, :])
+    return idx[:, 0], dist[:, 0]

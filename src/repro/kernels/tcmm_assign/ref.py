@@ -1,0 +1,27 @@
+"""Oracle for the TCMM nearest-micro-cluster assignment kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tcmm_assign_ref(
+    points: jax.Array,     # [N, F]
+    centroids: jax.Array,  # [M, F]
+    valid: jax.Array,      # [M] bool — live micro-clusters
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (nearest index [N] i32, squared distance [N] f32)."""
+    p = points.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    d2 = (
+        jnp.sum(p * p, axis=1, keepdims=True)
+        - 2.0 * p @ c.T
+        + jnp.sum(c * c, axis=1)[None, :]
+    )  # [N, M]
+    d2 = jnp.where(valid[None, :], d2, jnp.inf)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0]
+    return idx, best

@@ -1,0 +1,126 @@
+"""Simulated multi-node cluster launcher with real process supervision.
+
+Runs training workers as OS processes and supervises them the way the
+paper's supervision service supervises components: each worker heartbeats
+to a file; the supervisor polls, detects silence (crash OR hang — both
+look identical from outside, which is the point of Let-It-Crash), kills
+whatever is left, and relaunches with ``--resume`` so the worker rebuilds
+its state from the event-sourced checkpoint.
+
+This is the failure drill behind ``examples/failure_drill.py``: it
+proves checkpoint/restart works at the *process* level, not just as an
+in-memory API.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class WorkerSpec:
+    args: List[str]                  # argv after `python -m repro.launch.train`
+    heartbeat_file: str
+    name: str = "worker-0"
+
+
+@dataclass
+class SupervisionEvent:
+    time: float
+    kind: str    # started | suspected | restarted | finished | gave_up
+    worker: str
+    detail: str = ""
+
+
+class ProcessSupervisor:
+    """One-for-one supervisor over training worker processes."""
+
+    def __init__(
+        self,
+        spec: WorkerSpec,
+        heartbeat_timeout: float = 30.0,
+        poll_interval: float = 0.5,
+        max_restarts: int = 5,
+        python: Optional[str] = None,
+    ) -> None:
+        self.spec = spec
+        self.heartbeat_timeout = heartbeat_timeout
+        self.poll_interval = poll_interval
+        self.max_restarts = max_restarts
+        self.python = python or sys.executable
+        self.events: List[SupervisionEvent] = []
+        self.restarts = 0
+        self.proc: Optional[subprocess.Popen] = None
+
+    def _launch(self, resume: bool) -> None:
+        argv = [self.python, "-m", "repro.launch.train", *self.spec.args,
+                "--heartbeat-file", self.spec.heartbeat_file]
+        if resume:
+            argv.append("--resume")
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", "src")
+        self.proc = subprocess.Popen(argv, env=env)
+        self.events.append(
+            SupervisionEvent(time.time(), "started", self.spec.name,
+                             f"pid={self.proc.pid} resume={resume}")
+        )
+
+    def _beat_age(self) -> float:
+        try:
+            return time.time() - os.path.getmtime(self.spec.heartbeat_file)
+        except OSError:
+            return float("inf")
+
+    def run(self, total_timeout: float = 600.0) -> int:
+        """Supervise until the worker exits 0 or we give up.
+        Returns the final exit code (0 on success)."""
+        self._launch(resume=False)
+        deadline = time.time() + total_timeout
+        launched_at = time.time()
+        while time.time() < deadline:
+            code = self.proc.poll()
+            if code == 0:
+                self.events.append(
+                    SupervisionEvent(time.time(), "finished", self.spec.name)
+                )
+                return 0
+            crashed = code is not None
+            silent = (
+                self._beat_age() > self.heartbeat_timeout
+                and time.time() - launched_at > self.heartbeat_timeout
+            )
+            if crashed or silent:
+                why = f"exit={code}" if crashed else "heartbeat silent"
+                self.events.append(
+                    SupervisionEvent(time.time(), "suspected", self.spec.name, why)
+                )
+                if not crashed:
+                    # hung: kill the specific pid (never pkill -f)
+                    try:
+                        self.proc.send_signal(signal.SIGKILL)
+                        self.proc.wait(timeout=10)
+                    except Exception:
+                        pass
+                if self.restarts >= self.max_restarts:
+                    self.events.append(
+                        SupervisionEvent(time.time(), "gave_up", self.spec.name)
+                    )
+                    return 1
+                self.restarts += 1
+                self._launch(resume=True)  # Let-It-Crash: rebuild from journal
+                launched_at = time.time()
+                self.events.append(
+                    SupervisionEvent(time.time(), "restarted", self.spec.name,
+                                     f"restart #{self.restarts}")
+                )
+            time.sleep(self.poll_interval)
+        # timed out
+        if self.proc.poll() is None:
+            self.proc.send_signal(signal.SIGKILL)
+        return 2

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init;
+tests run on 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: 16x16 = 256 chips ("data", "model").
+    Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the pod axis
+    is pure DP (gradient all-reduce crosses the inter-pod DCI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int = 8) -> jax.sharding.Mesh:
+    """Small host-platform mesh for CI-scale sharding tests (data x model)."""
+    d = min(devices, len(jax.devices()))
+    model = 2 if d % 2 == 0 else 1
+    return jax.make_mesh((d // model, model), ("data", "model"))

@@ -1,0 +1,186 @@
+"""End-to-end training driver on the Reactive Liquid runtime.
+
+Wires every layer together (deliverable b's end-to-end example):
+
+  token topic -> virtual consumer group -> assembly queues   [paper's core]
+    -> train_step (jit, sharded if a mesh is configured)
+      -> event-sourced checkpoints (snapshot + per-step journal)
+        -> CRDT metrics replica -> hub
+          -> supervision heartbeat file (cluster.py restarts us if silent)
+
+Crash-and-resume is exact: the checkpoint carries the pipeline state
+(offsets + in-flight messages), so a Let-It-Crash restart continues the
+stream without skipping or re-training a single batch.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 50
+  ... --resume --checkpoint-dir /tmp/ckpt     # resume after a crash
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.config import TrainingConfig, get_arch
+from repro.data.pipeline import PipelineConfig, TokenPipeline, build_token_log
+from repro.models.zoo import build_model
+from repro.telemetry.metrics import MetricsHub, MetricsReplica
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def heartbeat(path: Optional[str], step: int) -> None:
+    """Touch the heartbeat file the supervisor (cluster.py) watches."""
+    if path:
+        with open(path, "w") as fh:
+            fh.write(f"{step} {time.time()}\n")
+
+
+def build_pipeline(args, vocab_size: int) -> TokenPipeline:
+    log = build_token_log(
+        vocab_size=vocab_size,
+        num_docs=args.num_docs,
+        doc_len=args.seq_len + 1,
+        partitions=args.partitions,
+        seed=args.data_seed,
+    )
+    return TokenPipeline(
+        log,
+        PipelineConfig(
+            partitions=args.partitions,
+            num_queues=args.queues,
+            batch_size=args.batch_size,
+            seq_len=args.seq_len,
+            scheduler=args.scheduler,
+        ),
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full-size", action="store_true",
+                    help="full config (default: smoke config, CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--partitions", type=int, default=3)
+    ap.add_argument("--queues", type=int, default=8)
+    ap.add_argument("--num-docs", type=int, default=4096)
+    ap.add_argument("--scheduler", default="jsq")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="cosine")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--heartbeat-file", default=None)
+    ap.add_argument("--crash-at-step", type=int, default=0,
+                    help="failure drill: hard-exit at this step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch, smoke=not args.full_size)
+    tcfg = TrainingConfig(
+        learning_rate=args.lr,
+        schedule=args.schedule,
+        warmup_steps=max(args.steps // 10, 1),
+        decay_steps=args.steps,
+        stable_steps=max(args.steps // 2, 1),
+        microbatch_size=args.microbatch,
+        grad_compression=args.grad_compression,
+    )
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    pipeline = build_pipeline(args, cfg.vocab_size)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+
+    hub = MetricsHub()
+    metrics_replica = MetricsReplica(f"trainer-{os.getpid()}")
+
+    store = CheckpointStore(args.checkpoint_dir) if args.checkpoint_dir else None
+    state = None
+    start_step = 0
+    if args.resume and store is not None:
+        template = jax.eval_shape(
+            lambda r: init_train_state(model, tcfg, r), jax.random.PRNGKey(args.seed)
+        )
+        template = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+        restored = store.restore_latest(template)
+        if restored is not None:
+            state, meta, events = restored
+            start_step = meta["step"]
+            # replay journal suffix: the newest stream position wins
+            pipe_state = meta.get("pipeline")
+            if pipe_state:
+                pipeline.load_state_dict(pipe_state)
+            for ev in events:
+                start_step = max(start_step, ev.data["step"])
+            offs = store.latest_offsets()
+            if offs and not pipe_state:
+                pipeline.restore_offsets(offs)
+            print(f"[resume] restored step={start_step} "
+                  f"offsets={pipeline.offsets()}", flush=True)
+    if state is None:
+        state = init_train_state(model, tcfg, jax.random.PRNGKey(args.seed))
+
+    losses = []
+    t0 = time.time()
+    step = start_step
+    while step < args.steps:
+        batch = pipeline.next_batch()
+        if batch is None:
+            print("[train] stream exhausted", flush=True)
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, m = step_fn(state, jb)
+        step = int(state.opt.step)
+        loss = float(m["loss"])
+        losses.append(loss)
+        metrics_replica.incr("steps")
+        metrics_replica.incr("tokens", args.batch_size * args.seq_len)
+        metrics_replica.gauge("loss", loss, timestamp=time.time())
+        heartbeat(args.heartbeat_file, step)
+        if store is not None:
+            store.record_step(step, offsets=pipeline.offsets(),
+                              metrics={"loss": loss})
+            if step % args.checkpoint_every == 0:
+                store.save(state, step=step,
+                           extra={"pipeline": pipeline.state_dict()})
+        if step % args.log_every == 0 or step == args.steps:
+            hub.ingest(metrics_replica)
+            print(json.dumps({
+                "step": step, "loss": round(loss, 4),
+                "lr": round(float(m["lr"]), 6),
+                "grad_norm": round(float(m["grad_norm"]), 3),
+                "tokens": hub.counter("tokens"),
+                "wall_s": round(time.time() - t0, 1),
+            }), flush=True)
+        if args.crash_at_step and step == args.crash_at_step:
+            print(f"[drill] hard crash at step {step}", flush=True)
+            os._exit(42)  # no cleanup — Let-It-Crash
+
+    if store is not None:
+        store.save(state, step=step, extra={"pipeline": pipeline.state_dict()})
+    hub.ingest(metrics_replica)
+    print(json.dumps({
+        "final_step": step,
+        "final_loss": losses[-1] if losses else None,
+        "first_loss": losses[0] if losses else None,
+        "tokens": hub.counter("tokens"),
+    }), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,402 @@
+"""Core layer library: RMSNorm, RoPE, GQA attention (full / sliding /
+cross, with KV cache), SwiGLU MLP, embeddings.
+
+Pure functions over param pytrees.  Activations are annotated with
+*logical* axis names via ``repro.distributed.shard`` — no-ops on a single
+device, resolved to physical mesh axes by the launcher's rule set.
+
+Dtype policy: params are created in ``param_dtype``; compute runs in
+``compute_dtype`` (bf16 on TPU); softmax/normalization statistics and the
+final logits are fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig, AttentionKind, LayerSpec
+from repro.distributed.sharding import shard
+
+Params = Dict[str, Any]
+
+# Attention implementation selector: "dense" materializes the [T, S]
+# score matrix (baseline); "blockwise" runs the flash-attention online-
+# softmax recurrence over KV blocks in pure jnp — same math as the
+# Pallas kernel, O(block) score residency instead of O(S). Selected per
+# run (the §Perf prefill cells are score-memory-bound at 32k).
+import contextvars
+from contextlib import contextmanager
+
+_attn_impl = contextvars.ContextVar("attention_impl", default="dense")
+_attn_block = contextvars.ContextVar("attention_block", default=2048)
+
+
+@contextmanager
+def attention_implementation(name: str, block: int = 2048):
+    if name not in ("dense", "blockwise"):
+        raise ValueError(f"unknown attention impl {name!r}")
+    t1 = _attn_impl.set(name)
+    t2 = _attn_block.set(block)
+    try:
+        yield
+    finally:
+        _attn_impl.reset(t1)
+        _attn_block.reset(t2)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng: jax.Array, shape: Tuple[int, ...], dtype, fan_in: int) -> jax.Array:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float, head_dim: int
+) -> jax.Array:
+    """Rotary embedding. x: [B, T, H, D], positions: [B, T]."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,T,half]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B,T,1,half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h, hd), dtype, d),
+        "wk": dense_init(ks[1], (d, hkv, hd), dtype, d),
+        "wv": dense_init(ks[2], (d, hkv, hd), dtype, d),
+        "wo": dense_init(ks[3], (h, hd, d), dtype, h * hd),
+    }
+
+
+def _attn_weights_mask(
+    q_pos: jax.Array,  # [B, Tq]
+    kv_pos: jax.Array,  # [B, Tkv]
+    window: int,
+    causal: bool,
+) -> jax.Array:
+    """[B, 1, Tq, Tkv] boolean mask (True = attend)."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    ok = jnp.ones(q.shape[:1] + (q.shape[1], k.shape[2]), dtype=bool)
+    if causal:
+        ok = ok & (k <= q)
+    if window > 0:
+        ok = ok & (k > q - window)
+    return ok[:, None, :, :]
+
+
+def attention(
+    params: Params,
+    x: jax.Array,  # [B, Tq, D]
+    positions: jax.Array,  # [B, Tq]
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    cache: Optional[Params] = None,  # {"k","v": [B, Tkv, Hkv, hd], "pos": [B]}
+    kv_x: Optional[jax.Array] = None,  # cross-attention source [B, Tkv, D]
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """GQA attention with optional sliding window, KV cache, cross-attn.
+
+    Returns (output [B,Tq,D], updated cache or None).
+    """
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    groups = h // hkv
+    b, tq, _ = x.shape
+    cross = spec.attention == AttentionKind.CROSS and kv_x is not None
+
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    q = shard(q, "batch", "seq_inner", "heads", "head_dim")
+    src = kv_x if cross else x
+    k = jnp.einsum("btd,dhk->bthk", src, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, params["wv"])
+    k = shard(k, "batch", "seq_inner", "kv_heads", "kv_head_dim")
+    v = shard(v, "batch", "seq_inner", "kv_heads", "kv_head_dim")
+
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta, hd)
+        k = rope(k, positions, cfg.rope_theta, hd)
+
+    new_cache: Optional[Params] = None
+    if cache is not None and not cross and "slot_pos" in cache:
+        # Ring-buffer cache (sliding-window layers): W slots, token at
+        # absolute position p lives in slot p % W; slot_pos records each
+        # slot's absolute position (-1 = never written). The window mask
+        # runs on absolute positions, so eviction is implicit.
+        #
+        # Attention reads concat(ring-before-write, current chunk): the
+        # chunk's own K/V must be visible to in-chunk queries (a long
+        # prefill overwrites the ring several times, but queries need the
+        # in-chunk context regardless), and the pre-write ring holds the
+        # previous chunk's tail for the cross-chunk window.
+        prev_k, prev_v = cache["k"], cache["v"]
+        slot_pos, cache_pos = cache["slot_pos"], cache["pos"]
+        w = prev_k.shape[1]
+
+        attn_k = jnp.concatenate([prev_k, k], axis=1)
+        attn_v = jnp.concatenate([prev_v, v], axis=1)
+        chunk_pos = cache_pos[:, None] + jnp.arange(tq, dtype=jnp.int32)[None, :]
+        kv_pos = jnp.concatenate([slot_pos, chunk_pos], axis=1)
+        valid = kv_pos >= 0
+
+        # Write the chunk's newest W tokens into the ring (slice first so
+        # scatter indices stay unique — duplicate-index order is
+        # unspecified).
+        k_w, v_w = (k[:, -w:], v[:, -w:]) if tq >= w else (k, v)
+        n_w = k_w.shape[1]
+        off = tq - n_w
+
+        def ring_write(ck, cv, sp, kk, vv, st):
+            abs_pos = st + off + jnp.arange(n_w)
+            slots = abs_pos % w
+            return (
+                ck.at[slots].set(kk),
+                cv.at[slots].set(vv),
+                sp.at[slots].set(abs_pos),
+            )
+
+        new_k, new_v, new_slot_pos = jax.vmap(ring_write)(
+            prev_k, prev_v, slot_pos, k_w, v_w, cache_pos
+        )
+        new_cache = {"k": new_k, "v": new_v, "slot_pos": new_slot_pos,
+                     "pos": cache_pos + tq}
+        k, v = attn_k, attn_v
+    elif cache is not None and not cross:
+        # Decode / incremental: write new K,V at each row's own position
+        # (continuous batching makes positions ragged across the batch).
+        cache_k, cache_v, cache_pos = cache["k"], cache["v"], cache["pos"]
+        row_update = jax.vmap(
+            lambda ck, kk, st: jax.lax.dynamic_update_slice(ck, kk, (st, 0, 0))
+        )
+        cache_k = row_update(cache_k, k, cache_pos)
+        cache_v = row_update(cache_v, v, cache_pos)
+        new_cache = {"k": cache_k, "v": cache_v, "pos": cache_pos + tq}
+        k, v = cache_k, cache_v
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=positions.dtype)[None, :], (b, k.shape[1])
+        )
+        valid = kv_pos < (cache_pos[:, None] + tq)
+    elif cross:
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=positions.dtype)[None, :], (b, k.shape[1])
+        )
+        valid = jnp.ones_like(kv_pos, dtype=bool)
+    else:
+        kv_pos = positions
+        valid = jnp.ones_like(kv_pos, dtype=bool)
+
+    causal = not cross
+    window = spec.window if spec.attention == AttentionKind.SLIDING else 0
+
+    # [B, Tq, G*Hkv, hd] -> grouped [B, Tq, Hkv, G, hd].
+    qg = q.reshape(b, tq, hkv, groups, hd)
+    block = _attn_block.get()
+    if _attn_impl.get() == "blockwise" and k.shape[1] > block:
+        out = _blockwise_attention(
+            qg, k, v, positions, kv_pos, valid, cfg, window, causal, block
+        )
+    else:
+        out = _dense_attention(
+            qg, k, v, positions, kv_pos, valid, cfg, window, causal
+        )
+    out = out.reshape(b, tq, h, hd)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return shard(y, "batch", "seq_inner", "embed"), new_cache
+
+
+def _dense_attention(qg, k, v, positions, kv_pos, valid, cfg, window, causal):
+    """Materializes the [Tq, S] scores — fine for short S.
+
+    bf16 operands + f32 accumulation (MXU semantics). Upcasting the
+    operands instead (astype f32) materializes an f32 copy of the whole
+    KV cache — on the sharded decode path GSPMD then all-gathered ~1 TB
+    of f32 cache per layer (§Perf cell B iteration 3)."""
+    b, tq, hkv, groups, hd = qg.shape
+    logits = jnp.einsum(
+        "bthgk,bshk->bhgts", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    mask = _attn_weights_mask(positions, kv_pos, window, causal)  # [B,1,Tq,Tkv]
+    mask = mask & valid[:, None, None, :]
+    mask = mask[:, :, None, :, :]  # [B,1,1,Tq,Tkv] broadcasting over (hkv, g)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bhgts,bshk->bthgk", probs, v, preferred_element_type=jnp.float32
+    ).astype(v.dtype)
+    return out
+
+
+def _blockwise_attention(qg, k, v, positions, kv_pos, valid, cfg, window,
+                         causal, block):
+    """Online-softmax over KV blocks (flash recurrence, pure jnp).
+
+    Score residency drops from O(Tq*S) to O(Tq*block) — at 32k prefill
+    the dense scores were the dominant HBM term (§Perf cell A iteration
+    4). Same math as kernels/flash_attention, expressed as a lax.scan so
+    the dry-run measures its real memory profile."""
+    b, tq, hkv, groups, hd = qg.shape
+    s = k.shape[1]
+    pad = (-s) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))  # False padding
+    nb = k.shape[1] // block
+    kb = k.reshape(b, nb, block, hkv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, block, hkv, hd).swapaxes(0, 1)
+    pb = kv_pos.reshape(b, nb, block).swapaxes(0, 1)
+    mb = valid.reshape(b, nb, block).swapaxes(0, 1)
+
+    m0 = jnp.full((b, hkv, groups, tq), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hkv, groups, tq), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, tq, hkv, groups, hd), dtype=jnp.float32)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, pc, mc = inp  # [b, block, hkv, hd], ..., [b, block]
+        s_blk = jnp.einsum(
+            "bthgk,bshk->bhgts", qg, kc, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
+        if cfg.logit_softcap > 0:
+            s_blk = cfg.logit_softcap * jnp.tanh(s_blk / cfg.logit_softcap)
+        mask = _attn_weights_mask(positions, pc, window, causal)
+        mask = (mask & mc[:, None, None, :])[:, :, None, :, :]
+        s_blk = jnp.where(mask, s_blk, -1e30)
+        m_cur = jnp.maximum(m_prev, jnp.max(s_blk, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s_blk - m_cur[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhgts,bshk->bthgk", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_cur, l_new, acc_new), None
+
+    (m_f, l_f, acc_f), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb, mb))
+    denom = jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (acc_f / denom).astype(v.dtype)
+
+
+def init_attention_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype, ring_window: int = 0
+) -> Params:
+    """ring_window > 0: W-slot ring buffer for a sliding-window layer
+    (W >= window); otherwise a full-length linear cache."""
+    hd = cfg.resolved_head_dim
+    size = min(ring_window, max_len) if ring_window > 0 else max_len
+    cache = {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype=dtype),
+        "pos": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+    if ring_window > 0 and size < max_len:
+        cache["slot_pos"] = jnp.full((batch, size), -1, dtype=jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dtype, d),
+        "w_up": dense_init(ks[1], (d, ff), dtype, d),
+        "w_down": dense_init(ks[2], (ff, d), dtype, ff),
+    }
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("btd,df->btf", x, params["w_gate"])
+    up = jnp.einsum("btd,df->btf", x, params["w_up"])
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "batch", "seq_inner", "ffn")
+    return jnp.einsum("btf,fd->btd", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(rng: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    p = {"tok": embed_init(rng, (cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(
+            jax.random.fold_in(rng, 1), (cfg.d_model, cfg.vocab_size), dtype
+        )
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)  # gemma-style scaling for tied embeds
+    return shard(x, "batch", "seq", "embed")
+
+
+def unembed(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    # native-dtype operands, f32 accumulation: upcasting the embedding
+    # table would materialize an f32 copy of the largest matrix in the
+    # model (gemma3: 262k x 2560).
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "btd,vd->btv", x, params["tok"], preferred_element_type=jnp.float32
+        )
+    else:
+        logits = jnp.einsum(
+            "btd,dv->btv", x, params["unembed"],
+            preferred_element_type=jnp.float32,
+        )
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "batch", "seq", "vocab")

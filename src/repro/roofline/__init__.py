@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+)

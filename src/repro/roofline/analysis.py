@@ -1,0 +1,252 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+Sources: ``compiled.cost_analysis()`` provides per-chip FLOPs and bytes
+(the compiled executable is the per-device SPMD program, so its counters
+are already per-chip — dividing global numbers by chip count and reading
+per-chip counters are the same thing).  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO and sum the **result shapes**
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (post-GSPMD shapes are per-partition, i.e. already
+per-chip).  Result-shape bytes is the standard first-order proxy for
+wire bytes; ring-algorithm factors (2(n-1)/n for all-reduce etc.) are
+noted in EXPERIMENTS.md where they matter.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment's constants).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    link_bw: float = 50e9            # bytes/s per ICI link
+    # Cross-pod (DCI) bandwidth per chip for the pod-axis collectives —
+    # an order of magnitude below ICI; used for the multi-pod analysis.
+    dci_bw: float = 6.25e9
+    hbm_per_chip: float = 16e9       # bytes (v5e HBM capacity)
+
+
+HW_V5E = HardwareSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes from (post-SPMD) HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-side only: "%name = TYPE[SHAPE] op-name(...)"
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", s)
+        if not m:
+            continue
+        result_part, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue  # async pair: count the -start side only
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVE_OPS:
+            continue
+        total = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_part)
+        )
+        out[op] = out.get(op, 0) + total
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: int
+    collective_breakdown: Dict[str, int]
+    model_flops_global: float        # 6*N*D (dense) or 6*N_active*D (MoE)
+    # Minimum bytes a perfect implementation must move per step (params +
+    # cache read once) — the decode-cell analogue of MODEL_FLOPS.
+    model_bytes_global: float = 0.0
+    peak_memory_per_chip: Optional[float] = None
+    hw: HardwareSpec = field(default_factory=lambda: HW_V5E)
+    notes: str = ""
+
+    # -- the three terms, in seconds ---------------------------------------
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / self.hw.link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — catches remat/redundancy."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops_global / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful work time / achievable step time — the score.
+
+        Useful time is compute-referenced (MODEL_FLOPS at peak) OR
+        memory-referenced (minimum model bytes at full HBM bw), whichever
+        is larger — training cells are scored as MFU-against-roofline,
+        decode cells as MBU-against-roofline, automatically."""
+        t_useful_flops = self.model_flops_global / (self.chips * self.hw.peak_flops)
+        t_useful_bytes = (
+            self.model_bytes_global / (self.chips * self.hw.hbm_bw)
+            if self.model_bytes_global
+            else 0.0
+        )
+        t_useful = max(t_useful_flops, t_useful_bytes)
+        return t_useful / self.bound_time if self.bound_time > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops_global": self.model_flops_global,
+            "model_bytes_global": self.model_bytes_global,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "notes": self.notes,
+        }
+
+
+def model_flops(param_count_active: int, tokens: int, kind: str) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D for inference forward."""
+    if kind == "train":
+        return 6.0 * param_count_active * tokens
+    return 2.0 * param_count_active * tokens
+
+
+def analyze_compiled(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    model_flops_global: float,
+    model_bytes_global: float = 0.0,
+    hw: HardwareSpec = HW_V5E,
+    notes: str = "",
+) -> RooflineReport:
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    # Loop-aware counters (cost_analysis counts while bodies ONCE — a
+    # 64-layer scan would be undercounted 64x; see hlo_cost.py).
+    parsed = analyze_hlo(hlo)
+    flops = float(parsed.flops)
+    nbytes = float(parsed.bytes)
+    coll = {k: int(v) for k, v in parsed.collective_breakdown.items()}
+    if flops == 0.0:  # parser found no dots: fall back to cost_analysis
+        flops = float(cost.get("flops", 0.0))
+    if nbytes == 0.0:
+        nbytes = float(cost.get("bytes accessed", 0.0))
+    if not coll:
+        coll = collective_bytes_from_hlo(hlo)
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak_mem = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)
+            )
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=nbytes,
+        collective_bytes_per_chip=sum(coll.values()),
+        collective_breakdown=coll,
+        model_flops_global=model_flops_global,
+        model_bytes_global=model_bytes_global,
+        peak_memory_per_chip=peak_mem,
+        hw=hw,
+        notes=notes,
+    )

@@ -1,0 +1,271 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count — a 64-layer scanned transformer reports ~1/64 of its real
+FLOPs (verified empirically; see EXPERIMENTS.md §Dry-run caveats). Since
+every model here scans its depth (that is what keeps 512-device compiles
+tractable), we compute roofline inputs ourselves from the optimized,
+post-SPMD HLO text:
+
+  * computations are parsed into blocks; call edges (while body/condition,
+    fusion ``calls=``, ``to_apply=``, conditional branches) form a DAG;
+  * while-loop trip counts are read from the largest integer constant in
+    the loop's condition computation (scan conditions are ``i < N``);
+  * FLOPs: 2*M*N*K per ``dot`` (shapes + contracting dims from the text),
+    multiplied up the call DAG;
+  * memory bytes: per top-level op line (result + operand shapes), for
+    computations that execute as kernels (fused computations count at
+    their call site's fusion line instead — fused intermediates never
+    touch HBM);
+  * collective bytes: result shapes of collective ops, times the call-DAG
+    multiplier (a psum inside a scanned layer really does run L times).
+
+Shapes are per-partition in post-SPMD HLO, so every number is per-chip.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z\-]+)(\(|\.)")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    # call edges: (callee, kind) where kind in {while_body, while_cond,
+    # fusion, apply, branch}
+    calls: List[Tuple[str, str, str]] = field(default_factory=list)  # (callee, kind, whileop)
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        m = _COMP_HEADER_RE.match(line)
+        if m and ("=" not in line.split("(")[0]):
+            cur = _Computation(m.group(1))
+            comps[cur.name] = cur
+            if raw.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        op = _Op(name=om.group(1), kind=om.group(3), line=line)
+        cur.ops.append(op)
+        # call edges
+        for key, kind in (("body=", "while_body"), ("condition=", "while_cond"),
+                          ("calls=", "fusion"), ("to_apply=", "apply")):
+            for cm in re.finditer(re.escape(key) + r"\{?%?([\w.\-]+)", line):
+                cur.calls.append((cm.group(1), kind, op.name))
+        for cm in re.finditer(
+            r"(?:true_computation|false_computation)=%?([\w.\-]+)", line
+        ):
+            cur.calls.append((cm.group(1), "branch", op.name))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if bm:
+            for name in bm.group(1).split(","):
+                cur.calls.append((name.strip().lstrip("%"), "branch", op.name))
+    return comps, entry
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Largest integer constant in the loop condition (scan: i < N)."""
+    best = 1
+    for op in cond.ops:
+        for cm in re.finditer(r"constant\((\d+)\)", op.line):
+            best = max(best, int(cm.group(1)))
+    return best
+
+
+def _operand_names(line: str, kind: str) -> List[str]:
+    m = re.search(re.escape(kind) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    return [
+        tok.strip().lstrip("%")
+        for tok in m.group(1).split(",")
+        if tok.strip().startswith("%")
+    ]
+
+
+def _dot_flops(line: str, symtab: Dict[str, Tuple[str, str]]) -> int:
+    """2*M*N*K: result elems from the line, K from the lhs operand's shape
+    (operands are referenced by name in optimized HLO — resolve via the
+    computation's symbol table)."""
+    shapes = _SHAPE_RE.findall(line)
+    if not shapes:
+        return 0
+    out_elems = _shape_elems(shapes[0][1])
+    operands = _operand_names(line, "dot")
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    k = 1
+    if cm and operands:
+        lhs = symtab.get(operands[0])
+        if lhs and lhs[1].strip():
+            lhs_dims = [int(x) for x in lhs[1].split(",")]
+            for idx in cm.group(1).split(","):
+                if idx.strip() and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+    return 2 * out_elems * k
+
+
+def _conv_flops(line: str, symtab: Dict[str, Tuple[str, str]]) -> int:
+    # rough: 2 * output elems * kernel elems / output-feature dim
+    shapes = _SHAPE_RE.findall(line)
+    if not shapes:
+        return 0
+    out_elems = _shape_elems(shapes[0][1])
+    operands = _operand_names(line, "convolution")
+    kernel_elems = 1
+    if len(operands) >= 2:
+        ker = symtab.get(operands[1])
+        if ker:
+            kernel_elems = _shape_elems(ker[1])
+    return 2 * out_elems * max(kernel_elems, 1)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    while_trip_counts: Dict[str, int] = field(default_factory=dict)
+
+    def merge_scaled(self, other: "HloCost", scale: float) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.collective_bytes += other.collective_bytes * scale
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = (
+                self.collective_breakdown.get(k, 0.0) + v * scale
+            )
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        return HloCost()
+
+    # computations invoked as fusions/applies execute inside their caller's
+    # kernel: their op lines contribute FLOPs but not memory traffic.
+    fused: Set[str] = set()
+    trip_of_while_body: Dict[str, int] = {}
+    for comp in comps.values():
+        cond_by_op: Dict[str, str] = {}
+        body_by_op: Dict[str, str] = {}
+        for callee, kind, opname in comp.calls:
+            if kind in ("fusion", "apply"):
+                fused.add(callee)
+            elif kind == "while_cond":
+                cond_by_op[opname] = callee
+            elif kind == "while_body":
+                body_by_op[opname] = callee
+        for opname, body in body_by_op.items():
+            cond = cond_by_op.get(opname)
+            trips = _trip_count(comps[cond]) if cond and cond in comps else 1
+            trip_of_while_body[body] = max(trips, 1)
+
+    raw: Dict[str, HloCost] = {}
+    for comp in comps.values():
+        c = HloCost()
+        symtab: Dict[str, Tuple[str, str]] = {}
+        for op in comp.ops:
+            shapes = _SHAPE_RE.findall(op.line)
+            if shapes:
+                symtab[op.name] = shapes[0]
+        for op in comp.ops:
+            if op.kind == "dot":
+                c.flops += _dot_flops(op.line, symtab)
+            elif op.kind == "convolution":
+                c.flops += _conv_flops(op.line, symtab)
+            base = op.kind
+            if base.endswith("-done"):
+                continue
+            if base.endswith("-start"):
+                base = base[: -len("-start")]
+            if base in _COLLECTIVES:
+                shapes = _SHAPE_RE.findall(op.line.split(base + "(")[0])
+                b = sum(_shape_bytes(d, dims) for d, dims in shapes)
+                c.collective_bytes += b
+                c.collective_breakdown[base] = (
+                    c.collective_breakdown.get(base, 0.0) + b
+                )
+            if comp.name not in fused and op.kind not in _FREE_OPS:
+                c.bytes += sum(
+                    _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(op.line)
+                )
+        raw[comp.name] = c
+
+    total = HloCost(while_trip_counts=dict(trip_of_while_body))
+    seen_stack: Set[str] = set()
+
+    def visit(name: str, mult: float) -> None:
+        if name not in comps or name in seen_stack or mult <= 0:
+            return
+        seen_stack.add(name)
+        total.merge_scaled(raw[name], mult)
+        for callee, kind, _ in comps[name].calls:
+            if kind == "while_body":
+                visit(callee, mult * trip_of_while_body.get(callee, 1))
+            elif kind == "while_cond":
+                visit(callee, mult)  # ~trips+1 evaluations of a tiny comp
+            else:
+                visit(callee, mult)
+        seen_stack.discard(name)
+
+    visit(entry, 1.0)
+    return total

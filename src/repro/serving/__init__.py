@@ -1,0 +1,2 @@
+from repro.serving.serve_step import make_prefill_step, make_decode_step
+from repro.serving.batcher import ContinuousBatcher, Request

@@ -1,0 +1,165 @@
+"""Continuous batching scheduler (reactive serving layer).
+
+Requests arrive in a mailbox (asynchronous messaging layer); the batcher
+holds a fixed-slot decode batch and, whenever a slot frees (EOS or
+max-new-tokens), admits the next request from the queue — the serving
+analogue of the elastic task pool: the queue depth is the scaling signal,
+slots are tasks, and the admission policy is the message-distribution
+scheduler (FCFS here; priority policies plug in the same way).
+
+Slot state lives in the shared KV cache; admission resets a slot's cache
+rows via the prefill path with the model's cache update at position 0.
+Shapes stay static (slots, max_len) so the decode step never recompiles —
+the elasticity is in *occupancy*, not in tensor shapes (TPU-friendly).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.messages import Mailbox, Message
+from repro.models.zoo import Model
+from repro.serving.serve_step import make_decode_step, make_prefill_step
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    req_id: int = field(default_factory=lambda: next(_req_ids))
+    # filled on completion
+    output: Optional[List[int]] = None
+    enqueued_at: float = 0.0
+    completed_at: float = 0.0
+
+
+class ContinuousBatcher:
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        slots: int = 4,
+        max_len: int = 128,
+        eos_token: int = -1,  # -1: run to max_new_tokens
+        temperature: float = 0.0,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.queue = Mailbox("serve-requests")
+        self.prefill_step = make_prefill_step(model)
+        self.decode_step = make_decode_step(model, temperature)
+        self.completed: List[Request] = []
+        # slot state
+        self.active: List[Optional[Request]] = [None] * slots
+        self.positions = np.zeros((slots,), dtype=np.int32)
+        self.budgets = np.zeros((slots,), dtype=np.int32)
+        self.cur_tokens = np.zeros((slots, 1), dtype=np.int32)
+        self.outputs: List[List[int]] = [[] for _ in range(slots)]
+        # one shared cache; slot b owns batch row b.  Per-slot prefill uses
+        # a single-row cache then writes the rows back.
+        self.cache = model.init_cache(slots, max_len)
+        self.rng = jax.random.PRNGKey(0)
+        self.steps = 0
+
+    # -- API --------------------------------------------------------------
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        req.enqueued_at = now
+        self.queue.put(Message(topic="serve", payload=req, created_at=now))
+
+    def queue_depth(self) -> int:
+        return self.queue.depth()
+
+    def occupancy(self) -> int:
+        return sum(1 for r in self.active if r is not None)
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self, slot: int, req: Request) -> None:
+        prompt = jnp.asarray(req.prompt, dtype=jnp.int32)[None, :]
+        row_cache = self.model.init_cache(1, self.max_len)
+        next_tok, row_cache = self.prefill_step(
+            self.params, {"tokens": prompt}, row_cache
+        )
+        # Write the prefilled row into the shared cache at index `slot`.
+        # Leaves under "periods" are stacked [n_periods, B, ...] (batch is
+        # axis 1); everything else leads with batch.
+        from jax.tree_util import DictKey, tree_map_with_path
+
+        def write_row(path, full, row):
+            in_periods = any(
+                isinstance(p, DictKey) and p.key == "periods" for p in path[:1]
+            )
+            if in_periods:
+                return full.at[:, slot].set(row[:, 0])
+            return full.at[slot].set(row[0])
+
+        self.cache = tree_map_with_path(write_row, self.cache, row_cache)
+        self.active[slot] = req
+        self.positions[slot] = len(req.prompt)
+        self.budgets[slot] = req.max_new_tokens - 1
+        self.cur_tokens[slot, 0] = int(next_tok[0])
+        self.outputs[slot] = [int(next_tok[0])]
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self.active[slot]
+        if req is not None:
+            req.output = list(self.outputs[slot])
+            req.completed_at = now
+            self.completed.append(req)
+        self.active[slot] = None
+        self.outputs[slot] = []
+        self.budgets[slot] = 0
+
+    def step(self, now: float = 0.0) -> int:
+        """Admit from queue, run one decode step for occupied slots."""
+        for slot in range(self.slots):
+            if self.active[slot] is None:
+                msg = self.queue.get()
+                if msg is None:
+                    break
+                self._admit(slot, msg.payload)
+
+        if self.occupancy() == 0:
+            return 0
+
+        tokens = jnp.asarray(self.cur_tokens)
+        positions = jnp.asarray(self.positions)
+        next_tok, self.cache, self.rng = self.decode_step(
+            self.params, tokens, self.cache, positions, self.rng
+        )
+        next_np = np.asarray(next_tok)
+        decoded = 0
+        for slot in range(self.slots):
+            if self.active[slot] is None:
+                continue
+            decoded += 1
+            tok = int(next_np[slot])
+            self.outputs[slot].append(tok)
+            self.positions[slot] += 1
+            self.budgets[slot] -= 1
+            self.cur_tokens[slot, 0] = tok
+            hit_eos = self.eos >= 0 and tok == self.eos
+            if self.budgets[slot] <= 0 or hit_eos or (
+                self.positions[slot] >= self.max_len - 1
+            ):
+                self._finish(slot, now)
+        self.steps += 1
+        return decoded
+
+    def run_until_drained(self, max_steps: int = 10_000, now: float = 0.0) -> int:
+        n = 0
+        for _ in range(max_steps):
+            if self.occupancy() == 0 and self.queue.depth() == 0:
+                break
+            n += self.step(now)
+        return n

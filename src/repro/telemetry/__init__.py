@@ -1,0 +1,1 @@
+from repro.telemetry.metrics import MetricsReplica, MetricsHub

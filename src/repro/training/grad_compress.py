@@ -1,0 +1,85 @@
+"""Gradient compression for the cross-pod (DCI) hop.
+
+At 2 pods the gradient all-reduce crosses the data-center interconnect,
+which is an order of magnitude slower than in-pod ICI — compressing that
+hop is the standard distributed-optimization trick:
+
+* ``int8``: per-tensor symmetric quantization with **error feedback**
+  (the residual re-enters next step's gradient), 4x fewer bytes with
+  provably-bounded bias (Seide et al. / Karimireddy et al.).
+* ``topk``: magnitude sparsification with error feedback, for extreme
+  ratios.
+
+The compressed representation is what crosses the ``pod`` axis; EF state
+is worker-local (never communicated).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (int8 values, fp32 scale)."""
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_mask(g: jax.Array, fraction: float) -> jax.Array:
+    """Keep the top-|fraction| entries by magnitude (per tensor)."""
+    flat = jnp.abs(g.reshape(-1).astype(jnp.float32))
+    k = max(int(flat.size * fraction), 1)
+    threshold = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g.astype(jnp.float32)) >= threshold).astype(g.dtype)
+
+
+def compress_with_error_feedback(
+    grads: Params,
+    ef_state: Params,
+    method: str = "int8",
+    topk_fraction: float = 0.01,
+) -> Tuple[Params, Params]:
+    """Returns (communicable grads, new EF residuals).
+
+    The returned gradient tree is already de-quantized (simulating the
+    receive side) — in the sharded train step the int8 tensors are what
+    the pod all-reduce actually moves; see train_step's compression hook.
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e.astype(jnp.float32)
+        if method == "int8":
+            q, scale = int8_compress(corrected)
+            sent = int8_decompress(q, scale, jnp.float32)
+        elif method == "topk":
+            mask = topk_mask(corrected, topk_fraction).astype(jnp.float32)
+            sent = corrected * mask
+        else:
+            raise ValueError(f"unknown compression {method!r}")
+        residual = corrected - sent
+        return sent.astype(g.dtype), residual.astype(e.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)

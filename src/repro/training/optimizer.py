@@ -1,0 +1,112 @@
+"""AdamW + learning-rate schedules, built here (no optax dependency).
+
+Schedules: cosine, constant, and **WSD** (warmup-stable-decay, the
+MiniCPM schedule assigned with minicpm-2b): linear warmup -> long stable
+plateau -> short decay.
+
+Optimizer state dtype is configurable: fp32 default; bf16 moments are
+what lets llama4-maverick-400b fit 16 GB/chip at 256 chips (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainingConfig
+
+Params = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class AdamWState:
+    step: jax.Array      # scalar int32
+    mu: Params           # first moment
+    nu: Params           # second moment
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def lr_schedule(cfg: TrainingConfig, step: jax.Array) -> jax.Array:
+    """Piecewise schedule; pure jnp so it jits inside the train step."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        frac = jnp.ones(())
+    elif cfg.schedule == "cosine":
+        t = jnp.clip(
+            (s - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps, 1), 0.0, 1.0
+        )
+        frac = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # warmup -> stable at 1.0 -> linear decay to 10% over decay_steps
+        stable_end = cfg.warmup_steps + cfg.stable_steps
+        t = jnp.clip((s - stable_end) / jnp.maximum(cfg.decay_steps, 1), 0.0, 1.0)
+        frac = 1.0 - 0.9 * t
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    return cfg.learning_rate * warm * frac
+
+
+def adamw_init(params: Params, cfg: TrainingConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.optimizer_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dtype=dt)
+    return AdamWState(
+        step=jnp.zeros((), dtype=jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads: Params,
+    state: AdamWState,
+    params: Params,
+    cfg: TrainingConfig,
+) -> Tuple[Params, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        muh = mu32 / bc1
+        nuh = nu32 / bc2
+        delta = muh / (jnp.sqrt(nuh) + eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics

@@ -1,0 +1,180 @@
+"""Data pipeline (virtual-messaging-backed) + TCMM app + telemetry."""
+
+import numpy as np
+import pytest
+
+from repro.apps.tcmm import MacroClusterJob, MicroClusterJob, MicroClusterState
+from repro.configs.tcmm import TCMMConfig
+from repro.core.liquid import LiquidJob
+from repro.core.reactive import ReactiveJob
+from repro.data.pipeline import PipelineConfig, TokenPipeline, build_token_log
+from repro.data.sources import TokenSource, TrajectorySource
+from repro.data.topics import MessageLog
+from repro.telemetry.metrics import MetricsHub, MetricsReplica
+
+
+# --- sources ------------------------------------------------------------------
+
+
+def test_token_source_deterministic():
+    src = TokenSource(vocab_size=256, doc_len=64, seed=3)
+    a, b = src.doc(17), src.doc(17)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 256
+    assert not np.array_equal(src.doc(17), src.doc(18))
+
+
+def test_trajectory_source_keys_and_features():
+    src = TrajectorySource(num_taxis=10, seed=1)
+    pts = list(src.stream(50))
+    assert len(pts) == 50
+    keys = {k for k, _ in pts}
+    assert len(keys) == 10
+    assert all(len(v) == 4 for _, v in pts)
+
+
+# --- pipeline ------------------------------------------------------------------
+
+
+def test_pipeline_more_queues_than_partitions():
+    """The paper's point on the data path: 2 partitions feed 8 queues."""
+    log = build_token_log(vocab_size=128, num_docs=64, doc_len=33,
+                          partitions=2, seed=0)
+    pipe = TokenPipeline(log, PipelineConfig(
+        partitions=2, num_queues=8, batch_size=4, seq_len=16))
+    batches = list(pipe)
+    assert len(batches) >= 20
+    for b in batches:
+        assert b["tokens"].shape == (4, 16)
+        assert b["labels"].shape == (4, 16)
+        # next-token alignment within the packed stream
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_state_dict_checkpoint_resume():
+    """Restoring the pipeline state (offsets + in-flight messages + carry)
+    resumes the stream bit-exactly."""
+    make = lambda: TokenPipeline(
+        build_token_log(vocab_size=64, num_docs=40, doc_len=65, partitions=4),
+        PipelineConfig(partitions=4, num_queues=4, batch_size=2, seq_len=32),
+    )
+    p1 = make()
+    first = [p1.next_batch() for _ in range(3)]
+    saved = p1.state_dict()
+    after_save = [p1.next_batch() for _ in range(3)]
+
+    p2 = make()
+    p2.load_state_dict(saved)
+    resumed = [p2.next_batch() for _ in range(3)]
+    for a, b in zip(after_save, resumed):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+# --- tcmm ------------------------------------------------------------------------
+
+
+def test_micro_clustering_converges_on_blobs():
+    cfg = TCMMConfig(max_micro_clusters=64, distance_threshold=3.0, feature_dim=2)
+    rng = np.random.default_rng(0)
+    centers = np.asarray([[0.0, 0.0], [20.0, 0.0], [0.0, 20.0]])
+    state = MicroClusterState(cfg)
+    for i in range(600):
+        c = centers[i % 3]
+        state.ingest((c + rng.normal(0, 0.5, 2)).astype(np.float32))
+    assert 3 <= state.num_active <= 12  # a few micro-clusters per blob
+    assert state.processed == 600
+
+
+def test_micro_state_event_replay_equivalence():
+    """Event sourcing: replaying the change log rebuilds the exact state."""
+    cfg = TCMMConfig(max_micro_clusters=32, distance_threshold=2.0, feature_dim=2)
+    rng = np.random.default_rng(1)
+    state = MicroClusterState(cfg)
+    events = [state.ingest(rng.normal(0, 5, 2).astype(np.float32))
+              for _ in range(200)]
+    rebuilt = MicroClusterState.replay(cfg, events)
+    np.testing.assert_allclose(rebuilt.n, state.n)
+    np.testing.assert_allclose(rebuilt.ls, state.ls, rtol=1e-6)
+    assert rebuilt.num_active == state.num_active
+
+
+def test_tcmm_two_stage_pipeline_on_reactive():
+    """The paper's exact wiring: trajectories -> micro job -> changes topic
+    -> macro job, on the Reactive Liquid stack."""
+    cfg = TCMMConfig(max_micro_clusters=128, distance_threshold=4.0,
+                     feature_dim=4, num_macro_clusters=4, macro_period=128)
+    log = MessageLog()
+    log.create_topic("trajectories", 3)
+    log.create_topic("micro-changes", 3)
+    src = TrajectorySource(num_taxis=30, seed=2)
+    for key, point in src.stream(600):
+        log.publish("trajectories", payload=point, key=key)
+
+    micro = MicroClusterJob(cfg)
+    macro = MacroClusterJob(cfg)
+    micro_job = ReactiveJob("micro", log, "trajectories", micro,
+                            out_topic="micro-changes", initial_tasks=1,
+                            elastic=False)
+    macro_job = ReactiveJob("macro", log, "micro-changes", macro,
+                            initial_tasks=1, elastic=False)
+    for r in range(2000):
+        micro_job.step(now=float(r))
+        macro_job.step(now=float(r))
+        if micro_job.backlog() == 0 and macro_job.backlog() == 0:
+            break
+    assert micro.state.processed == 600
+    assert macro.replica.processed == 600
+    assert macro.macro_runs >= 1
+    assert macro.macro_centers.shape == (4, 4)
+
+
+def test_tcmm_on_liquid_baseline_same_results():
+    """Liquid and Reactive produce identical micro-cluster state (the
+    architecture changes throughput, not semantics). Single partition +
+    single task pins the ingest order for strict equality; with multiple
+    partitions the two stacks interleave differently (both valid TCMM
+    orders)."""
+    cfg = TCMMConfig(max_micro_clusters=64, distance_threshold=4.0, feature_dim=4)
+    def run(job_cls, **kw):
+        log = MessageLog()
+        log.create_topic("t", 1)
+        for key, p in TrajectorySource(num_taxis=10, seed=5).stream(200):
+            log.publish("t", payload=p, key=key)
+        micro = MicroClusterJob(cfg)
+        job = job_cls("m", log, "t", micro, **kw)
+        job.run_to_completion()
+        return micro.state
+
+    a = run(LiquidJob, num_tasks=1)
+    b = run(ReactiveJob, initial_tasks=1, elastic=False)
+    np.testing.assert_allclose(a.n, b.n)
+    np.testing.assert_allclose(a.ls, b.ls, rtol=1e-6)
+
+
+# --- telemetry -----------------------------------------------------------------
+
+
+def test_metrics_merge_survives_restart():
+    hub = MetricsHub()
+    w1 = MetricsReplica("w1")
+    w1.incr("messages", 10)
+    hub.ingest(w1)
+    hub.ingest(w1)  # duplicate ingest is idempotent (G-Counter max-merge)
+    assert hub.counter("messages") == 10
+    # worker restarts with empty replica, does more work
+    w1b = MetricsReplica("w1")
+    w1b.counters["messages"] = w1.counters["messages"]  # journal recovery
+    w1b.incr("messages", 5)
+    hub.ingest(w1b)
+    assert hub.counter("messages") == 15
+
+
+def test_metrics_gauges_lww():
+    hub = MetricsHub()
+    a, b = MetricsReplica("a"), MetricsReplica("b")
+    a.gauge("loss", 3.5, timestamp=10.0)
+    b.gauge("loss", 3.1, timestamp=11.0)
+    hub.ingest(a)
+    hub.ingest(b)
+    assert hub.gauge("loss") == 3.1  # newest write wins

@@ -1,0 +1,78 @@
+"""Elastic DP: checkpoint -> remesh -> resharded restore continues
+training with identical results (subprocess: needs >1 fake device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import TrainingConfig, get_arch
+    from repro.distributed.elastic_mesh import mesh_for_devices, reshard_state
+    from repro.distributed.param_shardings import make_rules, train_state_shardings, batch_shardings
+    from repro.distributed.sharding import axis_rules
+    from repro.models.zoo import build_model
+    from repro.training.train_step import init_train_state, make_train_step
+
+    cfg = get_arch("llama3.2-1b", smoke=True)
+    tcfg = TrainingConfig(learning_rate=1e-3, warmup_steps=0, schedule="constant")
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    step = make_train_step(model, tcfg)
+    batch = {
+        "tokens": jnp.tile(jnp.arange(32, dtype=jnp.int32)[None], (8, 1)) % cfg.vocab_size,
+        "labels": jnp.tile(jnp.arange(1, 33, dtype=jnp.int32)[None], (8, 1)) % cfg.vocab_size,
+    }
+
+    def run_steps(state, mesh, n):
+        rules = make_rules(cfg, mesh)
+        with mesh, axis_rules(rules):
+            jit_step = jax.jit(step)
+            for _ in range(n):
+                state, m = jit_step(state, batch)
+        return state, float(m["loss"])
+
+    # golden: 4 steps on mesh A (4 data x 2 model)
+    mesh_a = mesh_for_devices(8, model_parallel=2)
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    state = reshard_state(state, cfg, mesh_a)
+    golden, loss_g = run_steps(state, mesh_a, 4)
+
+    # elastic: 2 steps on mesh A, "scale down" to mesh B (2 data x 2 model
+    # — lost half the DP replicas), reshard, 2 more steps
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    state = reshard_state(state, cfg, mesh_a)
+    state, _ = run_steps(state, mesh_a, 2)
+    mesh_b = mesh_for_devices(4, model_parallel=2)
+    state = reshard_state(state, cfg, mesh_b)
+    state, loss_b = run_steps(state, mesh_b, 2)
+
+    ok = True
+    for a, b in zip(jax.tree.leaves(golden.params), jax.tree.leaves(state.params)):
+        if not np.allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6):
+            ok = False
+    print("RESULT " + json.dumps({
+        "match": ok, "loss_golden": loss_g, "loss_elastic": loss_b,
+        "mesh_a": str(mesh_a.shape), "mesh_b": str(mesh_b.shape),
+    }))
+""")
+
+
+def test_remesh_preserves_training_trajectory():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _PROGRAM],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["match"], out
+    assert abs(out["loss_golden"] - out["loss_elastic"]) < 1e-4

@@ -1,0 +1,81 @@
+"""Loop-aware HLO cost model: the scan-undercount fix and its invariants
+(compiled.cost_analysis() counts while bodies once — see hlo_cost.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _scan_fn(n_layers):
+    def body(x, w):
+        return jnp.dot(x, w), None
+
+    def fn(x, w):
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    return fn
+
+
+def _compile_text(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile().as_text()
+
+
+def test_scan_flops_scale_with_trip_count():
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    f8 = analyze_hlo(_compile_text(
+        _scan_fn(8), x, jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)))
+    f16 = analyze_hlo(_compile_text(
+        _scan_fn(16), x, jax.ShapeDtypeStruct((16, 256, 256), jnp.float32)))
+    expected8 = 8 * 2 * 128 * 256 * 256
+    assert f8.flops == pytest.approx(expected8, rel=0.01)
+    assert f16.flops == pytest.approx(2 * expected8, rel=0.01)
+    assert 8 in f8.while_trip_counts.values()
+    assert 16 in f16.while_trip_counts.values()
+
+
+def test_grad_of_scan_is_3x_forward():
+    """fwd+bwd of a matmul chain costs 3x the forward (classic identity)."""
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+
+    fwd = analyze_hlo(_compile_text(_scan_fn(8), x, w))
+
+    def loss(x_, w_):
+        return jnp.sum(_scan_fn(8)(x_, w_) ** 2)
+
+    bwd = analyze_hlo(_compile_text(jax.grad(loss, argnums=1), x, w))
+    assert bwd.flops / fwd.flops == pytest.approx(3.0, rel=0.05)
+
+
+def test_unrolled_matches_scanned_flops():
+    """Same math, scan vs python-unrolled: counted FLOPs must agree."""
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, 128, 128), jnp.float32)
+
+    def unrolled(x_, w_):
+        for i in range(4):
+            x_ = jnp.dot(x_, w_[i])
+        return x_
+
+    a = analyze_hlo(_compile_text(_scan_fn(4), x, w))
+    b = analyze_hlo(_compile_text(unrolled, x, w))
+    assert a.flops == pytest.approx(b.flops, rel=0.01)
+
+
+def test_bytes_grow_with_trips():
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    f4 = analyze_hlo(_compile_text(
+        _scan_fn(4), x, jax.ShapeDtypeStruct((4, 256, 256), jnp.float32)))
+    f32 = analyze_hlo(_compile_text(
+        _scan_fn(32), x, jax.ShapeDtypeStruct((32, 256, 256), jnp.float32)))
+    assert f32.bytes > 4 * f4.bytes  # roughly linear in depth
+
+
+def test_no_dots_no_flops():
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+    c = analyze_hlo(_compile_text(lambda v: v * 2 + 1, x))
+    assert c.flops == 0
+    assert c.bytes > 0  # elementwise traffic still counted

@@ -1,0 +1,74 @@
+"""Roofline analysis unit tests: HLO collective parsing, term math,
+rule-builder divisibility guarantees."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.roofline.analysis import (
+    HW_V5E,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+HLO_SAMPLE = """
+HloModule test
+
+ENTRY %main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(bf16[128,256]{1,0} %p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %rs = bf16[64,256]{1,0} reduce-scatter(bf16[1024,256]{1,0} %y), dimensions={0}
+  %a2a = bf16[8,32,64]{2,1,0} all-to-all(bf16[8,32,64]{2,1,0} %z), dimensions={0}
+  %cp-start = bf16[16,16]{1,0} collective-permute-start(bf16[16,16]{1,0} %w)
+  %cp-done = bf16[16,16]{1,0} collective-permute-done(%cp-start)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parsing_kinds_and_bytes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-gather"] == 2048 * 256 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 64 * 256 * 2
+    assert out["all-to-all"] == 8 * 32 * 64 * 2
+    # async pair counted exactly once (the -start side)
+    assert out["collective-permute"] == 16 * 16 * 2
+
+
+def test_collective_parsing_ignores_compute_ops():
+    out = collective_bytes_from_hlo("%d = f32[4096,4096]{1,0} dot(%a, %b)")
+    assert sum(out.values()) == 0
+
+
+def test_roofline_terms_and_dominance():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="1x16x16", chips=256,
+        flops_per_chip=197e12 * 0.5,          # 0.5 s of compute
+        hbm_bytes_per_chip=819e9 * 0.1,       # 0.1 s of memory
+        collective_bytes_per_chip=int(50e9 * 0.2),  # 0.2 s of collectives
+        collective_breakdown={},
+        model_flops_global=197e12 * 256 * 0.25,  # 0.25 s of useful work
+    )
+    assert r.t_compute == pytest.approx(0.5)
+    assert r.t_memory == pytest.approx(0.1)
+    assert r.t_collective == pytest.approx(0.2)
+    assert r.dominant == "compute"
+    assert r.roofline_fraction == pytest.approx(0.5)   # 0.25 / 0.5
+    assert r.useful_flops_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_train_vs_infer():
+    assert model_flops(1_000_000, 100, "train") == 6e8
+    assert model_flops(1_000_000, 100, "infer") == 2e8
+
+
+def test_param_count_formulas():
+    """6*N*D consistency: the MoE active count strictly below total."""
+    moe = get_arch("mixtral-8x7b")
+    assert moe.active_param_count() < moe.param_count()
+    dense = get_arch("llama3.2-1b")
+    assert dense.active_param_count() == dense.param_count()

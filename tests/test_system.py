@@ -1,0 +1,133 @@
+"""End-to-end system tests: the whole stack wired together.
+
+1. Train -> crash -> resume produces the same final state as an
+   uninterrupted run (exact checkpoint/restart, in-process).
+2. The process-level failure drill (subprocess, hard kill, supervisor
+   relaunch) completes training.
+3. The live threaded runtime heals a killed worker under real
+   concurrency.
+"""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_crash_resume_equals_uninterrupted_run(tmp_path):
+    """Determinism across Let-It-Crash: snapshot at k, rebuild, continue —
+    identical final params to never crashing."""
+    from repro.checkpoint.store import CheckpointStore
+    from repro.config import TrainingConfig, get_arch
+    from repro.data.pipeline import PipelineConfig, TokenPipeline, build_token_log
+    from repro.models.zoo import build_model
+    from repro.training.train_step import init_train_state, make_train_step
+
+    cfg = get_arch("llama3.2-1b", smoke=True)
+    tcfg = TrainingConfig(learning_rate=1e-3, warmup_steps=0, schedule="constant")
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+
+    def make_pipe():
+        return TokenPipeline(
+            build_token_log(cfg.vocab_size, 256, doc_len=33, partitions=3),
+            PipelineConfig(partitions=3, num_queues=4, batch_size=4, seq_len=16),
+        )
+
+    # --- uninterrupted run: 10 steps
+    pipe = make_pipe()
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    for _ in range(10):
+        state, _ = step_fn(state, {k: jnp.asarray(v) for k, v in
+                                   pipe.next_batch().items()})
+    golden = state
+
+    # --- crashed run: 5 steps, snapshot, "crash", rebuild, 5 more
+    store = CheckpointStore(str(tmp_path))
+    pipe = make_pipe()
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    for _ in range(5):
+        state, _ = step_fn(state, {k: jnp.asarray(v) for k, v in
+                                   pipe.next_batch().items()})
+    store.save(state, step=5, extra={"pipeline": pipe.state_dict()})
+    del state, pipe  # the crash
+
+    template = jax.eval_shape(
+        lambda r: init_train_state(model, tcfg, r), jax.random.PRNGKey(0)
+    )
+    template = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+    restored, meta, _ = store.restore_latest(template)
+    pipe2 = make_pipe()
+    pipe2.load_state_dict(meta["pipeline"])
+    state = restored
+    for _ in range(5):
+        state, _ = step_fn(state, {k: jnp.asarray(v) for k, v in
+                                   pipe2.next_batch().items()})
+
+    for a, b in zip(jax.tree.leaves(golden.params), jax.tree.leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_process_level_failure_drill(tmp_path):
+    """Hard-kill a real training process mid-run; the supervisor restarts
+    it with --resume and training completes."""
+    from repro.launch.cluster import ProcessSupervisor, WorkerSpec
+
+    spec = WorkerSpec(
+        name="w0",
+        heartbeat_file=str(tmp_path / "hb"),
+        args=[
+            "--arch", "llama3.2-1b", "--steps", "12",
+            "--batch-size", "2", "--seq-len", "16",
+            "--checkpoint-dir", str(tmp_path / "ckpt"),
+            # crash on a checkpoint boundary so the resumed run continues
+            # past it (crashing between checkpoints would re-execute the
+            # crash step — which is also a useful drill, but a different one)
+            "--checkpoint-every", "4", "--crash-at-step", "8",
+            "--num-docs", "256", "--log-every", "4",
+        ],
+    )
+    sup = ProcessSupervisor(spec, heartbeat_timeout=120.0, max_restarts=2)
+    code = sup.run(total_timeout=420.0)
+    assert code == 0
+    assert sup.restarts == 1
+    kinds = [e.kind for e in sup.events]
+    assert kinds.count("started") == 2
+    assert "finished" in kinds
+
+
+def test_threaded_runtime_heals_killed_worker():
+    from repro.core.reactive import ReactiveJob
+    from repro.core.runtime import ThreadedRuntime
+    from repro.data.topics import MessageLog
+
+    log = MessageLog()
+    log.create_topic("in", 3)
+    for i in range(300):
+        log.publish("in", payload=i)
+    seen = []
+
+    def slow_process(m):
+        time.sleep(0.002)  # keep the backlog alive past the kill
+        seen.append(m.payload)
+        return []
+
+    job = ReactiveJob("j", log, "in", slow_process,
+                      initial_tasks=4, heartbeat_timeout=0.2, elastic=False)
+    rt = ThreadedRuntime(job, tick=0.001)
+    rt.start()
+    time.sleep(0.1)
+    killed_task = rt.kill_task(0)
+    killed_vc = rt.kill_consumer(0)
+    assert job.backlog() > 0, "workload should still be in flight"
+    processed = rt.drain(timeout=60.0)
+    rt.stop()
+    assert processed == 300
+    assert sorted(seen) == sorted(range(300))
+    assert any(e[1] == "restarted" for e in job.supervisor.events)

@@ -1,0 +1,181 @@
+"""Optimizer, schedules, train step, microbatching, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainingConfig, get_arch
+from repro.models.zoo import build_model
+from repro.training.grad_compress import (
+    compress_with_error_feedback,
+    init_error_feedback,
+    int8_compress,
+    int8_decompress,
+)
+from repro.training.optimizer import adamw_init, adamw_update, lr_schedule
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def small_model():
+    return build_model(get_arch("llama3.2-1b", smoke=True), compute_dtype=jnp.float32)
+
+
+def make_batch(cfg, b=4, s=32, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size),
+    }
+
+
+# --- schedules ---------------------------------------------------------------
+
+
+def test_cosine_schedule_shape():
+    cfg = TrainingConfig(learning_rate=1.0, warmup_steps=10, decay_steps=100,
+                         schedule="cosine")
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 60, 110]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_wsd_schedule_shape():
+    """MiniCPM's warmup-stable-decay: flat plateau then linear decay."""
+    cfg = TrainingConfig(learning_rate=2.0, warmup_steps=10, stable_steps=50,
+                         decay_steps=40, schedule="wsd")
+    plateau = [float(lr_schedule(cfg, jnp.asarray(s))) for s in [10, 30, 60]]
+    assert plateau == pytest.approx([2.0, 2.0, 2.0])
+    end = float(lr_schedule(cfg, jnp.asarray(100)))
+    assert end == pytest.approx(0.2, rel=1e-3)  # decays to 10%
+
+
+# --- adamw ------------------------------------------------------------------
+
+
+def test_adamw_descends_quadratic():
+    cfg = TrainingConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=0,
+                         schedule="constant", grad_clip_norm=1e9)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw |w|^2
+        params, state, m = adamw_update(grads, state, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), 0.0, atol=1e-2)
+
+
+def test_grad_clipping_bounds_update():
+    cfg = TrainingConfig(learning_rate=1.0, grad_clip_norm=1.0, warmup_steps=0,
+                         schedule="constant", weight_decay=0.0)
+    params = {"w": jnp.zeros((3,))}
+    state = adamw_init(params, cfg)
+    huge = {"w": jnp.asarray([1e9, 1e9, 1e9])}
+    _, _, metrics = adamw_update(huge, state, params, cfg)
+    assert float(metrics["grad_norm"]) > 1e8  # reported pre-clip
+
+
+def test_bf16_optimizer_state_dtype():
+    cfg = TrainingConfig(optimizer_state_dtype="bfloat16")
+    params = {"w": jnp.zeros((4,), dtype=jnp.float32)}
+    state = adamw_init(params, cfg)
+    assert state.mu["w"].dtype == jnp.bfloat16
+
+
+# --- train step --------------------------------------------------------------
+
+
+def test_train_step_decreases_loss():
+    model = small_model()
+    tcfg = TrainingConfig(learning_rate=1e-2, warmup_steps=0, schedule="constant")
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = make_batch(model.cfg)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+    assert int(state.opt.step) == 8
+
+
+def test_microbatched_grads_match_full_batch():
+    """Grad accumulation must be numerically equivalent to the full batch."""
+    model = small_model()
+    batch = make_batch(model.cfg, b=8)
+    full_cfg = TrainingConfig(microbatch_size=0, warmup_steps=0, schedule="constant")
+    micro_cfg = TrainingConfig(microbatch_size=2, warmup_steps=0, schedule="constant")
+    s_full = init_train_state(model, full_cfg, jax.random.PRNGKey(0))
+    s_micro = init_train_state(model, micro_cfg, jax.random.PRNGKey(0))
+    s_full2, m_full = jax.jit(make_train_step(model, full_cfg))(s_full, batch)
+    s_micro2, m_micro = jax.jit(make_train_step(model, micro_cfg))(s_micro, batch)
+    assert float(m_full["loss"]) == pytest.approx(float(m_micro["loss"]), rel=1e-4)
+    for a, b in zip(jax.tree.leaves(s_full2.params), jax.tree.leaves(s_micro2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["full", "dots_saveable"])
+def test_remat_policies_preserve_loss(policy):
+    model = small_model()
+    batch = make_batch(model.cfg)
+    base = TrainingConfig(remat_policy="none", warmup_steps=0, schedule="constant")
+    remat = TrainingConfig(remat_policy=policy, warmup_steps=0, schedule="constant")
+    s0 = init_train_state(model, base, jax.random.PRNGKey(0))
+    s1 = init_train_state(model, remat, jax.random.PRNGKey(0))
+    _, m0 = jax.jit(make_train_step(model, base))(s0, batch)
+    _, m1 = jax.jit(make_train_step(model, remat))(s1, batch)
+    assert float(m0["loss"]) == pytest.approx(float(m1["loss"]), rel=1e-5)
+
+
+# --- gradient compression ---------------------------------------------------
+
+
+def test_int8_roundtrip_error_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    q, scale = int8_compress(g)
+    assert q.dtype == jnp.int8
+    back = int8_decompress(q, scale, jnp.float32)
+    max_err = float(jnp.max(jnp.abs(back - g)))
+    assert max_err <= float(scale) * 0.5 + 1e-6  # half-ULP of the quant grid
+
+
+def test_error_feedback_accumulates_residual():
+    """EF: what wasn't sent this step re-enters the next step."""
+    grads = {"w": jnp.asarray([0.004, -0.002, 1.0])}
+    ef = init_error_feedback(grads)
+    sent1, ef1 = compress_with_error_feedback(grads, ef, method="int8")
+    residual = np.asarray(ef1["w"])
+    assert np.abs(residual).max() > 0  # something was left behind
+    sent2, ef2 = compress_with_error_feedback(grads, ef1, method="int8")
+    # the cumulative sent after 2 steps approaches 2x the true gradient
+    total_sent = np.asarray(sent1["w"]) + np.asarray(sent2["w"])
+    np.testing.assert_allclose(total_sent, 2 * np.asarray(grads["w"]),
+                               atol=2 * float(jnp.max(jnp.abs(grads["w"]))) / 127)
+
+
+def test_topk_compression_sends_largest():
+    grads = {"w": jnp.asarray([0.001, 5.0, -0.002, 0.003])}
+    ef = init_error_feedback(grads)
+    sent, ef1 = compress_with_error_feedback(
+        grads, ef, method="topk", topk_fraction=0.25
+    )
+    s = np.asarray(sent["w"])
+    assert s[1] == pytest.approx(5.0)
+    assert (s[[0, 2, 3]] == 0).all()
+    assert np.asarray(ef1["w"])[0] == pytest.approx(0.001)
+
+
+def test_compressed_training_still_converges():
+    model = small_model()
+    tcfg = TrainingConfig(learning_rate=1e-2, warmup_steps=0, schedule="constant",
+                          grad_compression="int8")
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = make_batch(model.cfg)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
