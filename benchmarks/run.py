@@ -4,6 +4,7 @@
   bench_failure     — Fig. 10 (failure sweep p in {0,30,60,90}%)
   bench_completion  — Fig. 11 / Eq. (1)-(2) (+ beyond-paper fix)
   bench_scheduler   — beyond-paper scheduler x capacity sweep
+  bench_serving     — elastic serving: admission-policy tails + occupancy
   bench_kernels     — kernel tiling numbers + CPU reference timings
   bench_roofline    — the 40-cell dry-run roofline table
 
@@ -29,7 +30,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench (throughput|failure|completion|"
-                         "scheduler|kernels|roofline)")
+                         "scheduler|serving|kernels|roofline)")
     ap.add_argument("--json", default=None, help="also dump rows as JSONL")
     args = ap.parse_args()
 
@@ -39,6 +40,7 @@ def main() -> None:
         bench_kernels,
         bench_roofline,
         bench_scheduler,
+        bench_serving,
         bench_throughput,
     )
 
@@ -47,6 +49,7 @@ def main() -> None:
         "failure": bench_failure.run,
         "completion": bench_completion.run,
         "scheduler": bench_scheduler.run,
+        "serving": bench_serving.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }

@@ -1,0 +1,13 @@
+"""Repo-root pytest config: make `import repro` work without PYTHONPATH.
+
+Keeping this at the root (rather than tests/) also pins pytest's rootdir,
+so pytest.ini is always picked up no matter where the suite is invoked
+from.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

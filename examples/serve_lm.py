@@ -1,8 +1,12 @@
-"""Continuous-batched serving of a (reduced-config) model: a burst of
-requests with ragged prompt lengths flows through the request mailbox into
-decode slots; slots free on completion and admit the next request.
+"""Reactive elastic serving of a (reduced-config) model: a traffic spike
+flows through the bounded request mailbox into autoscaled batcher
+replicas — the slot-unit target rides the spike up (spawning a second
+replica over the shared ingress) and drains back down after it.  Requests
+route to replicas via a load-aware admission policy (JSQ by default).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+Try:  PYTHONPATH=src python examples/serve_lm.py --stub --spike \
+          --requests 120 --kill-replica 0      # chaos drill, instant
 """
 
 import sys
@@ -11,5 +15,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     argv = sys.argv[1:] or ["--arch", "llama3.2-1b", "--requests", "24",
-                            "--slots", "4", "--max-new-tokens", "10"]
+                            "--slots", "4", "--max-new-tokens", "10",
+                            "--spike"]
     raise SystemExit(main(argv))

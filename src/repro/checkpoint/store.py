@@ -14,7 +14,11 @@ the previous snapshot is kept until the new one lands — a crash
 mid-checkpoint can never lose both.
 
 Tensor serialization is self-contained (numpy buffers inside msgpack,
-zstd-compressed) — no orbax dependency in this container.
+compressed) — no orbax dependency in this container.  Compression prefers
+``zstandard`` when installed and falls back to stdlib ``zlib``; a 4-byte
+codec tag leads every snapshot so either codec can read files written by
+the other (legacy untagged snapshots are recognised by the zstd frame
+magic, anything else is treated as bare zlib).
 """
 
 from __future__ import annotations
@@ -23,17 +27,64 @@ import json
 import os
 import re
 import threading
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional dep: the container may not ship zstandard
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - environment dependent
+    zstd = None
 
 from repro.core.state import Event, EventJournal
 
 Params = Any
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+# Snapshot header: 4-byte codec tag, then the compressed payload.  Legacy
+# (pre-tag) snapshots were bare zstd frames; ``_decompress`` recognises the
+# zstd magic for those.
+_TAG_ZSTD = b"RLZS"
+_TAG_ZLIB = b"RLZL"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def default_codec() -> str:
+    return "zstd" if zstd is not None else "zlib"
+
+
+def _compress(raw: bytes, codec: Optional[str] = None) -> bytes:
+    codec = codec or default_codec()
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError("zstandard not installed; use codec='zlib'")
+        return _TAG_ZSTD + zstd.ZstdCompressor(level=3).compress(raw)
+    if codec == "zlib":
+        return _TAG_ZLIB + zlib.compress(raw, level=6)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(blob: bytes) -> bytes:
+    tag, payload = blob[:4], blob[4:]
+    if tag == _TAG_ZLIB:
+        return zlib.decompress(payload)
+    if tag == _TAG_ZSTD or tag == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                "snapshot is zstd-compressed but zstandard is not installed"
+            )
+        data = payload if tag == _TAG_ZSTD else blob
+        return zstd.ZstdDecompressor().decompress(data)
+    # Legacy fallback: no tag, not a zstd frame — assume bare zlib.
+    return zlib.decompress(blob)
 
 
 # ---------------------------------------------------------------------------
@@ -54,7 +105,10 @@ def _unpack_leaf(d: Dict[str, Any]) -> np.ndarray:
     return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"])
 
 
-def save_pytree(tree: Params, path: str, meta: Optional[Dict] = None) -> None:
+def save_pytree(
+    tree: Params, path: str, meta: Optional[Dict] = None,
+    codec: Optional[str] = None,
+) -> None:
     leaves, treedef = jax.tree.flatten(tree)
     payload = {
         "treedef": str(treedef),
@@ -62,7 +116,7 @@ def save_pytree(tree: Params, path: str, meta: Optional[Dict] = None) -> None:
         "leaves": [_pack_leaf(x) for x in leaves],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw, codec)
     tmp = path + ".tmp"
     with open(tmp, "wb") as fh:
         fh.write(comp)
@@ -72,7 +126,7 @@ def save_pytree(tree: Params, path: str, meta: Optional[Dict] = None) -> None:
 def load_pytree(template: Params, path: str) -> Tuple[Params, Dict]:
     """Loads into the structure of ``template`` (shapes/dtypes preserved)."""
     with open(path, "rb") as fh:
-        raw = zstd.ZstdDecompressor().decompress(fh.read())
+        raw = _decompress(fh.read())
     payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
     leaves, treedef = jax.tree.flatten(template)
     loaded = payload["leaves"]
@@ -95,9 +149,12 @@ def load_pytree(template: Params, path: str) -> Tuple[Params, Dict]:
 
 
 class CheckpointStore:
-    def __init__(self, directory: str, keep: int = 2) -> None:
+    def __init__(
+        self, directory: str, keep: int = 2, codec: Optional[str] = None
+    ) -> None:
         self.directory = directory
         self.keep = keep
+        self.codec = codec or default_codec()
         os.makedirs(directory, exist_ok=True)
         self.journal = EventJournal(os.path.join(directory, "journal.jsonl"))
         self._lock = threading.Lock()
@@ -124,7 +181,7 @@ class CheckpointStore:
         with self._lock:
             path = self._snap_path(step)
             meta = {"step": step, "offsets": offsets or {}, **(extra or {})}
-            save_pytree(state, path, meta=meta)
+            save_pytree(state, path, meta=meta, codec=self.codec)
             self.journal.append("snapshot", {"step": step})
             # GC old snapshots, always keeping the newest `keep`.
             snaps = self.snapshots()

@@ -78,6 +78,24 @@ class QueueDepthAutoscaler:
         return decision
 
 
+def split_units(units: int, slots_per_replica: int) -> List[int]:
+    """Distribute a slot-unit budget over the fewest replicas that hold it.
+
+    The serving pool's elasticity currency is *decode slots*, not whole
+    replicas: the autoscaler targets a unit count, and this maps it to
+    per-replica occupancy caps — fill one replica before spawning the next
+    (a fuller batch amortizes the decode step better than two half-empty
+    replicas).
+
+    >>> split_units(5, 4)
+    [4, 1]
+    """
+    units = max(int(units), 1)
+    slots = max(int(slots_per_replica), 1)
+    full, rem = divmod(units, slots)
+    return [slots] * full + ([rem] if rem else [])
+
+
 @dataclass(frozen=True)
 class StragglerReport:
     straggler_ids: tuple

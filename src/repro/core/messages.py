@@ -92,6 +92,30 @@ class Mailbox:
             self._q.append(msg)
             self.enqueued += 1
 
+    def try_put(self, msg: Message) -> bool:
+        """Non-raising bounded put: False (and a drop count) when full.
+
+        This is the shed/defer entry point for callers that treat overflow
+        as a policy decision rather than an error (serving admission)."""
+        with self._lock:
+            if self.capacity > 0 and len(self._q) >= self.capacity:
+                self.dropped += 1
+                return False
+            self._q.append(msg)
+            self.enqueued += 1
+            return True
+
+    def put_front(self, msg: Message) -> None:
+        """Enqueue at the head, ignoring capacity.
+
+        Re-admission path: work a dead worker already held (its in-flight
+        and queued messages) must re-enter ahead of new arrivals and must
+        never be shed — the mailbox briefly exceeding its bound is the
+        lesser evil (same reasoning as ReactiveJob's restart drain)."""
+        with self._lock:
+            self._q.appendleft(msg)
+            self.enqueued += 1
+
     def get(self) -> Optional[Message]:
         with self._lock:
             if not self._q:

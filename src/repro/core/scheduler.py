@@ -7,9 +7,11 @@ on slow tasks.  §5 of the paper names "a message distribution scheduler
 algorithm which distributes the messages among the tasks" as the open
 problem.
 
-We ship three schedulers:
+We ship four schedulers:
 
-  * ``RoundRobinScheduler`` — the paper-faithful baseline.
+  * ``RoundRobinScheduler`` — the paper-faithful baseline (registered as
+    both ``round_robin`` and ``fcfs``: with FIFO mailboxes it is exactly
+    first-come-first-served admission spread blindly over tasks).
   * ``JoinShortestQueueScheduler`` — route to the task with minimum queue
     depth (JSQ); optimal among non-anticipating policies for homogeneous
     servers.
@@ -18,6 +20,14 @@ We ship three schedulers:
     latency; this is the variant that scales to thousands of tasks because
     JSQ's full scan is itself a contention point (which the Reactive
     Manifesto forbids).
+  * ``DeadlineScheduler`` — earliest-deadline-first admission order plus
+    JSQ routing; payloads may carry a ``deadline`` (or ``priority``)
+    attribute and urgent work overtakes lax work at the dispatch point.
+    This is the serving layer's SLO-aware policy.
+
+Message-aware policies use two extra hooks that default to no-ops for the
+load-only schedulers: ``order`` (re-order a dispatch batch) and
+``pick_msg`` (route with the message in hand).
 
 ``benchmarks/bench_scheduler.py`` reproduces the paper's completion-time
 regression under RR and shows JSQ/P2C close it — the beyond-paper result.
@@ -30,13 +40,27 @@ overflow is mailbox backpressure.
 from __future__ import annotations
 
 import random
-from typing import Callable, List, Protocol, Sequence
+from typing import Any, Callable, List, Protocol, Sequence
 
 
 class QueueView(Protocol):
     """Anything with a depth() — Mailbox satisfies this."""
 
     def depth(self) -> int: ...
+
+
+def _deadline_of(msg: Any) -> tuple:
+    """Admission key (smaller tuple = sooner): messages with a deadline
+    sort first, earliest deadline winning; deadline-less messages follow,
+    ordered by descending priority (positive before the neutral default 0,
+    negative after it).  Works on Messages (inspects the payload) and
+    bare payloads alike."""
+    payload = getattr(msg, "payload", msg)
+    deadline = getattr(payload, "deadline", None)
+    if deadline is not None:
+        return (0, float(deadline))
+    priority = getattr(payload, "priority", None) or 0
+    return (1, -float(priority))
 
 
 class Scheduler:
@@ -46,6 +70,14 @@ class Scheduler:
 
     def pick(self, queues: Sequence[QueueView]) -> int:
         raise NotImplementedError
+
+    def pick_msg(self, msg: Any, queues: Sequence[QueueView]) -> int:
+        """Route with the message in hand; load-only policies ignore it."""
+        return self.pick(queues)
+
+    def order(self, msgs: Sequence[Any]) -> List[Any]:
+        """Admission order for a dispatch batch; FIFO unless overridden."""
+        return list(msgs)
 
     def reset(self, num_tasks: int) -> None:  # pragma: no cover - default
         pass
@@ -104,10 +136,26 @@ class PowerOfTwoScheduler(Scheduler):
         return i if queues[i].depth() <= queues[j].depth() else j
 
 
+class DeadlineScheduler(JoinShortestQueueScheduler):
+    """Earliest-deadline-first admission over JSQ routing.
+
+    ``order`` sorts a dispatch batch by the payload's ``deadline``
+    (fallback: descending ``priority``); the sort is stable, so equal
+    deadlines stay FIFO.  Routing inherits JSQ — an urgent message should
+    land on the queue that will serve it soonest."""
+
+    name = "edf"
+
+    def order(self, msgs: Sequence[Any]) -> List[Any]:
+        return sorted(msgs, key=_deadline_of)
+
+
 _REGISTRY: dict[str, Callable[[], Scheduler]] = {
     "round_robin": RoundRobinScheduler,
+    "fcfs": RoundRobinScheduler,
     "jsq": JoinShortestQueueScheduler,
     "pow2": PowerOfTwoScheduler,
+    "edf": DeadlineScheduler,
 }
 
 

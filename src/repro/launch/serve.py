@@ -1,9 +1,11 @@
-"""Serving driver: continuous-batched decoding of a (smoke-size) model,
-with the request queue as the reactive elasticity signal.
+"""Serving driver: the reactive elastic pool over continuous-batched
+decoding — the request queue is the elasticity signal, replicas scale out
+across a traffic spike and drain back afterwards.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --requests 32 --slots 4
+  PYTHONPATH=src python -m repro.launch.serve --stub --spike  # fast demo
 """
 
 from __future__ import annotations
@@ -17,61 +19,144 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_arch
-from repro.core.elastic import AutoscalerConfig, QueueDepthAutoscaler
+from repro.core.elastic import AutoscalerConfig
 from repro.models.zoo import build_model
-from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving import ElasticServingPool, Request
+
+
+def build(args):
+    if args.stub:
+        from repro.models.stub import StubModel
+
+        model = StubModel()
+        return model, model.init(jax.random.PRNGKey(args.seed)), 90
+    cfg = get_arch(args.arch, smoke=True)
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    return model, model.init(jax.random.PRNGKey(args.seed)), cfg.vocab_size
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--stub", action="store_true",
+                    help="arithmetic stub model (no weights, instant)")
     ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots per batcher replica")
+    ap.add_argument("--max-replicas", type=int, default=2)
+    ap.add_argument("--policy", default="jsq",
+                    help="admission policy: fcfs|round_robin|jsq|pow2|edf")
+    ap.add_argument("--ingress-capacity", type=int, default=0,
+                    help=">0 bounds the request mailbox (backpressure)")
+    ap.add_argument("--overflow", default="shed", choices=("shed", "defer"))
     ap.add_argument("--max-new-tokens", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--spike", action="store_true",
+                    help="bursty open-loop arrivals instead of one batch")
+    ap.add_argument("--kill-replica", type=int, default=-1,
+                    help="chaos: kill this replica index mid-run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_arch(args.arch, smoke=True)
-    model = build_model(cfg, compute_dtype=jnp.float32)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    batcher = ContinuousBatcher(
-        model, params, slots=args.slots, max_len=args.max_len,
+    model, params, vocab = build(args)
+    pool = ElasticServingPool(
+        model, params,
+        slots_per_replica=args.slots,
+        max_len=args.max_len,
         temperature=args.temperature,
-    )
-    autoscaler = QueueDepthAutoscaler(
-        AutoscalerConfig(high_watermark=8, low_watermark=1, cooldown=0.0,
-                         min_workers=1, max_workers=args.slots)
+        max_replicas=args.max_replicas,
+        initial_units=1 if args.spike else args.slots,
+        ingress_capacity=args.ingress_capacity,
+        overflow=args.overflow,
+        policy=args.policy,
+        autoscaler=AutoscalerConfig(high_watermark=4.0, low_watermark=0.5,
+                                    cooldown=0.0, step_fraction=1.0),
+        heartbeat_timeout=5.0,
     )
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
-    for i in range(args.requests):
+
+    def make_request():
         plen = int(rng.integers(2, 8))
-        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
-        batcher.submit(
-            Request(prompt=prompt, max_new_tokens=args.max_new_tokens),
-            now=time.time() - t0,
+        return Request(
+            prompt=[int(x) for x in rng.integers(0, vocab, plen)],
+            max_new_tokens=args.max_new_tokens,
         )
 
-    decoded = 0
-    while batcher.occupancy() > 0 or batcher.queue_depth() > 0:
-        decoded += batcher.step(now=time.time() - t0)
-        # the elastic signal (here: advisory — slots are the pool)
-        autoscaler.decide([batcher.queue_depth()], now=time.time() - t0)
+    t0 = time.time()
+    tick = 0
+    # With overflow="defer" the submitter owns the retry: rejected
+    # requests park here and re-submit each tick (closed-loop retry).
+    pending = []
+
+    def submit(req, now):
+        if not pool.submit(req, now=now) and args.overflow == "defer":
+            pending.append(req)
+    if args.spike:
+        # open-loop bursty arrivals: a calm head, a 4x spike holding half
+        # the traffic, a calm tail; exactly args.requests in total (the
+        # trailing ticks are trimmed when a tiny n can't fill the shape)
+        n = args.requests
+        schedule = ([1] * max(n // 4, 1) + [4] * max(n // 8, 1)
+                    + [1] * max(n - n // 4 - 4 * max(n // 8, 1), 0))
+        excess = sum(schedule) - n
+        while excess > 0 and schedule:
+            cut = min(schedule[-1], excess)
+            schedule[-1] -= cut
+            excess -= cut
+            if schedule[-1] == 0:
+                schedule.pop()
+        arrivals = iter(schedule)
+    else:
+        for _ in range(args.requests):
+            submit(make_request(), now=0.0)
+        arrivals = iter(())
+
+    killed = None
+    # Pull exactly one arrival count per tick; `upcoming` doubles as the
+    # termination peek so the drain check never eats a burst.
+    upcoming = next(arrivals, None)
+    while True:
+        retry, pending[:] = pending[:], []
+        for req in retry:
+            submit(req, now=float(tick))
+        for _ in range(upcoming or 0):
+            submit(make_request(), now=float(tick))
+        upcoming = next(arrivals, None)
+        if args.kill_replica >= 0 and tick == 5 and pool.replicas:
+            killed = pool.kill_replica(args.kill_replica)
+        pool.step(float(tick))
+        tick += 1
+        drained = (pool.queue_depth() == 0 and pool.occupancy() == 0
+                   and not pending)
+        if drained and upcoming is None:
+            break
+        if tick > 100_000:
+            break
 
     wall = time.time() - t0
-    lat = [r.completed_at - r.enqueued_at for r in batcher.completed]
+    lat = [r.completed_at - r.enqueued_at for r in pool.completed] or [0.0]
+    targets = [t for (_, t, _, _) in pool.occupancy_log]
+    replicas = [n for (_, _, _, n) in pool.occupancy_log]
     print(json.dumps({
-        "requests": len(batcher.completed),
-        "decoded_tokens": decoded,
-        "decode_steps": batcher.steps,
-        "tokens_per_step": round(decoded / max(batcher.steps, 1), 2),
+        "policy": pool.policy_name,
+        "requests_completed": len(pool.completed),
+        "shed": pool.metrics.value("serve.shed"),
+        "deferred": pool.metrics.value("serve.deferred"),
+        "readmitted": pool.metrics.value("serve.readmitted"),
+        "killed_replica": killed,
+        "decode_ticks": pool.steps,
         "wall_s": round(wall, 2),
-        "p50_latency_s": round(float(np.percentile(lat, 50)), 3),
-        "p99_latency_s": round(float(np.percentile(lat, 99)), 3),
-        "scale_decisions": len(autoscaler.decisions),
+        "p50_latency_ticks": round(float(np.percentile(lat, 50)), 1),
+        "p99_latency_ticks": round(float(np.percentile(lat, 99)), 1),
+        "peak_target_units": max(targets),
+        "peak_replicas": max(replicas),
+        "final_target_units": targets[-1],
+        "scale_events": [
+            (t, size, reason) for (t, size, reason)
+            in pool.controller.scale_events
+        ],
     }))
     return 0
 

@@ -1,0 +1,99 @@
+"""A deterministic arithmetic "model" for serving-layer tests and benches.
+
+Implements exactly the ``Model`` surface the serving stack touches
+(``init`` / ``init_cache`` / ``prefill`` / ``decode_step`` /
+``train_logits``) with a closed-form next-token rule
+
+    next(t, p) = (A * t + B * p + C) mod vocab
+
+where ``t`` is the current token and ``p`` its position.  Because the rule
+is stateless, greedy decoding through the continuous batcher must
+reproduce the full-forward reference exactly — which makes every
+elastic-serving behavior (occupancy caps, replica kills, re-admission,
+policy routing) checkable token-for-token without any weights, randomness,
+or meaningful compute.  The cache is a real per-slot buffer so the
+batcher's row-write admission path is exercised, even though the rule
+never reads it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass
+class StubModel:
+    vocab_size: int = 97  # prime: the token walk cycles through the vocab
+    mul: int = 7
+    pos_mul: int = 3
+    add: int = 1
+    cfg: Any = None
+
+    def _next(self, tokens: jax.Array, positions: jax.Array) -> jax.Array:
+        return (self.mul * tokens + self.pos_mul * positions + self.add) % (
+            self.vocab_size
+        )
+
+    def _one_hot(self, ids: jax.Array) -> jax.Array:
+        return jax.nn.one_hot(ids, self.vocab_size, dtype=jnp.float32)
+
+    # -- params / cache -----------------------------------------------------
+    def init(self, rng: jax.Array) -> Params:
+        del rng
+        return {"w": jnp.zeros((1,), dtype=jnp.float32)}
+
+    def init_cache(self, batch: int, max_len: int, ring: bool = False) -> Params:
+        del ring
+        return {"tokens_seen": jnp.zeros((batch, max_len), dtype=jnp.int32)}
+
+    # -- entry points ---------------------------------------------------------
+    def train_logits(
+        self, params: Params, batch: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, jax.Array]:
+        del params
+        tokens = batch["tokens"]  # [B, T]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        logits = self._one_hot(self._next(tokens, positions))
+        return logits, jnp.zeros(())
+
+    def prefill(
+        self,
+        params: Params,
+        batch: Dict[str, jax.Array],
+        cache: Params,
+        last_only: bool = False,
+    ) -> Tuple[jax.Array, Params]:
+        del params
+        tokens = batch["tokens"]  # [B, T]
+        b, t = tokens.shape
+        width = cache["tokens_seen"].shape[1]
+        seen = jax.lax.dynamic_update_slice(
+            cache["tokens_seen"], tokens[:, : min(t, width)], (0, 0)
+        )
+        positions = jnp.arange(t, dtype=jnp.int32)[None, :]
+        logits = self._one_hot(self._next(tokens, positions))
+        if last_only:
+            logits = logits[:, -1:, :]
+        return logits, {"tokens_seen": seen}
+
+    def decode_step(
+        self,
+        params: Params,
+        tokens: jax.Array,     # [B, 1]
+        cache: Params,
+        positions: jax.Array,  # [B]
+        frontend: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Params]:
+        del params, frontend
+        b = tokens.shape[0]
+        width = cache["tokens_seen"].shape[1]
+        idx = jnp.clip(positions, 0, width - 1)
+        seen = cache["tokens_seen"].at[jnp.arange(b), idx].set(tokens[:, 0])
+        logits = self._one_hot(self._next(tokens, positions[:, None]))
+        return logits, {"tokens_seen": seen}

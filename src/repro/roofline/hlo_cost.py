@@ -131,34 +131,36 @@ def _trip_count(cond: _Computation) -> int:
 
 
 def _operand_names(line: str, kind: str) -> List[str]:
+    # Operand lists carry inline shapes ("f32[128,256]{1,0} %x, ...") whose
+    # commas would defeat a naive split — pull out the %name tokens instead.
     m = re.search(re.escape(kind) + r"\(([^)]*)\)", line)
     if not m:
         return []
-    return [
-        tok.strip().lstrip("%")
-        for tok in m.group(1).split(",")
-        if tok.strip().startswith("%")
-    ]
+    return re.findall(r"%([\w.\-]+)", m.group(1))
 
 
 def _dot_flops(line: str, symtab: Dict[str, Tuple[str, str]]) -> int:
-    """2*M*N*K: result elems from the line, K from the lhs operand's shape
-    (operands are referenced by name in optimized HLO — resolve via the
-    computation's symbol table)."""
+    """2*M*N*K: result elems from the line, K from the lhs operand's shape.
+
+    Optimized HLO inlines operand shapes on the op line (shapes[1] is the
+    lhs); fall back to the computation's symbol table when a dialect omits
+    them."""
     shapes = _SHAPE_RE.findall(line)
     if not shapes:
         return 0
     out_elems = _shape_elems(shapes[0][1])
-    operands = _operand_names(line, "dot")
+    lhs: Optional[Tuple[str, str]] = shapes[1] if len(shapes) >= 2 else None
+    if lhs is None:
+        operands = _operand_names(line, "dot")
+        if operands:
+            lhs = symtab.get(operands[0])
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     k = 1
-    if cm and operands:
-        lhs = symtab.get(operands[0])
-        if lhs and lhs[1].strip():
-            lhs_dims = [int(x) for x in lhs[1].split(",")]
-            for idx in cm.group(1).split(","):
-                if idx.strip() and int(idx) < len(lhs_dims):
-                    k *= lhs_dims[int(idx)]
+    if cm and lhs and lhs[1].strip():
+        lhs_dims = [int(x) for x in lhs[1].split(",")]
+        for idx in cm.group(1).split(","):
+            if idx.strip() and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
     return 2 * out_elems * k
 
 
@@ -168,12 +170,12 @@ def _conv_flops(line: str, symtab: Dict[str, Tuple[str, str]]) -> int:
     if not shapes:
         return 0
     out_elems = _shape_elems(shapes[0][1])
-    operands = _operand_names(line, "convolution")
-    kernel_elems = 1
-    if len(operands) >= 2:
-        ker = symtab.get(operands[1])
-        if ker:
-            kernel_elems = _shape_elems(ker[1])
+    kernel: Optional[Tuple[str, str]] = shapes[2] if len(shapes) >= 3 else None
+    if kernel is None:
+        operands = _operand_names(line, "convolution")
+        if len(operands) >= 2:
+            kernel = symtab.get(operands[1])
+    kernel_elems = _shape_elems(kernel[1]) if kernel else 1
     return 2 * out_elems * max(kernel_elems, 1)
 
 

@@ -35,10 +35,24 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     req_id: int = field(default_factory=lambda: next(_req_ids))
-    # filled on completion
+    # SLO hints consumed by the deadline admission policy (core.scheduler);
+    # deadline is absolute time, priority breaks ties (higher = sooner).
+    deadline: Optional[float] = None
+    priority: int = 0
+    # filled on completion; enqueued_at is stamped once, on the first
+    # successful admission — defer-mode retries and Let-It-Crash
+    # re-admissions must not reset the latency clock.
     output: Optional[List[int]] = None
-    enqueued_at: float = 0.0
+    enqueued_at: Optional[float] = None
     completed_at: float = 0.0
+    restarts: int = 0  # times re-admitted after a replica death
+
+    def reset_for_readmission(self) -> "Request":
+        """Back to the not-yet-decoded state (Let-It-Crash re-admission)."""
+        self.output = None
+        self.completed_at = 0.0
+        self.restarts += 1
+        return self
 
 
 class ContinuousBatcher:
@@ -50,15 +64,28 @@ class ContinuousBatcher:
         max_len: int = 128,
         eos_token: int = -1,  # -1: run to max_new_tokens
         temperature: float = 0.0,
+        queue: Optional[Mailbox] = None,
+        prefill_step=None,
+        decode_step=None,
+        name: str = "serve-requests",
     ) -> None:
         self.model = model
         self.params = params
+        self.name = name
         self.slots = slots
         self.max_len = max_len
         self.eos = eos_token
-        self.queue = Mailbox("serve-requests")
-        self.prefill_step = make_prefill_step(model)
-        self.decode_step = make_decode_step(model, temperature)
+        # The queue and the jit'd steps are injectable so a pool of replicas
+        # can share one mailbox namespace and one compiled step (a replica
+        # spawned mid-spike must not pay a retrace: cache shapes are
+        # identical across replicas by construction).
+        self.queue = queue if queue is not None else Mailbox(name)
+        self.prefill_step = prefill_step or make_prefill_step(model)
+        self.decode_step = decode_step or make_decode_step(model, temperature)
+        # Elasticity knob: how many of the static slots admission may fill.
+        # Shapes never change — an occupancy cap below `slots` just leaves
+        # batch rows idle (TPU-friendly elasticity, see module docstring).
+        self.target_occupancy = slots
         self.completed: List[Request] = []
         # slot state
         self.active: List[Optional[Request]] = [None] * slots
@@ -74,7 +101,8 @@ class ContinuousBatcher:
 
     # -- API --------------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> None:
-        req.enqueued_at = now
+        if req.enqueued_at is None:
+            req.enqueued_at = now
         self.queue.put(Message(topic="serve", payload=req, created_at=now))
 
     def queue_depth(self) -> int:
@@ -82,6 +110,13 @@ class ContinuousBatcher:
 
     def occupancy(self) -> int:
         return sum(1 for r in self.active if r is not None)
+
+    def set_target_occupancy(self, n: int) -> None:
+        """Clamp admission to ``n`` of the static slots (0..slots).
+
+        Slots above the target finish their in-flight request and then stay
+        empty — scale-in never cancels running work."""
+        self.target_occupancy = max(0, min(int(n), self.slots))
 
     # -- internals ----------------------------------------------------------
     def _admit(self, slot: int, req: Request) -> None:
@@ -121,13 +156,18 @@ class ContinuousBatcher:
         self.budgets[slot] = 0
 
     def step(self, now: float = 0.0) -> int:
-        """Admit from queue, run one decode step for occupied slots."""
+        """Admit from queue (up to the occupancy target), run one decode
+        step for occupied slots."""
+        occupied = self.occupancy()
         for slot in range(self.slots):
+            if occupied >= self.target_occupancy:
+                break
             if self.active[slot] is None:
                 msg = self.queue.get()
                 if msg is None:
                     break
                 self._admit(slot, msg.payload)
+                occupied += 1
 
         if self.occupancy() == 0:
             return 0

@@ -15,6 +15,8 @@ from repro.models.layers import (
 )
 from repro.models.zoo import build_model
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 K = jax.random.PRNGKey
 
 

@@ -36,6 +36,34 @@ def test_pytree_roundtrip(tmp_path):
     assert loaded["nested"]["b"].dtype == jnp.bfloat16
 
 
+def test_codec_tagged_roundtrip_and_fallback(tmp_path):
+    """Snapshots are codec-tagged: zlib files load regardless of whether
+    zstandard is installed, and asking for zstd without the lib is a clear
+    error instead of a corrupt file."""
+    from repro.checkpoint.store import default_codec, zstd
+
+    t = tree()
+    p_zlib = str(tmp_path / "zl.ckpt")
+    save_pytree(t, p_zlib, meta={"codec": "zlib"}, codec="zlib")
+    loaded, meta = load_pytree(t, p_zlib)
+    assert meta["codec"] == "zlib"
+    assert_tree_equal(t, loaded)
+    with open(p_zlib, "rb") as fh:
+        assert fh.read(4) == b"RLZL"
+    if zstd is not None:
+        p_zstd = str(tmp_path / "zs.ckpt")
+        save_pytree(t, p_zstd, meta={}, codec="zstd")
+        loaded, _ = load_pytree(t, p_zstd)
+        assert_tree_equal(t, loaded)
+        assert default_codec() == "zstd"
+    else:
+        assert default_codec() == "zlib"
+        with pytest.raises(RuntimeError):
+            save_pytree(t, str(tmp_path / "zs.ckpt"), codec="zstd")
+    with pytest.raises(ValueError):
+        save_pytree(t, str(tmp_path / "x.ckpt"), codec="lz4")
+
+
 def test_store_restore_latest_with_journal(tmp_path):
     store = CheckpointStore(str(tmp_path))
     t0, t1 = tree(0), tree(1)

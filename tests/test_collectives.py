@@ -9,6 +9,10 @@ import textwrap
 
 from repro.distributed.collectives import wire_bytes_ring_all_reduce
 
+import pytest
+
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _PROGRAM = textwrap.dedent("""

@@ -4,8 +4,7 @@ State-based CRDTs must form a join-semilattice: merge commutative,
 associative, idempotent; local updates monotone. Convergence follows.
 """
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_support import given, settings, st  # noqa: F401
 
 from repro.core.crdt import (
     GCounter,
@@ -181,6 +180,22 @@ def test_vclock_commutative(a, b):
 @given(a=vclocks(), b=vclocks(), c=vclocks())
 def test_vclock_associative(a, b, c):
     assert _value(a.merge(b).merge(c)) == _value(a.merge(b.merge(c)))
+
+
+# --- smoke (no hypothesis needed) ---------------------------------------------
+
+
+def test_semilattice_laws_smoke():
+    """Deterministic spot-check of the merge laws; runs even when the
+    property suite above is skipped for lack of hypothesis."""
+    a, b, c = GCounter("r0"), GCounter("r1"), GCounter("r2")
+    a.increment(3)
+    b.increment(5)
+    c.increment(7)
+    assert a.merge(b).value() == b.merge(a).value() == 8
+    assert a.merge(b).merge(c).value() == a.merge(b.merge(c)).value() == 15
+    assert a.merge(a).value() == a.value() == 3
+    assert merge_all([a, b, c]).value() == 15
 
 
 # --- behavioural properties ---------------------------------------------------

@@ -7,6 +7,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _PROGRAM = textwrap.dedent("""

@@ -2,12 +2,11 @@
 swept over shapes and dtypes, plus hypothesis property tests on the
 kernels' invariants."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_support import given, settings, st
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
@@ -81,6 +80,18 @@ def test_flash_attention_q_offset_decode_chunk():
 def test_flash_attention_rows_sum_to_one_property(t, h, seed):
     """Softmax property: with v = identity-ish all-ones, output rows == 1."""
     ks = jax.random.split(K(seed), 2)
+    q = jax.random.normal(ks[0], (1, t, h, 64))
+    k = jax.random.normal(ks[1], (1, t, h, 64))
+    v = jnp.ones((1, t, h, 64))
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_rows_sum_to_one_smoke():
+    """Single-seed version of the softmax property; runs without hypothesis."""
+    ks = jax.random.split(K(11), 2)
+    t, h = 128, 2
     q = jax.random.normal(ks[0], (1, t, h, 64))
     k = jax.random.normal(ks[1], (1, t, h, 64))
     v = jnp.ones((1, t, h, 64))

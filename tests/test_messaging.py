@@ -2,9 +2,8 @@
 limit, and the Reactive decoupling that removes it (the paper's core claim
 at the mechanism level)."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_support import given, settings, st
 
 from repro.core.messages import Mailbox, MailboxOverflow, Message, MessageBus
 from repro.core.scheduler import (
@@ -230,6 +229,16 @@ def test_jsq_balances_better_than_rr_with_heterogeneous_drain(n, msgs, seed):
         return boxes[stuck].depth()
 
     assert run(JoinShortestQueueScheduler()) <= run(RoundRobinScheduler())
+
+
+def test_pow2_prefers_shorter_queue_smoke():
+    """Deterministic pow2 check; runs without hypothesis."""
+    s = PowerOfTwoScheduler(seed=0)
+    qs = [_Q(50), _Q(0), _Q(50), _Q(50)]
+    picks = [s.pick(qs) for _ in range(32)]
+    assert all(0 <= i < 4 for i in picks)
+    # whenever queue 1 is sampled it wins; over 32 picks it must show up
+    assert picks.count(1) > 0
 
 
 def test_make_scheduler_registry():

@@ -10,6 +10,8 @@ import pytest
 from repro.config import get_arch, list_archs
 from repro.models.zoo import build_model
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 ARCHS = [
     "gemma3-4b",
     "minicpm-2b",

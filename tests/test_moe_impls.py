@@ -18,6 +18,8 @@ from repro.models.moe import (
 from repro.config import get_arch
 from repro.models.zoo import build_model
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 
 def setup(e=4, k=2, d=32, ff=64, cap_factor=0.0, seed=0):
     from repro.config.base import ArchConfig

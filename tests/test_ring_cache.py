@@ -10,6 +10,8 @@ import pytest
 from repro.config import get_arch
 from repro.models.zoo import build_model
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 
 @pytest.mark.parametrize("arch", ["mixtral-8x7b", "gemma3-4b"])
 def test_ring_cache_decode_matches_linear(arch):

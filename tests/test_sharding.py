@@ -12,6 +12,8 @@ import pytest
 
 from repro.config import get_arch
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

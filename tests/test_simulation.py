@@ -12,6 +12,8 @@ from repro.core.simulation import (
     simulate_reactive,
 )
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 # Backlog must outlast the run (as in the paper, which streams a large
 # dataset): Liquid drains ~160k in 600s, Reactive ~2x that.
 WL = WorkloadConfig(total_messages=400_000, partitions=3)

@@ -1,8 +1,7 @@
 """Event-sourcing properties: replay determinism, snapshot equivalence,
 idempotent redelivery, file-backed crash recovery."""
 
-import hypothesis.strategies as st
-from hypothesis import given
+from _hypothesis_support import given, st
 
 from repro.core.state import Event, EventJournal, EventSourcedState, dict_reducer
 
@@ -57,6 +56,22 @@ def test_compaction_preserves_state(batch):
     dropped = s.compact()
     assert dropped == len(batch)
     assert s.replay() == before
+
+
+def test_replay_determinism_smoke():
+    """Deterministic replay check; runs even without hypothesis."""
+    batch = [
+        ("set", {"key": "a", "value": 1}),
+        ("incr", {"key": "a", "amount": 2}),
+        ("del", {"key": "b"}),
+    ]
+    s1 = EventSourcedState({}, dict_reducer)
+    s2 = EventSourcedState({}, dict_reducer)
+    for kind, data in batch:
+        s1.record(kind, data)
+        s2.record(kind, data)
+    assert s1.state == s2.state == {"a": 3}
+    assert s1.replay() == s2.replay()
 
 
 def test_idempotent_redelivery():

@@ -16,6 +16,8 @@ from repro.training.grad_compress import (
 from repro.training.optimizer import adamw_init, adamw_update, lr_schedule
 from repro.training.train_step import init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # heavy sweep/compile module: excluded from tier-1
+
 
 def small_model():
     return build_model(get_arch("llama3.2-1b", smoke=True), compute_dtype=jnp.float32)
