@@ -1,7 +1,8 @@
-"""Reactive serving study: admission policy x tail latency, and the
-elastic occupancy loop under a traffic spike.
+"""Reactive serving study: admission policy x tail latency, the elastic
+occupancy loop under a traffic spike, and direct-ingress vs log-backed
+admission under chaos.
 
-Two tables:
+Three tables:
 
   * ``serving_policy_sweep`` — an open-loop bursty arrival trace (Poisson
     base rate with a spike window) against a fixed-capacity pool with one
@@ -15,6 +16,12 @@ Two tables:
     rides up to the cap across the spike (spawning a second replica) and
     drains back down after it.  ``tests/test_serving_elastic.py`` asserts
     this shape; the bench reports the actual trace.
+  * ``serving_modes`` — the same bursty trace with a mid-spike chaos
+    kill, admitted (a) directly into the pool ingress and (b) through
+    the durable ``requests`` topic + virtual consumer group
+    (``ServingJob``).  Reports p50/p99 completion, throughput, and
+    restart counts per mode — the regression baseline that
+    ``BENCH_serving.json`` freezes for future PRs.
 
 Stub-model decode (arithmetic next-token rule) keeps a full sweep under
 ~30 s on CPU while preserving real queueing dynamics: every request still
@@ -30,7 +37,7 @@ import numpy as np
 
 from repro.core.elastic import AutoscalerConfig
 from repro.models.stub import StubModel
-from repro.serving import ElasticServingPool, Request
+from repro.serving import ElasticServingPool, Request, ServingJob
 
 POLICIES = ("fcfs", "jsq", "pow2")
 SEEDS = (0, 1, 2)
@@ -94,6 +101,56 @@ def policy_run(
         "p99": float(np.percentile(lat, 99)),
         "mean": float(lat.mean()),
         "wall_ticks": wall,
+    }
+
+
+def mode_run(model, params, mode: str, seed: int = 0,
+             kill_at: int = 100) -> Dict:
+    """One bursty run with a mid-spike chaos kill, in `direct` or `log`
+    admission mode, over an identical autoscaled pool."""
+    pool_kwargs = dict(
+        slots_per_replica=4, max_replicas=2, initial_units=1,
+        policy="jsq", heartbeat_timeout=3.0,
+    )
+    if mode == "log":
+        job = ServingJob(model, params, partitions=2, **pool_kwargs)
+        pool = job.pool
+        submit = lambda r, t: job.submit(r, now=t)        # noqa: E731
+        step, idle = job.step, lambda: job.pending() == 0  # noqa: E731
+    else:
+        job = None
+        pool = ElasticServingPool(model, params, **pool_kwargs)
+        submit = lambda r, t: pool.submit(r, now=t)        # noqa: E731
+        step = pool.step
+        idle = lambda: pool.queue_depth() == 0 and pool.occupancy() == 0  # noqa: E731
+
+    arrivals = bursty_trace(seed)
+    i, t, killed = 0, 0, False
+    while i < len(arrivals) or not idle():
+        while i < len(arrivals) and arrivals[i][0] <= t:
+            _, prompt, n_tok = arrivals[i]
+            submit(Request(prompt=prompt, max_new_tokens=n_tok), float(t))
+            i += 1
+        if t == kill_at and pool.replicas and not killed:
+            pool.kill_replica(0)
+            killed = True
+        step(float(t))
+        t += 1
+        if t >= 5000:
+            break
+    lat = _completions(pool)
+    return {
+        "table": "serving_modes",
+        "mode": mode,
+        "completed": len(pool.completed),
+        "durable_responses": len(job.responses()) if job else None,
+        "p50_ticks": round(float(np.percentile(lat, 50)), 1),
+        "p99_ticks": round(float(np.percentile(lat, 99)), 1),
+        "throughput_req_per_tick": round(len(pool.completed) / t, 3),
+        "wall_ticks": t,
+        "restarts": pool.metrics.value("serve.replica_restarts"),
+        "readmitted": pool.metrics.value("serve.readmitted"),
+        "scale_events": len(pool.controller.scale_events),
     }
 
 
@@ -163,6 +220,10 @@ def run() -> List[Dict]:
             "occupancy": occ,
             "replicas": n_rep,
         })
+
+    # --- direct ingress vs the durable requests topic, under chaos -------
+    for mode in ("direct", "log"):
+        rows.append(mode_run(model, params, mode))
     return rows
 
 

@@ -10,14 +10,22 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT]
 Prints one CSV-ish line per result row: ``table,key=value,...``.
+
+Whenever the serving bench runs, its rows are also frozen to
+``BENCH_serving.json`` at the repo root (p50/p99 latency, throughput,
+restarts for direct-ingress vs log-backed admission) — the perf baseline
+future PRs regress against.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _fmt(row: dict) -> str:
@@ -64,7 +72,14 @@ def main() -> None:
         for row in rows:
             print(_fmt(row), flush=True)
         all_rows.extend(rows)
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        elapsed = time.time() - t0
+        print(f"# {name} done in {elapsed:.1f}s", flush=True)
+        if name == "serving":
+            out = os.path.join(_REPO_ROOT, "BENCH_serving.json")
+            with open(out, "w") as fh:
+                json.dump({"bench": "serving", "wall_s": round(elapsed, 1),
+                           "rows": rows}, fh, indent=1)
+            print(f"# serving baseline written to {out}", flush=True)
 
     if args.json:
         with open(args.json, "w") as fh:

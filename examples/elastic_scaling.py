@@ -57,7 +57,7 @@ def main() -> None:
 
     print(f"\npeak pool size: {max(sizes)} (started at 2)")
     print(f"final pool size after drain: {len(job.tasks)}")
-    print(f"scale events: {len(job.pool.scale_events)}")
+    print(f"scale events: {len(job.pool.controller.scale_events)}")
     assert max(sizes) > 2, "should have scaled out under the bursts"
     assert len(job.tasks) < max(sizes), "should have scaled back in"
     print("OK")

@@ -7,6 +7,9 @@ route to replicas via a load-aware admission policy (JSQ by default).
 Run:  PYTHONPATH=src python examples/serve_lm.py
 Try:  PYTHONPATH=src python examples/serve_lm.py --stub --spike \
           --requests 120 --kill-replica 0      # chaos drill, instant
+      PYTHONPATH=src python examples/serve_lm.py --stub --spike \
+          --requests 120 --log-backed          # same traffic through the
+                                               # durable requests topic
 """
 
 import sys

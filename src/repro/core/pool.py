@@ -1,0 +1,575 @@
+"""The reactive control plane, extracted (paper §3.2.2–§3.2.4).
+
+One generic ``ElasticPool``: a supervised, autoscaled pool of mailbox-fed
+workers.  Before this module existed the repo carried three hand-rolled
+copies of the same loop — ``ReactiveJob``'s task pool, the serving
+layer's ``ElasticServingPool``, and the virtual producer pool — each with
+its own spawn/retire/drain/restart code.  They are now thin policy shims
+over this runtime (the discrete-event simulator in ``core.simulation``
+deliberately re-implements the loop over *virtual* time; it shares the
+policy objects — autoscaler, schedulers, detectors — not this actuator).
+
+What the pool owns:
+
+  * **Admission** — an optional central ingress ``Mailbox`` (bounded =
+    backpressure) with a shed-or-defer overflow policy and a
+    rejected-demand feedback counter, so turned-away load still reaches
+    the autoscaler (otherwise backpressure would suppress exactly the
+    scale-out that could relieve it); plus a pluggable message-
+    distribution ``Scheduler`` that orders dispatch batches and routes
+    each message to a worker mailbox.
+  * **Elasticity** — a ``WorkerPoolController`` targets a *unit* count
+    (``units_per_worker`` maps units to per-worker capacity caps via
+    ``split_units``; with one unit per worker the unit count is just the
+    worker count).  Scale-in either redistributes the victim's mailbox to
+    the survivors (``retire_mode="redistribute"``) or marks the victim
+    draining and reaps it once empty (``retire_mode="drain"`` — running
+    work is never cancelled).
+  * **Supervision** — heartbeat-detected Let-It-Crash restarts: a dead
+    worker's queued *and* in-flight messages are re-admitted (at the
+    front — accepted work overtakes new arrivals and is never shed) and a
+    fresh instance takes its place.  Redelivery is at-least-once; workers
+    that need exactly-once effects dedup by ``msg_id`` (``DedupWindow``).
+  * **Telemetry** — every worker carries a CRDT ``MetricsReplica``; when
+    a worker retires or is restarted its replica is folded into the
+    pool's graveyard replica, so ``merged_metrics()`` is lossless across
+    any number of chaos kills and merges into a ``MetricsHub`` without
+    coordination.
+
+Overflow-safe redistribution (the scale-in crash fix): every drain path
+delivers with ``try_put`` first, spills to the least-loaded candidate,
+and as a last resort ``put_front``-requeues — a bounded mailbox may
+briefly exceed its bound, but accepted work is never dropped and scale-in
+can no longer raise ``MailboxOverflow`` mid-drain.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace as dc_replace
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+
+from repro.core.elastic import (
+    AutoscalerConfig,
+    WorkerPoolController,
+    split_units,
+)
+from repro.core.messages import Mailbox, Message
+from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.supervision import HeartbeatDetector, Supervisor
+from repro.telemetry.metrics import MetricsReplica
+
+
+class PoolWorker(Protocol):
+    """What ``ElasticPool`` needs from a worker (duck-typed).
+
+    ``WorkerBase`` provides defaults; ``ElasticBatcher`` satisfies it
+    structurally.  ``mailbox`` is the worker's feed queue; ``load()`` is
+    the routing signal (queued + in-flight); ``inflight()`` feeds the
+    pool occupancy gauge; ``drain_for_readmission()`` must strip
+    *everything* the worker holds — queued and in-flight — as Messages.
+    """
+
+    name: str
+    alive: bool
+    draining: bool
+    mailbox: Mailbox
+    metrics: MetricsReplica
+
+    def step(self, now: float) -> int: ...
+    def load(self) -> int: ...
+    def inflight(self) -> int: ...
+    def drain_for_readmission(self) -> List[Message]: ...
+    def set_capacity(self, cap: int) -> None: ...
+    def get_capacity(self) -> Optional[int]: ...
+
+
+class WorkerBase:
+    """Default plumbing for pool workers: alive/draining flags, mailbox-
+    backed load, no in-flight state, capacity as a no-op."""
+
+    def __init__(self, name: str, mailbox: Optional[Mailbox] = None,
+                 mailbox_capacity: int = 0) -> None:
+        self.name = name
+        self.mailbox = mailbox or Mailbox(name, capacity=mailbox_capacity)
+        self.alive = True
+        self.draining = False
+        self.metrics = MetricsReplica(name)
+
+    def step(self, now: float) -> int:  # pragma: no cover - interface default
+        return 0
+
+    def load(self) -> int:
+        return self.mailbox.depth()
+
+    def inflight(self) -> int:
+        return 0
+
+    def drain_for_readmission(self) -> List[Message]:
+        return list(self.mailbox.drain())
+
+    def set_capacity(self, cap: int) -> None:
+        pass
+
+    def get_capacity(self) -> Optional[int]:
+        return None
+
+    def kill(self) -> str:
+        """Chaos hook: silence the worker (stops stepping AND
+        heartbeating) — what a wedged process looks like from the
+        supervisor's side."""
+        self.alive = False
+        return self.name
+
+
+class DedupWindow:
+    """Bounded seen-set for exactly-once *effects* over at-least-once
+    delivery: Let-It-Crash re-admission may redeliver, the window skips
+    duplicates.  Insertion-ordered; overflow drops the oldest half."""
+
+    def __init__(self, window: int = 65536) -> None:
+        self.window = window
+        self._seen: Dict[Any, None] = {}
+
+    def seen(self, key: Any) -> bool:
+        """Record ``key``; True if it was already recorded."""
+        if key in self._seen:
+            return True
+        self._seen[key] = None
+        if len(self._seen) > self.window:
+            for k in list(self._seen)[: self.window // 2]:
+                del self._seen[k]
+        return False
+
+    def __len__(self) -> int:
+        return len(self._seen)
+
+
+class ElasticPool:
+    """Supervised, autoscaled pool of mailbox-fed workers.
+
+    Feed paths (pick per deployment):
+      * ``offer(msg)``   — central bounded ingress, shed/defer overflow;
+        a ``step`` later dispatches to worker mailboxes per the scheduler
+        (the serving pattern);
+      * ``route(msg)``   — immediate scheduler-routed delivery into a
+        worker mailbox, no central ingress (the producer-pool pattern);
+      * ``mailboxes()``  — expose worker mailboxes to an *external*
+        forwarder such as a ``VirtualConsumerGroup`` (the ReactiveJob
+        pattern: the virtual messaging layer is the dispatcher).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        worker_factory: Callable[[], Any],
+        *,
+        scheduler: "str | Scheduler" = "round_robin",
+        initial_units: int = 1,
+        units_per_worker: int = 1,
+        max_workers: Optional[int] = None,
+        autoscaler: Optional[AutoscalerConfig] = None,
+        elastic: bool = True,
+        reconcile_on: str = "always",      # or "delta": only on scale decisions
+        supervisor: Optional[Supervisor] = None,
+        heartbeat_timeout: float = 5.0,
+        ingress_capacity: Optional[int] = None,  # None: no central ingress
+        ingress_name: Optional[str] = None,
+        overflow: str = "shed",            # "shed" drops, "defer" asks retry
+        dispatch_batch: int = 32,
+        retire_mode: str = "redistribute",  # or "drain"
+        collect: Optional[Callable[[float], None]] = None,
+        metrics: Optional[MetricsReplica] = None,
+        metric_prefix: str = "pool",
+        worker_noun: str = "worker",
+    ) -> None:
+        if overflow not in ("shed", "defer"):
+            raise ValueError(f"overflow must be 'shed' or 'defer', got {overflow!r}")
+        if retire_mode not in ("redistribute", "drain"):
+            raise ValueError(f"retire_mode must be 'redistribute' or 'drain'")
+        self.name = name
+        self.worker_factory = worker_factory
+        self.scheduler: Scheduler = (
+            make_scheduler(scheduler) if isinstance(scheduler, str) else scheduler
+        )
+        self.units_per_worker = max(int(units_per_worker), 1)
+        self.elastic = elastic
+        self.reconcile_on = reconcile_on
+        self.overflow = overflow
+        self.dispatch_batch = dispatch_batch
+        self.retire_mode = retire_mode
+        self.collect = collect
+        self.supervisor = supervisor or Supervisor(f"{name}-supervisor")
+        self.heartbeat_timeout = heartbeat_timeout
+        self.ingress: Optional[Mailbox] = None
+        if ingress_capacity is not None:
+            self.ingress = Mailbox(
+                ingress_name or f"{name}-ingress", capacity=ingress_capacity
+            )
+        self._px = metric_prefix
+        self._noun = worker_noun
+        self.metrics = metrics or MetricsReplica(name)
+        # Dead/retired workers fold their replicas here — the lossless
+        # half of merged_metrics() that survives any chaos kill.
+        self.graveyard = MetricsReplica(f"{name}-graveyard")
+
+        cfg = autoscaler or AutoscalerConfig()
+        max_units = (max_workers if max_workers is not None else cfg.max_workers)
+        max_units = max(max_units, 1) * self.units_per_worker
+        cfg = dc_replace(
+            cfg,
+            min_workers=max(cfg.min_workers, 1),
+            max_workers=min(cfg.max_workers, max_units),
+            max_step=min(cfg.max_step, max_units),
+        )
+        self._max_units = cfg.max_workers
+        self.controller = WorkerPoolController(
+            min(max(initial_units, 1), max_units), cfg
+        )
+
+        self.workers: List[Any] = []
+        self.shed: List[Message] = []
+        self.steps = 0
+        self._now = 0.0  # last step time; seeds detectors for new workers
+        # Rejections since the last autoscaler observation: a bounded
+        # ingress caps the queue-depth signal, so shed/deferred demand
+        # must reach the controller some other way or backpressure would
+        # suppress the very scale-out that could relieve it.
+        self._rejected_since_observe = 0
+        # (now, target_units, occupancy, active_workers) per step — the
+        # elasticity trace tests and benches assert against.
+        self.occupancy_log: List[tuple] = []
+        self._reconcile(now=0.0)
+
+    # -- admission -----------------------------------------------------------
+    def offer(self, msg: Message) -> bool:
+        """Admit into the central ingress.  False when backpressure
+        rejects it: ``shed`` drops it for good (recorded), ``defer``
+        means the caller owns the retry."""
+        assert self.ingress is not None, "pool has no central ingress"
+        if self.ingress.try_put(msg):
+            self.metrics.incr(f"{self._px}.admitted")
+            return True
+        self._rejected_since_observe += 1
+        if self.overflow == "shed":
+            self.shed.append(msg)
+            self.metrics.incr(f"{self._px}.shed")
+        else:
+            self.metrics.incr(f"{self._px}.deferred")
+        return False
+
+    def route(self, msg: Message) -> None:
+        """Scheduler-routed direct delivery (no central ingress).  With
+        every worker dead or draining, delivery falls back to *any*
+        worker's mailbox — the message waits there for the supervisor's
+        restart drain rather than being lost (or crashing the sender)."""
+        workers = self.active_workers() or self.workers
+        boxes = [w.mailbox for w in workers]
+        idx = self.scheduler.pick_msg(msg, boxes) if boxes else 0
+        self._force_deliver(msg, boxes, idx)
+        self.metrics.incr(f"{self._px}.admitted")
+
+    def note_rejected(self, n: int = 1) -> None:
+        """Report offered demand the pool could not see in its queues
+        (e.g. backlog parked upstream in a message log behind a full
+        ingress) so the next autoscaler observation scales for it."""
+        self._rejected_since_observe += max(int(n), 0)
+
+    def mailboxes(self) -> List[Mailbox]:
+        """Active workers' mailboxes, for external forwarders (VCGs)."""
+        return [w.mailbox for w in self.workers if w.alive and not w.draining]
+
+    # -- introspection ---------------------------------------------------------
+    def queue_depth(self) -> int:
+        depth = self.ingress.depth() if self.ingress is not None else 0
+        return depth + sum(w.mailbox.depth() for w in self.workers)
+
+    def occupancy(self) -> int:
+        # Dead workers count too: their in-flight work is trapped until
+        # the supervisor re-admits it, and drain loops must not conclude
+        # the system is idle while work is trapped.
+        return sum(w.inflight() for w in self.workers)
+
+    def target_units(self) -> int:
+        return self.controller.target_size
+
+    def active_workers(self) -> List[Any]:
+        return [w for w in self.workers if w.alive and not w.draining]
+
+    def counter(self, name: str) -> int:
+        return self.merged_metrics().value(name)
+
+    def merged_metrics(self) -> MetricsReplica:
+        """Pool + graveyard + live worker replicas, merged (lossless:
+        every counter is a per-worker GCounter and worker names are never
+        reused)."""
+        out = self.metrics.merge(self.graveyard)
+        for w in self.workers:
+            out = out.merge(w.metrics)
+        return out
+
+    # -- chaos hook ------------------------------------------------------------
+    def kill_worker(self, index: int = 0) -> str:
+        """Silence worker ``index``; the supervisor detects the missed
+        heartbeats and re-admits everything the worker held."""
+        worker = self.workers[index % len(self.workers)]
+        self.metrics.incr(f"{self._px}.{self._noun}_kills")
+        if hasattr(worker, "kill"):
+            return worker.kill()
+        worker.alive = False
+        return worker.name
+
+    # -- internals -------------------------------------------------------------
+    def _spawn(self) -> Any:
+        worker = self.worker_factory()
+        if getattr(worker, "metrics", None) is None:
+            worker.metrics = MetricsReplica(worker.name)
+        self.workers.append(worker)
+        self._supervise(worker)
+        self.metrics.incr(f"{self._px}.{self._noun}_spawns")
+        return worker
+
+    def _supervise(self, worker: Any) -> None:
+        self.supervisor.supervise(
+            worker.name,
+            restart=lambda w=worker: self._restart_worker(w),
+            detector=HeartbeatDetector(self.heartbeat_timeout),
+        )
+        # Seed the detector: an unseeded HeartbeatDetector never suspects
+        # (last_beat=None), so a worker killed before its first step
+        # would trap its messages forever.
+        self.supervisor.heartbeat(worker.name, self._now)
+
+    def _fold(self, worker: Any) -> None:
+        """Fold a departing worker's CRDT replica into the graveyard so
+        its counters survive the instance (restart-proof telemetry)."""
+        metrics = getattr(worker, "metrics", None)
+        if metrics is not None:
+            self.graveyard = self.graveyard.merge(metrics)
+
+    def _force_deliver(
+        self, msg: Message, boxes: Sequence[Mailbox], preferred: int
+    ) -> None:
+        """Overflow-safe delivery: try the preferred mailbox, spill to the
+        least-loaded, and as a last resort put_front-requeue (briefly
+        exceeding a bound beats dropping accepted work)."""
+        if not boxes:
+            if self.ingress is not None:
+                self.ingress.put_front(msg)
+                return
+            raise RuntimeError(f"pool {self.name!r} has no workers to deliver to")
+        if boxes[preferred].try_put(msg):
+            return
+        j = min(range(len(boxes)), key=lambda b: boxes[b].depth())
+        if j != preferred and boxes[j].try_put(msg):
+            return
+        boxes[j].put_front(msg)
+
+    def _readmit(self, msgs: Sequence[Message]) -> None:
+        """Front of the ingress, original order preserved: a victim's
+        work overtakes new arrivals and is never shed (put_front ignores
+        the capacity bound — losing accepted work is worse than briefly
+        exceeding it)."""
+        assert self.ingress is not None
+        for msg in reversed(list(msgs)):
+            self.ingress.put_front(msg)
+        if msgs:
+            self.metrics.incr(f"{self._px}.readmitted", len(msgs))
+
+    def _restart_worker(self, worker: Any) -> None:
+        """Let-It-Crash: strip everything the victim held, swap in a
+        fresh instance (draining victims are not replaced — they were
+        leaving), re-admit the work."""
+        if worker not in self.workers:
+            return  # already replaced by an earlier restart
+        msgs = list(worker.drain_for_readmission())
+        worker.alive = False
+        self._fold(worker)
+        self.supervisor.unsupervise(worker.name)
+        idx = self.workers.index(worker)
+        if worker.draining:
+            self.workers.pop(idx)
+            if msgs:
+                if self.ingress is not None:
+                    self._readmit(msgs)
+                else:
+                    self._redistribute(msgs)
+            return
+        fresh = self.worker_factory()
+        if getattr(fresh, "metrics", None) is None:
+            fresh.metrics = MetricsReplica(fresh.name)
+        cap = worker.get_capacity() if hasattr(worker, "get_capacity") else None
+        if cap is not None:
+            fresh.set_capacity(cap)
+        self.workers[idx] = fresh
+        self._supervise(fresh)
+        if self.ingress is not None:
+            self._readmit(msgs)
+        else:
+            # Pending mailbox moves to the fresh instance; overflow (the
+            # old box may have been bound-exceeded by prior put_fronts)
+            # spills to the other survivors instead of crashing.
+            others = [
+                w.mailbox for w in self.workers
+                if w is not fresh and w.alive and not w.draining
+            ]
+            for msg in msgs:
+                if fresh.mailbox.try_put(msg):
+                    continue
+                self._force_deliver(msg, others or [fresh.mailbox], 0)
+            if msgs:
+                self.metrics.incr(f"{self._px}.readmitted", len(msgs))
+        self.metrics.incr(f"{self._px}.{self._noun}_restarts")
+
+    def _redistribute(self, msgs: Sequence[Message]) -> None:
+        """Scale-in drain: scheduler-route a victim's messages to the
+        survivors, overflow-safe (the fix for the bounded-mailbox
+        scale-in crash: try_put, spill to least-loaded, put_front)."""
+        boxes = [w.mailbox for w in self.active_workers()]
+        for msg in msgs:
+            idx = self.scheduler.pick_msg(msg, boxes) if boxes else 0
+            self._force_deliver(msg, boxes, idx)
+
+    def _retire_one(self, active: List[Any]) -> None:
+        victim = min(active, key=lambda w: w.load())
+        active.remove(victim)
+        if self.retire_mode == "drain":
+            # Takes no new work; reaped once empty. Running work is
+            # never cancelled.
+            victim.draining = True
+            self.metrics.incr(f"{self._px}.{self._noun}_draining")
+            return
+        self.workers.remove(victim)
+        victim.alive = False
+        self._fold(victim)
+        self.supervisor.unsupervise(victim.name)
+        self._redistribute(list(victim.drain_for_readmission()))
+        self.metrics.incr(f"{self._px}.{self._noun}_retired")
+
+    def _reap_drained(self) -> None:
+        for worker in [w for w in self.workers if w.draining]:
+            if worker.load() == 0 and worker.inflight() == 0:
+                self.workers.remove(worker)
+                self._fold(worker)
+                self.supervisor.unsupervise(worker.name)
+                self.metrics.incr(f"{self._px}.{self._noun}_retired")
+
+    def _reconcile(self, now: float) -> None:
+        """Move the worker set toward the controller's unit target:
+        units -> per-worker capacity caps via split_units (fill a worker
+        before spawning the next)."""
+        del now
+        units = min(max(self.controller.target_size, 1), self._max_units)
+        plan = split_units(units, self.units_per_worker)
+        active = self.active_workers()
+        while len(active) < len(plan):
+            # Scale-out reclaims a draining worker before spawning: it is
+            # warm, and spawning alongside it would briefly exceed the
+            # pool's compute/memory budget.
+            draining = [w for w in self.workers if w.alive and w.draining]
+            if draining:
+                revived = max(draining, key=lambda w: w.load())
+                revived.draining = False
+                active.append(revived)
+                self.metrics.incr(f"{self._px}.{self._noun}_revived")
+                continue
+            active.append(self._spawn())
+        while len(active) > len(plan) and len(active) > 1:
+            self._retire_one(active)
+        # Largest caps to the most loaded workers: their queues drain first.
+        for worker, cap in zip(sorted(active, key=lambda w: -w.load()), plan):
+            worker.set_capacity(cap)
+
+    def set_target_units(self, units: int) -> None:
+        """Manual scaling (elastic=False pools, e.g. producer resize)."""
+        cfg = self.controller.autoscaler.config
+        self.controller.target_size = min(
+            max(units, cfg.min_workers), cfg.max_workers
+        )
+        self._reconcile(self._now)
+
+    def _dispatch(self) -> int:
+        """Move ingress messages to worker mailboxes per the admission
+        policy.  Full worker queues push work back into the ingress
+        (deferral): the backlog stays where the autoscaler watches it."""
+        assert self.ingress is not None
+        active = self.active_workers()
+        if not active:
+            return 0
+        boxes = [w.mailbox for w in active]
+        if all(b.capacity > 0 and b.depth() >= b.capacity for b in boxes):
+            return 0  # saturated: don't churn the ingress for nothing
+        batch: List[Message] = []
+        while len(batch) < self.dispatch_batch:
+            msg = self.ingress.get()
+            if msg is None:
+                break
+            batch.append(msg)
+        moved = 0
+        leftover: List[Message] = []
+        ordered = self.scheduler.order(batch)
+        for pos, msg in enumerate(ordered):
+            i = self.scheduler.pick_msg(msg, boxes)
+            if boxes[i].try_put(msg):
+                moved += 1
+                continue
+            j = min(range(len(boxes)), key=lambda b: boxes[b].depth())
+            if j != i and boxes[j].try_put(msg):
+                moved += 1
+                continue
+            # The min-depth queue rejected, so every queue is full —
+            # nothing later in the batch can land either.
+            leftover.extend(ordered[pos:])
+            break
+        for msg in reversed(leftover):
+            self.ingress.put_front(msg)
+        return moved
+
+    # -- main loop ---------------------------------------------------------------
+    def step(self, now: float = 0.0) -> int:
+        """One pool round: reap drained, dispatch, step workers, collect,
+        supervise, autoscale.  Returns total work units done."""
+        self._now = max(self._now, now)
+        if self.retire_mode == "drain":
+            self._reap_drained()
+        if self.ingress is not None:
+            self._dispatch()
+        worked = 0
+        for worker in self.workers:
+            if worker.alive:
+                worked += worker.step(now)
+        if self.collect is not None:
+            # Harvest finished outputs BEFORE supervision: the restart
+            # path replaces the worker object, and anything harvestable
+            # must be off it by then.
+            self.collect(now)
+        for worker in self.workers:
+            if worker.alive:
+                self.supervisor.heartbeat(worker.name, now)
+        self.supervisor.check(now)
+        # Elasticity: offered load drives the unit target — queued
+        # backlog plus the demand a bounded ingress turned away since the
+        # last observation.
+        if self.ingress is not None:
+            signal = self.queue_depth() + self._rejected_since_observe
+            self._rejected_since_observe = 0
+            units = max(self.controller.target_size, 1)
+            depths: Sequence[float] = [signal / units] * units
+        else:
+            depths = [w.mailbox.depth() for w in self.workers]
+            signal = sum(depths)
+        if self.elastic:
+            decision, _ = self.controller.observe(depths, now=now)
+            if decision.delta > 0:
+                self.metrics.incr(f"{self._px}.scale_out")
+            elif decision.delta < 0:
+                self.metrics.incr(f"{self._px}.scale_in")
+            if self.reconcile_on == "always" or decision.delta != 0:
+                self._reconcile(now)
+        self.metrics.gauge(f"{self._px}.queue_depth", signal, timestamp=now)
+        self.metrics.gauge(f"{self._px}.occupancy", self.occupancy(), timestamp=now)
+        self.occupancy_log.append(
+            (now, self.controller.target_size, self.occupancy(),
+             len(self.active_workers()))
+        )
+        self.steps += 1
+        return worked

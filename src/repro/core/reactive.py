@@ -5,25 +5,29 @@ Wires the five layers together over real messages:
   messaging layer (``repro.data.topics``)
     → virtual messaging layer (``VirtualConsumerGroup`` / producer pool)
       → asynchronous messaging layer (task ``Mailbox``es)
-        → processing layer (``ReactiveTask`` pool, elastic)
+        → processing layer (``core.pool.ElasticPool`` of ``ReactiveTask``s)
   with the reactive processing layer's three services — supervision,
   elastic workers, event-sourced state — attached.
 
-This is the step-driven implementation used by tests, the TCMM app, the
-training data pipeline, and the failure-drill example.  The thread-backed
-variant lives in ``repro.core.runtime``; the timing model for the paper's
-figures in ``repro.core.simulation``.
+The spawn/retire/drain/restart/heartbeat machinery lives in the shared
+``ElasticPool`` runtime; this module is the *policy shim* that binds it
+to a topic: virtual consumers forward into the pool's task mailboxes and
+task outputs publish through the virtual producer pool.  The serving
+layer rides the identical runtime (``repro.serving.elastic``), as does
+the log-backed serving job (``repro.serving.job``).  The thread-backed
+variant lives in ``repro.core.runtime``; the timing model for the
+paper's figures in ``repro.core.simulation``.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
-from repro.core.elastic import AutoscalerConfig, WorkerPoolController
-from repro.core.messages import Mailbox, Message
-from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.elastic import AutoscalerConfig
+from repro.core.messages import Message
+from repro.core.pool import DedupWindow, ElasticPool, WorkerBase
+from repro.core.scheduler import make_scheduler
 from repro.core.state import EventJournal
 from repro.core.supervision import HeartbeatDetector, Supervisor
 from repro.core.virtual_messaging import VirtualConsumerGroup, VirtualProducerGroup
@@ -32,19 +36,32 @@ from repro.data.topics import MessageLog, Topic
 ProcessFn = Callable[[Message], List[Any]]
 
 
-@dataclass
 class ReactiveTaskStats:
-    processed: int = 0
-    emitted: int = 0
-    deduped: int = 0
+    """Live view over the task's CRDT replica (kept for back-compat —
+    the counters themselves are what merges into the MetricsHub)."""
+
+    def __init__(self, task: "ReactiveTask") -> None:
+        self._task = task
+
+    @property
+    def processed(self) -> int:
+        return self._task.metrics.value("task.processed")
+
+    @property
+    def emitted(self) -> int:
+        return self._task.metrics.value("task.emitted")
+
+    @property
+    def deduped(self) -> int:
+        return self._task.metrics.value("task.deduped")
 
 
-class ReactiveTask:
+class ReactiveTask(WorkerBase):
     """A processing task fed by its mailbox.
 
     Exactly-once *effects* on top of at-least-once delivery: tasks track
-    seen ``msg_id``s (bounded) and skip duplicates caused by Let-It-Crash
-    redelivery.
+    seen ``msg_id``s (bounded ``DedupWindow``) and skip duplicates caused
+    by Let-It-Crash redelivery.
     """
 
     _ids = itertools.count()
@@ -58,31 +75,26 @@ class ReactiveTask:
         dedup_window: int = 65536,
     ) -> None:
         self.task_id = next(ReactiveTask._ids)
-        self.name = f"{job_name}:task{self.task_id}"
-        self.mailbox = Mailbox(self.name, capacity=mailbox_capacity)
+        super().__init__(
+            f"{job_name}:task{self.task_id}", mailbox_capacity=mailbox_capacity
+        )
         self.process = process
         self.producer_group = producer_group
-        self.stats = ReactiveTaskStats()
-        self._seen: Dict[int, None] = {}
-        self._dedup_window = dedup_window
-        self.alive = True
+        self.stats = ReactiveTaskStats(self)
+        self._dedup = DedupWindow(dedup_window)
+        self.step_budget = 8
 
-    def step(self, max_messages: int = 8) -> int:
+    def step(self, now: float = 0.0) -> int:
         n = 0
-        while n < max_messages and self.alive:
+        while n < self.step_budget and self.alive:
             msg = self.mailbox.get()
             if msg is None:
                 break
-            if msg.msg_id in self._seen:
-                self.stats.deduped += 1
+            if self._dedup.seen(msg.msg_id):
+                self.metrics.incr("task.deduped")
                 continue
-            self._seen[msg.msg_id] = None
-            if len(self._seen) > self._dedup_window:
-                # Drop oldest half (insertion-ordered dict).
-                for k in list(self._seen)[: self._dedup_window // 2]:
-                    del self._seen[k]
             outputs = self.process(msg)
-            self.stats.processed += 1
+            self.metrics.incr("task.processed")
             if self.producer_group is not None:
                 for payload in outputs:
                     self.producer_group.submit(
@@ -92,7 +104,7 @@ class ReactiveTask:
                             created_at=msg.created_at,
                         )
                     )
-                    self.stats.emitted += 1
+                    self.metrics.incr("task.emitted")
             n += 1
         return n
 
@@ -102,7 +114,9 @@ class ReactiveJob:
 
     The task pool is elastic (autoscaled on mailbox depth) and unlimited
     by partition count; virtual consumers are supervised, stateful
-    (journaled offsets) workers.
+    (journaled offsets) workers.  All pool mechanics — spawn, retire
+    (overflow-safe drain to the survivors), Let-It-Crash restart,
+    heartbeat supervision, CRDT telemetry — come from ``ElasticPool``.
     """
 
     def __init__(
@@ -123,12 +137,9 @@ class ReactiveJob:
         elastic: bool = True,
     ) -> None:
         self.name = name
-        self.elastic = elastic
         self.log = log
         self.topic: Topic = log.get(in_topic)
         self.process = process
-        self.scheduler_name = scheduler
-        self.mailbox_capacity = mailbox_capacity
         self.producer_group = (
             VirtualProducerGroup(log.get(out_topic)) if out_topic else None
         )
@@ -139,108 +150,62 @@ class ReactiveJob:
             batch_size=batch_n,
             journal_factory=journal_factory,
         )
-        self.tasks: List[ReactiveTask] = []
-        self.pool = WorkerPoolController(
-            initial_tasks,
-            autoscaler
+        self.pool = ElasticPool(
+            name,
+            lambda: ReactiveTask(
+                name, process, self.producer_group,
+                mailbox_capacity=mailbox_capacity,
+            ),
+            scheduler=scheduler,
+            initial_units=initial_tasks,
+            autoscaler=autoscaler
             or AutoscalerConfig(min_workers=1, max_workers=256, cooldown=0.0),
+            elastic=elastic,
+            supervisor=supervisor,
+            heartbeat_timeout=heartbeat_timeout,
+            retire_mode="redistribute",
+            metric_prefix="job",
+            worker_noun="task",
         )
-        self.supervisor = supervisor or Supervisor(f"{name}-supervisor")
-        self.heartbeat_timeout = heartbeat_timeout
-        # Work done by tasks that have since been retired or replaced —
-        # without this, scale-in would silently erase progress accounting.
-        self._retired_processed = 0
-        self._retired_emitted = 0
-        for _ in range(initial_tasks):
-            self._spawn_task()
         for vc in self.consumer_group.consumers:
             self._supervise_vc(vc.partition)
+
+    # -- pool views ----------------------------------------------------------
+    @property
+    def tasks(self) -> List[ReactiveTask]:
+        return self.pool.workers
+
+    @property
+    def supervisor(self) -> Supervisor:
+        return self.pool.supervisor
+
+    @property
+    def elastic(self) -> bool:
+        return self.pool.elastic
 
     # -- supervision hooks -------------------------------------------------
     def _supervise_vc(self, partition: int) -> None:
         self.supervisor.supervise(
             f"{self.name}:vc{partition}",
             restart=lambda p=partition: self.consumer_group.restart_consumer(p),
-            detector=HeartbeatDetector(self.heartbeat_timeout),
+            detector=HeartbeatDetector(self.pool.heartbeat_timeout),
         )
-
-    def _spawn_task(self) -> ReactiveTask:
-        task = ReactiveTask(
-            self.name,
-            self.process,
-            self.producer_group,
-            mailbox_capacity=self.mailbox_capacity,
-        )
-        self.tasks.append(task)
-        self.supervisor.supervise(
-            task.name,
-            restart=lambda t=task: self._restart_task(t),
-            detector=HeartbeatDetector(self.heartbeat_timeout),
-        )
-        return task
-
-    def _restart_task(self, task: ReactiveTask) -> None:
-        """Let-It-Crash: fresh instance; pending mailbox moves over. The
-        old supervision entry is replaced by one for the fresh task —
-        otherwise the dead child would be 'restarted' (and its stats
-        re-counted) on every subsequent check."""
-        if task not in self.tasks:
-            return  # already replaced by an earlier restart
-        fresh = ReactiveTask(
-            self.name, self.process, self.producer_group, self.mailbox_capacity
-        )
-        for msg in task.mailbox.drain():
-            fresh.mailbox.put(msg)
-        self.tasks[self.tasks.index(task)] = fresh
-        task.alive = False
-        self._retired_processed += task.stats.processed
-        self._retired_emitted += task.stats.emitted
-        self.supervisor.unsupervise(task.name)
-        self.supervisor.supervise(
-            fresh.name,
-            restart=lambda t=fresh: self._restart_task(t),
-            detector=HeartbeatDetector(self.heartbeat_timeout),
-        )
-
-    def _retire_task(self) -> None:
-        if len(self.tasks) <= 1:
-            return
-        victim = min(self.tasks, key=lambda t: t.mailbox.depth())
-        self.tasks.remove(victim)
-        victim.alive = False
-        self._retired_processed += victim.stats.processed
-        self._retired_emitted += victim.stats.emitted
-        self.supervisor.unsupervise(victim.name)
-        boxes = [t.mailbox for t in self.tasks]
-        sched = make_scheduler(self.scheduler_name)
-        for msg in victim.mailbox.drain():
-            boxes[sched.pick(boxes)].put(msg)
 
     # -- main loop ----------------------------------------------------------
     def step(self, now: float = 0.0, task_budget: int = 8) -> int:
         """One pipeline round: consume->forward, process, publish, scale."""
-        self.consumer_group.step_all([t.mailbox for t in self.tasks], now=now)
-        processed = sum(t.step(task_budget) for t in self.tasks)
-        if self.producer_group is not None:
-            self.producer_group.step_all()
-        # Heartbeats: live components beat; the supervisor check restarts
-        # any that a failure drill silenced (see examples/failure_drill).
-        for t in self.tasks:
-            if t.alive:
-                self.supervisor.heartbeat(t.name, now)
+        for task in self.pool.workers:
+            task.step_budget = task_budget
+        self.consumer_group.step_all(self.pool.mailboxes(), now=now)
+        # Heartbeats: live virtual consumers beat; the pool beats live
+        # tasks inside step(); the supervisor check restarts any that a
+        # failure drill silenced (see examples/failure_drill).
         for vc in self.consumer_group.consumers:
             if vc.alive:
                 self.supervisor.heartbeat(f"{self.name}:vc{vc.partition}", now)
-        self.supervisor.check(now)
-        # Elasticity.
-        if self.elastic:
-            decision, _ = self.pool.observe(
-                [t.mailbox.depth() for t in self.tasks], now=now
-            )
-            while len(self.tasks) < self.pool.target_size:
-                self._spawn_task()
-            while len(self.tasks) > self.pool.target_size:
-                self._retire_task()
+        processed = self.pool.step(now)
+        if self.producer_group is not None:
+            self.producer_group.step_all()
         return processed
 
     def run_to_completion(self, max_rounds: int = 1_000_000) -> int:
@@ -249,16 +214,13 @@ class ReactiveJob:
         for r in range(max_rounds):
             n = self.step(now=float(r))
             total += n
-            backlog = self.consumer_group.total_lag() + sum(
-                t.mailbox.depth() for t in self.tasks
-            )
-            idle = idle + 1 if n == 0 and backlog == 0 else 0
+            idle = idle + 1 if n == 0 and self.backlog() == 0 else 0
             if idle >= 2:
                 break
         return total
 
     def total_processed(self) -> int:
-        return self._retired_processed + sum(t.stats.processed for t in self.tasks)
+        return self.pool.counter("task.processed")
 
     def backlog(self) -> int:
         return self.consumer_group.total_lag() + sum(

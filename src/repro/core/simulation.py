@@ -9,9 +9,13 @@ per-message completion time (Eq. 1 vs Eq. 2).
 We reproduce that grid on a deterministic discrete-event simulator rather
 than wall-clock threads: results are exact, seedable, and independent of
 this container's single CPU core (see DESIGN.md assumption notes).  The
-simulator reuses the *real* runtime components — ``Mailbox``,
-``VirtualConsumer`` offsets semantics, ``Scheduler``, ``Supervisor``
-timing model, ``QueueDepthAutoscaler`` — only time is virtual.
+simulator reuses the *real* policy objects — ``Mailbox`` semantics,
+``VirtualConsumer`` offsets, ``Scheduler``, ``Supervisor`` timing model,
+``QueueDepthAutoscaler`` — only time is virtual.  It deliberately does
+NOT reuse the live ``core.pool.ElasticPool`` actuator (see DESIGN.md §3):
+its spawn/retire/relocate events ride the event heap, so the loop here is
+a virtual-time re-statement of that contract, not a third copy to evolve
+independently — behavioral fixes belong in the shared policy objects.
 
 Timing model
 ------------

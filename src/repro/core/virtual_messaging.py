@@ -26,10 +26,11 @@ available where exactly-once matters).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import itertools
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.messages import Mailbox, MailboxOverflow, Message
+from repro.core.pool import ElasticPool, WorkerBase
 from repro.core.scheduler import RoundRobinScheduler, Scheduler
 from repro.core.state import EventJournal, EventSourcedState
 from repro.data.topics import Topic
@@ -50,6 +51,18 @@ class VirtualConsumer:
     scheduler into one of the task mailboxes, then commits the offset to
     its journal.  On restart, ``VirtualConsumer`` is rebuilt from the same
     journal and resumes from the committed offset.
+
+    ``commit_policy`` selects when the journal records progress:
+
+      * ``"on_forward"`` (default, paper-faithful) — delivery into a task
+        mailbox *is* the commit.  Safe against component crashes (the
+        mailboxes survive), lossy across a full-process crash.
+      * ``"manual"`` — only the in-memory read ``position`` advances on
+        forward; the owner calls :meth:`commit_to` once downstream work
+        actually completes.  A rebuilt consumer resumes from the durable
+        committed offset and re-reads the uncommitted suffix —
+        at-least-once replay across *process* failure, which is what the
+        log-backed serving path (``repro.serving.job``) relies on.
     """
 
     def __init__(
@@ -60,13 +73,18 @@ class VirtualConsumer:
         scheduler: Scheduler,
         batch_size: int = 8,
         journal: Optional[EventJournal] = None,
+        commit_policy: str = "on_forward",
     ) -> None:
+        if commit_policy not in ("on_forward", "manual"):
+            raise ValueError(f"unknown commit_policy {commit_policy!r}")
         self.name = name
         self.topic = topic
         self.partition = partition
         self.scheduler = scheduler
         self.batch_size = batch_size
+        self.commit_policy = commit_policy
         self.state = EventSourcedState({"offset": 0}, _offset_reducer, journal)
+        self.position = self.offset  # read cursor (>= committed offset)
         self.forwarded = 0
         self.alive = True  # chaos hooks silence a consumer by clearing this
 
@@ -75,13 +93,21 @@ class VirtualConsumer:
         return self.state.state["offset"]
 
     def lag(self) -> int:
-        return self.topic.partitions[self.partition].end_offset() - self.offset
+        cursor = self.position if self.commit_policy == "manual" else self.offset
+        return self.topic.partitions[self.partition].end_offset() - cursor
+
+    def commit_to(self, offset: int, now: float = 0.0) -> None:
+        """Durably commit progress (manual mode): only ever forward."""
+        if offset > self.offset:
+            self.state.record("committed", {"offset": offset}, timestamp=now)
+        self.position = max(self.position, self.offset)
 
     def step(self, task_queues: Sequence[Mailbox], now: float = 0.0) -> int:
         """One consume-and-forward cycle; returns #messages forwarded."""
         if not task_queues or not self.alive:
             return 0
-        msgs = self.topic.partitions[self.partition].read(self.offset, self.batch_size)
+        start = self.position if self.commit_policy == "manual" else self.offset
+        msgs = self.topic.partitions[self.partition].read(start, self.batch_size)
         delivered = 0
         for msg in msgs:
             idx = self.scheduler.pick(task_queues)
@@ -93,9 +119,12 @@ class VirtualConsumer:
                 break
             delivered += 1
         if delivered:
-            self.state.record(
-                "committed", {"offset": self.offset + delivered}, timestamp=now
-            )
+            if self.commit_policy == "manual":
+                self.position = start + delivered
+            else:
+                self.state.record(
+                    "committed", {"offset": start + delivered}, timestamp=now
+                )
             self.forwarded += delivered
         return delivered
 
@@ -114,11 +143,13 @@ class VirtualConsumerGroup:
         scheduler_factory: Callable[[], Scheduler] = RoundRobinScheduler,
         batch_size: int = 8,
         journal_factory: Optional[Callable[[int], EventJournal]] = None,
+        commit_policy: str = "on_forward",
     ) -> None:
         self.job_name = job_name
         self.topic = topic
         self.batch_size = batch_size
         self.scheduler_factory = scheduler_factory
+        self.commit_policy = commit_policy
         # The journal is the component's *persistent* state: it outlives any
         # individual consumer instance (Let-It-Crash restarts get the same
         # journal back and replay it). Created once per partition.
@@ -138,6 +169,7 @@ class VirtualConsumerGroup:
             scheduler=self.scheduler_factory(),
             batch_size=self.batch_size,
             journal=self._journals[partition],
+            commit_policy=self.commit_policy,
         )
 
     def restart_consumer(self, partition: int) -> VirtualConsumer:
@@ -152,18 +184,20 @@ class VirtualConsumerGroup:
         return sum(c.lag() for c in self.consumers)
 
 
-class VirtualProducer:
-    """Publishes task output messages to the messaging layer."""
+class VirtualProducer(WorkerBase):
+    """Publishes task output messages to the messaging layer (a pool
+    worker: its inbox is the pool-managed mailbox)."""
 
     def __init__(self, name: str, topic: Topic) -> None:
-        self.name = name
+        super().__init__(name)
         self.topic = topic
-        self.inbox = Mailbox(f"{name}:inbox")
+        self.inbox = self.mailbox  # historical alias
         self.published = 0
+        self.step_budget = 32
 
-    def step(self, max_messages: int = 32) -> int:
+    def step(self, now: float = 0.0) -> int:
         n = 0
-        while n < max_messages:
+        while n < self.step_budget:
             msg = self.inbox.get()
             if msg is None:
                 break
@@ -176,6 +210,7 @@ class VirtualProducer:
                 )
             )
             self.published += 1
+            self.metrics.incr("vp.published")
             n += 1
         return n
 
@@ -185,7 +220,10 @@ class VirtualProducerGroup:
 
     The group is the paper's "virtual producer pool ... responsible for
     distributing the messages and balancing the load among the virtual
-    producers"; size is driven by the elastic worker service.
+    producers".  The pool mechanics — sizing, supervision, scale-in that
+    drains victims into survivors without overflow — are the shared
+    ``core.pool.ElasticPool`` runtime in manual-scaling mode; ``resize``
+    is the elastic worker service's actuation point.
     """
 
     def __init__(
@@ -195,28 +233,49 @@ class VirtualProducerGroup:
         scheduler: Optional[Scheduler] = None,
     ) -> None:
         self.topic = topic
-        self.scheduler = scheduler or RoundRobinScheduler()
-        self.producers: List[VirtualProducer] = []
-        self.resize(initial_size)
+        self._ids = itertools.count()
+        self.pool = ElasticPool(
+            f"vp:{topic.name}",
+            self._make_producer,
+            scheduler=scheduler or RoundRobinScheduler(),
+            initial_units=max(1, initial_size),
+            elastic=False,
+            retire_mode="redistribute",
+            metric_prefix="vp",
+            worker_noun="producer",
+        )
+
+    def _make_producer(self) -> VirtualProducer:
+        return VirtualProducer(
+            f"vp:{self.topic.name}:{next(self._ids)}", self.topic
+        )
+
+    @property
+    def producers(self) -> List[VirtualProducer]:
+        return self.pool.workers
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self.pool.scheduler
 
     def resize(self, n: int) -> None:
-        n = max(1, n)
-        while len(self.producers) < n:
-            self.producers.append(
-                VirtualProducer(f"vp:{self.topic.name}:{len(self.producers)}", self.topic)
-            )
-        # Scale-in: drain victims into survivors before dropping them.
-        while len(self.producers) > n:
-            victim = self.producers.pop()
-            for msg in victim.inbox.drain():
-                self.submit(msg)
+        self.pool.set_target_units(max(1, n))
 
     def submit(self, msg: Message) -> None:
-        idx = self.scheduler.pick([p.inbox for p in self.producers])
-        self.producers[idx].inbox.put(msg)
+        self.pool.route(msg)
 
     def step_all(self, max_messages: int = 32) -> int:
-        return sum(p.step(max_messages) for p in self.producers)
+        # Step the workers directly rather than through pool.step():
+        # callers drive this once per pipeline round with no clock, so
+        # the pool's supervision/gauge/occupancy-log machinery would
+        # only accumulate state at a frozen timestamp.  Lifecycle
+        # (spawn/retire/drain) still belongs exclusively to the pool.
+        n = 0
+        for p in self.producers:
+            if p.alive:
+                p.step_budget = max_messages
+                n += p.step(0.0)
+        return n
 
     def pending(self) -> int:
         return sum(p.inbox.depth() for p in self.producers)

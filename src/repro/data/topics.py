@@ -15,34 +15,80 @@ depends on — see DESIGN.md assumption notes):
     committing its offset re-reads from the last committed offset.
 
 The log is in-memory by default with optional file spill (line-delimited
-msgpack) so the failure drill can restart a *process* and recover.
+JSON — zero extra deps) so a restarted *process* can ``MessageLog.reopen``
+the directory and recover every topic, partition, and message: this is
+what gives the log-backed serving path (``repro.serving.job``) durable
+replay after full-process failure.
 """
 
 from __future__ import annotations
 
 import hashlib
 import itertools
+import json
+import os
 import threading
 from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 from repro.core.messages import Message
 
+_MANIFEST = "topics.json"
+
 
 class Partition:
-    """A single append-only, totally-ordered message sequence."""
+    """A single append-only, totally-ordered message sequence.
 
-    def __init__(self, topic: str, index: int) -> None:
+    With ``spill_path`` set, every append is also written (and flushed)
+    as one JSON line — payloads must then be JSON-serializable.  Crash
+    recovery re-reads the file; offsets are line numbers, so the durable
+    and in-memory views agree by construction.
+    """
+
+    def __init__(self, topic: str, index: int,
+                 spill_path: Optional[str] = None) -> None:
         self.topic = topic
         self.index = index
         self._entries: List[Message] = []
         self._lock = threading.Lock()
+        self._spill_path = spill_path
+        self._spill_fh = None
+        if spill_path is not None:
+            if os.path.exists(spill_path):
+                with open(spill_path, "r", encoding="utf-8") as fh:
+                    for line in fh:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        d = json.loads(line)
+                        msg = Message(
+                            topic=topic,
+                            payload=d["payload"],
+                            key=d.get("key"),
+                            created_at=d.get("created_at", 0.0),
+                        )
+                        self._entries.append(
+                            msg.with_source(index, len(self._entries))
+                        )
+            self._spill_fh = open(spill_path, "a", encoding="utf-8")
 
     def append(self, msg: Message) -> int:
         with self._lock:
             offset = len(self._entries)
             self._entries.append(msg.with_source(self.index, offset))
+            if self._spill_fh is not None:
+                self._spill_fh.write(json.dumps({
+                    "payload": msg.payload,
+                    "key": msg.key,
+                    "created_at": msg.created_at,
+                }) + "\n")
+                self._spill_fh.flush()
             return offset
+
+    def close(self) -> None:
+        if self._spill_fh is not None:
+            self._spill_fh.close()
+            self._spill_fh = None
 
     def read(self, offset: int, max_messages: int = 1) -> List[Message]:
         with self._lock:
@@ -59,11 +105,21 @@ class Partition:
 class Topic:
     """A named set of partitions."""
 
-    def __init__(self, name: str, num_partitions: int) -> None:
+    def __init__(self, name: str, num_partitions: int,
+                 spill_dir: Optional[str] = None) -> None:
         if num_partitions < 1:
             raise ValueError("a topic needs >= 1 partition")
         self.name = name
-        self.partitions = [Partition(name, i) for i in range(num_partitions)]
+        self.partitions = [
+            Partition(
+                name, i,
+                spill_path=(
+                    os.path.join(spill_dir, f"{name}-p{i}.jsonl")
+                    if spill_dir is not None else None
+                ),
+            )
+            for i in range(num_partitions)
+        ]
         self._rr = itertools.count()
 
     @property
@@ -90,19 +146,61 @@ class Topic:
 
 
 class MessageLog:
-    """The broker: name → Topic registry (the whole messaging layer)."""
+    """The broker: name → Topic registry (the whole messaging layer).
 
-    def __init__(self) -> None:
+    ``spill_dir`` turns on durable JSONL spill for every topic created
+    through this broker, plus a ``topics.json`` manifest, so a crashed
+    process recovers the entire log with :meth:`reopen`.
+    """
+
+    def __init__(self, spill_dir: Optional[str] = None) -> None:
         self._topics: Dict[str, Topic] = {}
         self._lock = threading.Lock()
+        self.spill_dir = spill_dir
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+
+    @classmethod
+    def reopen(cls, spill_dir: str) -> "MessageLog":
+        """Rebuild a spilled log after a process restart: the manifest
+        names the topics, each partition re-reads its JSONL file, and
+        appends continue onto the same files."""
+        manifest = os.path.join(spill_dir, _MANIFEST)
+        if not os.path.exists(manifest):
+            raise FileNotFoundError(
+                f"no message-log manifest at {manifest!r} — nothing to reopen"
+            )
+        with open(manifest, "r", encoding="utf-8") as fh:
+            topics = json.load(fh)
+        log = cls(spill_dir=spill_dir)
+        for name, num_partitions in topics.items():
+            log.create_topic(name, num_partitions)
+        return log
+
+    def _write_manifest(self) -> None:
+        if self.spill_dir is None:
+            return
+        manifest = os.path.join(self.spill_dir, _MANIFEST)
+        with open(manifest, "w", encoding="utf-8") as fh:
+            json.dump(
+                {n: t.num_partitions for n, t in self._topics.items()}, fh
+            )
 
     def create_topic(self, name: str, num_partitions: int) -> Topic:
         with self._lock:
             if name in self._topics:
                 raise ValueError(f"topic {name!r} already exists")
-            topic = Topic(name, num_partitions)
+            topic = Topic(name, num_partitions, spill_dir=self.spill_dir)
             self._topics[name] = topic
+            self._write_manifest()
             return topic
+
+    def close(self) -> None:
+        """Release spill file handles (simulating a clean process exit)."""
+        with self._lock:
+            for topic in self._topics.values():
+                for part in topic.partitions:
+                    part.close()
 
     def get(self, name: str) -> Topic:
         with self._lock:

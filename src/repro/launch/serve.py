@@ -2,10 +2,22 @@
 decoding — the request queue is the elasticity signal, replicas scale out
 across a traffic spike and drain back afterwards.
 
+Two admission modes:
+
+  * direct (default) — requests go straight into the pool's bounded
+    ingress mailbox (``ElasticServingPool.submit``); overflow sheds or
+    defers.
+  * ``--log-backed`` — requests are appended to a durable ``requests``
+    topic and flow through the virtual messaging layer into the same
+    pool (``ServingJob``); completions land in a ``responses`` topic, so
+    with ``--spill-dir`` the whole process can die and replay.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --requests 32 --slots 4
   PYTHONPATH=src python -m repro.launch.serve --stub --spike  # fast demo
+  PYTHONPATH=src python -m repro.launch.serve --stub --log-backed \
+      --kill-replica 0                        # chaos over the log
 """
 
 from __future__ import annotations
@@ -21,7 +33,7 @@ import numpy as np
 from repro.config import get_arch
 from repro.core.elastic import AutoscalerConfig
 from repro.models.zoo import build_model
-from repro.serving import ElasticServingPool, Request
+from repro.serving import ElasticServingPool, Request, ServingJob
 
 
 def build(args):
@@ -56,12 +68,19 @@ def main(argv=None) -> int:
                     help="bursty open-loop arrivals instead of one batch")
     ap.add_argument("--kill-replica", type=int, default=-1,
                     help="chaos: kill this replica index mid-run")
+    ap.add_argument("--log-backed", action="store_true",
+                    help="admit through the durable requests topic "
+                         "(ServingJob) instead of the bare ingress")
+    ap.add_argument("--spill-dir", default=None,
+                    help="with --log-backed: JSONL-spill the message log "
+                         "here (survives process death)")
+    ap.add_argument("--partitions", type=int, default=2,
+                    help="with --log-backed: requests-topic partitions")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     model, params, vocab = build(args)
-    pool = ElasticServingPool(
-        model, params,
+    pool_kwargs = dict(
         slots_per_replica=args.slots,
         max_len=args.max_len,
         temperature=args.temperature,
@@ -74,6 +93,13 @@ def main(argv=None) -> int:
                                     cooldown=0.0, step_fraction=1.0),
         heartbeat_timeout=5.0,
     )
+    if args.log_backed:
+        job = ServingJob(model, params, spill_dir=args.spill_dir,
+                         partitions=args.partitions, **pool_kwargs)
+        pool = job.pool
+    else:
+        job = None
+        pool = ElasticServingPool(model, params, **pool_kwargs)
 
     rng = np.random.default_rng(args.seed)
 
@@ -88,10 +114,13 @@ def main(argv=None) -> int:
     tick = 0
     # With overflow="defer" the submitter owns the retry: rejected
     # requests park here and re-submit each tick (closed-loop retry).
+    # Log-backed submits never reject — the log is the buffer.
     pending = []
 
     def submit(req, now):
-        if not pool.submit(req, now=now) and args.overflow == "defer":
+        if job is not None:
+            job.submit(req, now=now)
+        elif not pool.submit(req, now=now) and args.overflow == "defer":
             pending.append(req)
     if args.spike:
         # open-loop bursty arrivals: a calm head, a 4x spike holding half
@@ -126,10 +155,14 @@ def main(argv=None) -> int:
         upcoming = next(arrivals, None)
         if args.kill_replica >= 0 and tick == 5 and pool.replicas:
             killed = pool.kill_replica(args.kill_replica)
-        pool.step(float(tick))
+        if job is not None:
+            job.step(float(tick))
+            drained = job.pending() == 0
+        else:
+            pool.step(float(tick))
+            drained = (pool.queue_depth() == 0 and pool.occupancy() == 0
+                       and not pending)
         tick += 1
-        drained = (pool.queue_depth() == 0 and pool.occupancy() == 0
-                   and not pending)
         if drained and upcoming is None:
             break
         if tick > 100_000:
@@ -139,7 +172,8 @@ def main(argv=None) -> int:
     lat = [r.completed_at - r.enqueued_at for r in pool.completed] or [0.0]
     targets = [t for (_, t, _, _) in pool.occupancy_log]
     replicas = [n for (_, _, _, n) in pool.occupancy_log]
-    print(json.dumps({
+    summary = {
+        "mode": "log" if job is not None else "direct",
         "policy": pool.policy_name,
         "requests_completed": len(pool.completed),
         "shed": pool.metrics.value("serve.shed"),
@@ -157,7 +191,13 @@ def main(argv=None) -> int:
             (t, size, reason) for (t, size, reason)
             in pool.controller.scale_events
         ],
-    }))
+    }
+    if job is not None:
+        summary["durable_responses"] = len(job.responses())
+        summary["committed_offsets"] = job.committed_offsets()
+        summary["replay_deduped"] = pool.metrics.value("serve.replay_deduped")
+        job.close()
+    print(json.dumps(summary))
     return 0
 
 

@@ -30,6 +30,18 @@ from repro.serving.serve_step import make_decode_step, make_prefill_step
 _req_ids = itertools.count()
 
 
+def ensure_req_ids_above(floor: int) -> None:
+    """Advance the request-id counter past ``floor``.
+
+    Request ids are process-local; a restarted serving process would
+    reissue ids that already live in a durable requests/responses log and
+    collide with the exactly-once dedup there.  ``ServingJob`` calls this
+    with the highest id found in the log it reopens."""
+    global _req_ids
+    nxt = next(_req_ids)
+    _req_ids = itertools.count(max(nxt, floor + 1))
+
+
 @dataclass
 class Request:
     prompt: List[int]

@@ -1,44 +1,40 @@
 """Reactive serving: the elastic control plane over continuous batching.
 
-This wires the paper's reactive services — the elastic worker service
-(§3.2.2, ``QueueDepthAutoscaler``), message-distribution scheduling (§5,
-``core.scheduler``), bounded-mailbox backpressure (§3.2.4) and
-supervision/Let-It-Crash (§2.2) — into the JAX serving stack, so the
-production batcher is driven by the same control plane as the
-discrete-event simulator:
+This binds the shared ``core.pool.ElasticPool`` runtime — elastic worker
+service (§3.2.2), message-distribution scheduling (§5), bounded-mailbox
+backpressure (§3.2.4) and supervision/Let-It-Crash (§2.2) — to the JAX
+serving stack, so the production batcher is driven by the same control
+plane as ``ReactiveJob`` and the virtual producer pool:
 
-  * ``ElasticBatcher`` — a ``ContinuousBatcher`` replica whose *admitted
-    occupancy* is the elastic quantity.  Tensor shapes stay static
-    (slots, max_len — no recompiles); the autoscaler moves a per-replica
-    occupancy cap, and past one full replica the pool spawns further
-    replicas over the shared ingress mailbox.
-  * ``ElasticServingPool`` — bounded ingress mailbox (shed or defer on
-    overflow), pluggable admission policy (fcfs/round-robin baseline,
-    JSQ, power-of-two, deadline-EDF) dispatching to replica queues,
-    heartbeat supervision with a chaos hook (``kill_replica``): a dead
-    replica's queued *and in-flight* requests are re-admitted at the
-    front of the ingress and decoded afresh — at-least-once delivery
-    with exactly-once completion (req-id dedup), mirroring the
-    ``ReactiveJob`` restart-drain semantics at the serving layer.
+  * ``ElasticBatcher`` — a ``ContinuousBatcher`` replica that satisfies
+    the pool's worker protocol: killable, drainable, re-admittable.
+    Tensor shapes stay static (slots, max_len — no recompiles); the
+    autoscaler moves a per-replica occupancy cap, and past one full
+    replica the pool spawns further replicas over the shared ingress.
+  * ``ElasticServingPool`` — a thin policy shim: it chooses the unit
+    currency (decode slots via ``split_units``), compiles one shared
+    prefill/decode step, and harvests completions with req-id dedup
+    (exactly-once completion on top of the pool's at-least-once
+    re-admission).  Everything else — bounded ingress shed/defer,
+    scheduler dispatch, drain-on-retire, heartbeat supervision, chaos
+    restart, CRDT telemetry — is the generic pool.
 
-Every admission/shed/restart event lands in a CRDT ``MetricsReplica`` so
-pool telemetry merges into a hub without contention (paper §3.2.2).
+For serving fed from a durable log (replayable after full-process
+failure) see ``repro.serving.job.ServingJob``, which keeps this class as
+its processing layer but admits through the virtual messaging layer
+instead of direct ``submit`` calls.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import replace as dc_replace
 from typing import Any, List, Optional, Sequence
 
-from repro.core.elastic import (
-    AutoscalerConfig,
-    WorkerPoolController,
-    split_units,
-)
+from repro.core.elastic import AutoscalerConfig
 from repro.core.messages import Mailbox, Message
-from repro.core.scheduler import Scheduler, make_scheduler
-from repro.core.supervision import HeartbeatDetector, Supervisor
+from repro.core.pool import ElasticPool
+from repro.core.scheduler import Scheduler
+from repro.core.supervision import Supervisor
 from repro.models.zoo import Model
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.serve_step import make_decode_step, make_prefill_step
@@ -62,6 +58,7 @@ class ElasticBatcher(ContinuousBatcher):
         self.draining = False
         self.speed = speed
         self._credit = 0.0
+        self.metrics: Optional[MetricsReplica] = None  # assigned by the pool
 
     def step(self, now: float = 0.0) -> int:
         self._credit += self.speed
@@ -70,33 +67,49 @@ class ElasticBatcher(ContinuousBatcher):
         self._credit -= 1.0
         return super().step(now)
 
-    # -- chaos hook ---------------------------------------------------------
+    # -- pool worker protocol -----------------------------------------------
+    @property
+    def mailbox(self) -> Mailbox:
+        return self.queue
+
     def kill(self) -> str:
         """Silence the replica (it stops stepping AND heartbeating) —
         what a wedged process looks like from the supervisor's side."""
         self.alive = False
         return self.name
 
-    def drain_for_readmission(self) -> List[Request]:
+    def drain_for_readmission(self) -> List[Message]:
         """Strip every request this replica holds — in-flight slots first
         (reset to undecoded), then its queue — and clear the slot state.
         The caller re-admits them; the KV rows are simply abandoned
         (Let-It-Crash: restart and recompute beats repairing in place)."""
-        out: List[Request] = []
+        out: List[Message] = []
         for slot in range(self.slots):
             req = self.active[slot]
             if req is not None:
-                out.append(req.reset_for_readmission())
+                req = req.reset_for_readmission()
+                out.append(
+                    Message(topic="serve", payload=req,
+                            created_at=req.enqueued_at or 0.0)
+                )
             self.active[slot] = None
             self.outputs[slot] = []
             self.budgets[slot] = 0
             self.positions[slot] = 0
-        for msg in self.queue.drain():
-            out.append(msg.payload)
+        out.extend(self.queue.drain())
         return out
 
     def load(self) -> int:
         return self.occupancy() + self.queue.depth()
+
+    def inflight(self) -> int:
+        return self.occupancy()
+
+    def set_capacity(self, cap: int) -> None:
+        self.set_target_occupancy(cap)
+
+    def get_capacity(self) -> Optional[int]:
+        return self.target_occupancy
 
 
 class ElasticServingPool:
@@ -107,6 +120,9 @@ class ElasticServingPool:
     per-replica occupancy caps via ``split_units`` (fill a replica before
     spawning the next).  Scale-in drains — a retiring replica takes no new
     work and is reaped once empty; running requests are never cancelled.
+
+    This class keeps the *direct-ingress* admission mode (``submit``);
+    ``ServingJob`` layers log-backed admission on top of the same pool.
     """
 
     def __init__(
@@ -130,18 +146,13 @@ class ElasticServingPool:
         replica_speeds: Optional[Sequence[float]] = None,
         metrics: Optional[MetricsReplica] = None,
     ) -> None:
-        if overflow not in ("shed", "defer"):
-            raise ValueError(f"overflow must be 'shed' or 'defer', got {overflow!r}")
         self.model = model
         self.params = params
         self.slots = slots_per_replica
         self.max_len = max_len
         self.eos = eos_token
-        self.max_replicas = max_replicas
         self.overflow = overflow
         self.policy_name = policy
-        self.scheduler: Scheduler = make_scheduler(policy)
-        self.ingress = Mailbox("serve-ingress", capacity=ingress_capacity)
         self.replica_queue_capacity = (
             replica_queue_capacity
             if replica_queue_capacity is not None
@@ -151,46 +162,79 @@ class ElasticServingPool:
         # spawned mid-spike must not pay a retrace.
         self.prefill_step = make_prefill_step(model)
         self.decode_step = make_decode_step(model, temperature)
-        self.supervisor = Supervisor("serving-supervisor")
-        self.heartbeat_timeout = heartbeat_timeout
-        self.dispatch_batch = dispatch_batch
         # Cyclic per-spawn-slot speeds; None = homogeneous pool.
         self.replica_speeds = list(replica_speeds) if replica_speeds else None
         self._spawn_count = 0
-        self.metrics = metrics or MetricsReplica("serving-pool")
-
-        max_units = max_replicas * slots_per_replica
-        cfg = autoscaler or AutoscalerConfig(
-            high_watermark=4.0,
-            low_watermark=0.5,
-            cooldown=0.0,
-            step_fraction=1.0,
-        )
-        cfg = dc_replace(
-            cfg,
-            min_workers=max(cfg.min_workers, 1),
-            max_workers=min(cfg.max_workers, max_units),
-            max_step=min(cfg.max_step, max_units),
-        )
-        self.controller = WorkerPoolController(
-            min(initial_units or slots_per_replica, max_units), cfg
-        )
-
-        self.replicas: List[ElasticBatcher] = []
         self.completed: List[Request] = []
         self._completed_ids: set = set()
-        self.shed: List[Request] = []
-        self.steps = 0
-        self._now = 0.0  # last step time; seeds detectors for new replicas
-        # Rejections since the last autoscaler observation: a bounded
-        # ingress caps the queue-depth signal, so shed/deferred demand
-        # must reach the controller some other way or backpressure would
-        # suppress the very scale-out that could relieve it.
-        self._rejected_since_observe = 0
-        # (now, target_units, occupancy, active_replicas) per step — the
-        # trace tests and benches assert elasticity against.
-        self.occupancy_log: List[tuple] = []
-        self._apply_units(self.controller.target_size, now=0.0)
+
+        self.pool = ElasticPool(
+            "serving",
+            self._make_replica,
+            scheduler=policy,
+            initial_units=initial_units or slots_per_replica,
+            units_per_worker=slots_per_replica,
+            max_workers=max_replicas,
+            autoscaler=autoscaler or AutoscalerConfig(
+                high_watermark=4.0,
+                low_watermark=0.5,
+                cooldown=0.0,
+                step_fraction=1.0,
+            ),
+            elastic=True,
+            reconcile_on="delta",
+            heartbeat_timeout=heartbeat_timeout,
+            ingress_capacity=ingress_capacity,
+            ingress_name="serve-ingress",
+            overflow=overflow,
+            dispatch_batch=dispatch_batch,
+            retire_mode="drain",
+            collect=self._collect_completed,
+            metrics=metrics,
+            metric_prefix="serve",
+            worker_noun="replica",
+        )
+
+    # -- pool views ----------------------------------------------------------
+    @property
+    def replicas(self) -> List[ElasticBatcher]:
+        return self.pool.workers
+
+    @property
+    def supervisor(self) -> Supervisor:
+        return self.pool.supervisor
+
+    @property
+    def controller(self):
+        return self.pool.controller
+
+    @property
+    def metrics(self) -> MetricsReplica:
+        return self.pool.metrics
+
+    @property
+    def ingress(self) -> Mailbox:
+        return self.pool.ingress
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self.pool.scheduler
+
+    @scheduler.setter
+    def scheduler(self, sched: Scheduler) -> None:
+        self.pool.scheduler = sched
+
+    @property
+    def occupancy_log(self) -> List[tuple]:
+        return self.pool.occupancy_log
+
+    @property
+    def steps(self) -> int:
+        return self.pool.steps
+
+    @property
+    def shed(self) -> List[Request]:
+        return [m.payload for m in self.pool.shed]
 
     # -- API ----------------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> bool:
@@ -202,39 +246,25 @@ class ElasticServingPool:
         if req.enqueued_at is None:
             req.enqueued_at = now
         msg = Message(topic="serve", payload=req, created_at=req.enqueued_at)
-        if self.ingress.try_put(msg):
-            self.metrics.incr("serve.admitted")
-            return True
-        self._rejected_since_observe += 1
-        if self.overflow == "shed":
-            self.shed.append(req)
-            self.metrics.incr("serve.shed")
-        else:
-            self.metrics.incr("serve.deferred")
-        return False
+        return self.pool.offer(msg)
 
     def queue_depth(self) -> int:
-        return self.ingress.depth() + sum(r.queue.depth() for r in self.replicas)
+        return self.pool.queue_depth()
 
     def occupancy(self) -> int:
-        # Dead replicas count too: their in-flight requests are trapped
-        # until the supervisor re-admits them, and drain loops must not
-        # conclude the system is idle while work is trapped.
-        return sum(r.occupancy() for r in self.replicas)
+        return self.pool.occupancy()
 
     def target_units(self) -> int:
-        return self.controller.target_size
+        return self.pool.target_units()
 
     def active_replicas(self) -> List[ElasticBatcher]:
-        return [r for r in self.replicas if r.alive and not r.draining]
+        return self.pool.active_workers()
 
     # -- chaos hook ---------------------------------------------------------
     def kill_replica(self, index: int = 0) -> str:
         """Silence replica ``index``; the supervisor detects the missed
         heartbeats and re-admits everything the replica held."""
-        replica = self.replicas[index % len(self.replicas)]
-        self.metrics.incr("serve.replica_kills")
-        return replica.kill()
+        return self.pool.kill_worker(index)
 
     # -- internals ----------------------------------------------------------
     def _make_replica(self) -> ElasticBatcher:
@@ -258,125 +288,8 @@ class ElasticServingPool:
             speed=speed,
         )
 
-    def _supervise(self, replica: ElasticBatcher) -> None:
-        self.supervisor.supervise(
-            replica.name,
-            restart=lambda r=replica: self._restart_replica(r),
-            detector=HeartbeatDetector(self.heartbeat_timeout),
-        )
-        # Seed the detector: an unseeded HeartbeatDetector never suspects
-        # (last_beat=None), so a replica killed before its first step
-        # would trap its requests forever.
-        self.supervisor.heartbeat(replica.name, self._now)
-
-    def _readmit(self, reqs: Sequence[Request]) -> None:
-        # Front of the ingress, original order preserved: a victim's work
-        # overtakes new arrivals and is never shed (put_front ignores the
-        # capacity bound — losing accepted work is worse than briefly
-        # exceeding it).
-        for req in reversed(list(reqs)):
-            self.ingress.put_front(
-                Message(topic="serve", payload=req, created_at=req.enqueued_at)
-            )
-        if reqs:
-            self.metrics.incr("serve.readmitted", len(reqs))
-
-    def _restart_replica(self, replica: ElasticBatcher) -> None:
-        """Let-It-Crash: re-admit the victim's work, swap in a fresh
-        replica (draining victims are not replaced — they were leaving)."""
-        if replica not in self.replicas:
-            return  # already replaced by an earlier restart
-        self._readmit(replica.drain_for_readmission())
-        idx = self.replicas.index(replica)
-        replica.alive = False
-        self.supervisor.unsupervise(replica.name)
-        if replica.draining:
-            self.replicas.pop(idx)
-            return
-        fresh = self._make_replica()
-        fresh.set_target_occupancy(replica.target_occupancy)
-        self.replicas[idx] = fresh
-        self._supervise(fresh)
-        self.metrics.incr("serve.replica_restarts")
-
-    def _reap_drained(self) -> None:
-        for replica in [r for r in self.replicas if r.draining]:
-            if replica.occupancy() == 0 and replica.queue.depth() == 0:
-                self.replicas.remove(replica)
-                self.supervisor.unsupervise(replica.name)
-                self.metrics.incr("serve.replica_retired")
-
-    def _apply_units(self, units: int, now: float) -> None:
+    def _collect_completed(self, now: float = 0.0) -> None:
         del now
-        targets = split_units(
-            min(max(units, 1), self.max_replicas * self.slots), self.slots
-        )
-        active = self.active_replicas()
-        while len(active) < len(targets):
-            # Scale-out reclaims a draining replica before spawning: it is
-            # warm, and spawning alongside it would briefly exceed the
-            # max_replicas compute/memory budget.
-            draining = [r for r in self.replicas if r.alive and r.draining]
-            if draining:
-                revived = max(draining, key=lambda r: r.load())
-                revived.draining = False
-                active.append(revived)
-                self.metrics.incr("serve.replica_revived")
-                continue
-            fresh = self._make_replica()
-            self.replicas.append(fresh)
-            self._supervise(fresh)
-            active.append(fresh)
-            self.metrics.incr("serve.replica_spawns")
-        while len(active) > len(targets):
-            victim = min(active, key=lambda r: r.load())
-            victim.draining = True
-            active.remove(victim)
-            self.metrics.incr("serve.replica_draining")
-        # Largest caps to the most loaded replicas: their queues drain first.
-        for replica, cap in zip(
-            sorted(active, key=lambda r: -r.load()), targets
-        ):
-            replica.set_target_occupancy(cap)
-
-    def _dispatch(self) -> int:
-        """Move ingress messages to replica queues per the admission
-        policy.  Full replica queues push work back into the ingress
-        (deferral): the backlog stays where the autoscaler watches it."""
-        active = self.active_replicas()
-        if not active:
-            return 0
-        boxes = [r.queue for r in active]
-        cap = self.replica_queue_capacity
-        if cap > 0 and min(b.depth() for b in boxes) >= cap:
-            return 0  # saturated: don't churn the ingress for nothing
-        batch: List[Message] = []
-        while len(batch) < self.dispatch_batch:
-            msg = self.ingress.get()
-            if msg is None:
-                break
-            batch.append(msg)
-        moved = 0
-        leftover: List[Message] = []
-        ordered = self.scheduler.order(batch)
-        for pos, msg in enumerate(ordered):
-            i = self.scheduler.pick_msg(msg, boxes)
-            if boxes[i].try_put(msg):
-                moved += 1
-                continue
-            j = min(range(len(boxes)), key=lambda b: boxes[b].depth())
-            if j != i and boxes[j].try_put(msg):
-                moved += 1
-                continue
-            # The min-depth queue rejected, so every queue is full —
-            # nothing later in the batch can land either.
-            leftover.extend(ordered[pos:])
-            break
-        for msg in reversed(leftover):
-            self.ingress.put_front(msg)
-        return moved
-
-    def _collect_completed(self) -> None:
         for replica in self.replicas:
             if not replica.completed:
                 continue
@@ -388,45 +301,15 @@ class ElasticServingPool:
                     continue
                 self._completed_ids.add(req.req_id)
                 self.completed.append(req)
-                self.metrics.incr("serve.completed")
+                self.pool.metrics.incr("serve.completed")
             replica.completed.clear()
 
     # -- main loop ----------------------------------------------------------
     def step(self, now: float = 0.0) -> int:
-        """One serving round: reap drained, dispatch, decode, supervise,
-        autoscale.  Returns tokens decoded this round."""
-        self._now = max(self._now, now)
-        self._reap_drained()
-        self._dispatch()
-        decoded = 0
-        for replica in self.replicas:
-            if replica.alive:
-                decoded += replica.step(now)
-        self._collect_completed()
-        for replica in self.replicas:
-            if replica.alive:
-                self.supervisor.heartbeat(replica.name, now)
-        self.supervisor.check(now)
-        # Elasticity: per-unit *offered* load drives the slot-unit target —
-        # queued backlog plus the demand the bounded ingress turned away
-        # since the last observation (otherwise backpressure would hide
-        # exactly the overload that warrants scale-out).
-        backlog = self.queue_depth() + self._rejected_since_observe
-        self._rejected_since_observe = 0
-        units = max(self.controller.target_size, 1)
-        decision, _ = self.controller.observe(
-            [backlog / units] * units, now=now
-        )
-        if decision.delta != 0:
-            self._apply_units(self.controller.target_size, now)
-        self.metrics.gauge("serve.queue_depth", backlog, timestamp=now)
-        self.metrics.gauge("serve.occupancy", self.occupancy(), timestamp=now)
-        self.occupancy_log.append(
-            (now, self.controller.target_size, self.occupancy(),
-             len(self.active_replicas()))
-        )
-        self.steps += 1
-        return decoded
+        """One serving round (delegated to the pool): reap drained,
+        dispatch, decode, collect, supervise, autoscale.  Returns tokens
+        decoded this round."""
+        return self.pool.step(now)
 
     def run_until_drained(
         self, max_steps: int = 10_000, now: float = 0.0, dt: float = 1.0
