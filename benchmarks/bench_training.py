@@ -1,0 +1,129 @@
+"""Elastic training study: tokens/sec across DP degrees and recovery
+time across a mid-run chaos kill, on the ``TrainingJob`` control plane.
+
+Two tables:
+
+  * ``training_throughput`` — the same smoke-arch stream trained at DP
+    1/2/4 with one shared jit'd step: tokens/sec wall-clock plus the
+    exact consumption accounting (steps x batch documents, always).
+  * ``training_recovery`` — a DP-2 run with one worker chaos-killed
+    mid-run: how many now-ticks the barrier stalls before the supervisor
+    heals the pool and the step counter moves again, plus restart and
+    re-admission counters.  Tick-denominated numbers are deterministic
+    in the step-driven tier, so CI can diff them exactly; wall-clock
+    tokens/sec is reported but not asserted (hardware varies).
+
+Frozen to ``BENCH_training.json`` by ``benchmarks/run.py`` — the
+regression baseline future PRs diff against.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainingConfig, get_arch
+from repro.data.pipeline import build_token_log
+from repro.models.zoo import build_model
+from repro.training.job import TrainingJob
+from repro.training.train_step import make_train_step
+
+ARCH = "llama3.2-1b"
+BATCH, SEQ, PARTS = 8, 32, 4
+STEPS = 40
+KILL_AT = 10
+HEARTBEAT = 3.0
+
+
+def _rig():
+    cfg = get_arch(ARCH, smoke=True)
+    tcfg = TrainingConfig(
+        learning_rate=1e-3, warmup_steps=0, schedule="constant"
+    )
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    return cfg, tcfg, model, step_fn
+
+
+def _job(rig, dp: int, **kwargs) -> TrainingJob:
+    cfg, tcfg, model, step_fn = rig
+    log = build_token_log(
+        cfg.vocab_size, STEPS * BATCH, doc_len=SEQ + 1, partitions=PARTS
+    )
+    return TrainingJob(
+        model, cfg, tcfg, log, batch_size=BATCH, seq_len=SEQ,
+        dp=dp, max_dp=max(dp, 4), train_step_fn=step_fn, **kwargs
+    )
+
+
+def throughput_run(rig, dp: int) -> Dict:
+    job = _job(rig, dp)
+    t0 = time.time()
+    final = job.run(STEPS)
+    wall = time.time() - t0
+    tokens = job.counter("train.tokens")
+    return {
+        "table": "training_throughput",
+        "dp": dp,
+        "steps": final,
+        "consumed_docs": sum(job.committed_offsets().values()),
+        "tokens": tokens,
+        "tokens_per_sec": round(tokens / max(wall, 1e-9)),
+        "wall_s": round(wall, 2),
+        "final_loss": round(job.losses[-1], 4),
+    }
+
+
+def recovery_run(rig) -> Dict:
+    job = _job(rig, dp=2, heartbeat_timeout=HEARTBEAT, shard_budget=1)
+    now, killed_at, recovered_at = 0.0, None, None
+    t0 = time.time()
+    while job.applied_step() < STEPS:
+        before = job.applied_step()
+        job.step(now)
+        if killed_at is None and job.applied_step() >= KILL_AT:
+            job.kill_worker(0)
+            killed_at = now
+        elif (
+            killed_at is not None
+            and recovered_at is None
+            and job.applied_step() > before
+        ):
+            recovered_at = now
+        now += 1.0
+        if now > 10_000:
+            break
+    wall = time.time() - t0
+    tokens = job.counter("train.tokens")
+    return {
+        "table": "training_recovery",
+        "dp": 2,
+        "kill_at_step": KILL_AT,
+        "heartbeat_timeout_ticks": HEARTBEAT,
+        "recovery_ticks": (
+            None if recovered_at is None else int(recovered_at - killed_at)
+        ),
+        "steps": job.applied_step(),
+        "consumed_docs": sum(job.committed_offsets().values()),
+        "restarts": job.counter("train.trainer_restarts"),
+        "readmitted": job.counter("train.readmitted"),
+        "shard_dupes": job.counter("train.shard_dupes"),
+        "tokens_per_sec": round(tokens / max(wall, 1e-9)),
+    }
+
+
+def run() -> List[Dict]:
+    rig = _rig()
+    rows: List[Dict] = []
+    for dp in (1, 2, 4):
+        rows.append(throughput_run(rig, dp))
+    rows.append(recovery_run(rig))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -5,16 +5,16 @@
   bench_completion  — Fig. 11 / Eq. (1)-(2) (+ beyond-paper fix)
   bench_scheduler   — beyond-paper scheduler x capacity sweep
   bench_serving     — elastic serving: admission-policy tails + occupancy
+  bench_training    — elastic training: tokens/sec across DP + recovery
   bench_kernels     — kernel tiling numbers + CPU reference timings
   bench_roofline    — the 40-cell dry-run roofline table
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT]
 Prints one CSV-ish line per result row: ``table,key=value,...``.
 
-Whenever the serving bench runs, its rows are also frozen to
-``BENCH_serving.json`` at the repo root (p50/p99 latency, throughput,
-restarts for direct-ingress vs log-backed admission) — the perf baseline
-future PRs regress against.
+Whenever the serving or training bench runs, its rows are also frozen to
+``BENCH_serving.json`` / ``BENCH_training.json`` at the repo root — the
+perf baselines future PRs regress against.
 """
 
 from __future__ import annotations
@@ -38,7 +38,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench (throughput|failure|completion|"
-                         "scheduler|serving|kernels|roofline)")
+                         "scheduler|serving|training|kernels|roofline)")
     ap.add_argument("--json", default=None, help="also dump rows as JSONL")
     args = ap.parse_args()
 
@@ -50,6 +50,7 @@ def main() -> None:
         bench_scheduler,
         bench_serving,
         bench_throughput,
+        bench_training,
     )
 
     benches = {
@@ -58,6 +59,7 @@ def main() -> None:
         "completion": bench_completion.run,
         "scheduler": bench_scheduler.run,
         "serving": bench_serving.run,
+        "training": bench_training.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }
@@ -74,12 +76,12 @@ def main() -> None:
         all_rows.extend(rows)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", flush=True)
-        if name == "serving":
-            out = os.path.join(_REPO_ROOT, "BENCH_serving.json")
+        if name in ("serving", "training"):
+            out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
             with open(out, "w") as fh:
-                json.dump({"bench": "serving", "wall_s": round(elapsed, 1),
+                json.dump({"bench": name, "wall_s": round(elapsed, 1),
                            "rows": rows}, fh, indent=1)
-            print(f"# serving baseline written to {out}", flush=True)
+            print(f"# {name} baseline written to {out}", flush=True)
 
     if args.json:
         with open(args.json, "w") as fh:

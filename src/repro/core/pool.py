@@ -178,6 +178,7 @@ class ElasticPool:
         dispatch_batch: int = 32,
         retire_mode: str = "redistribute",  # or "drain"
         collect: Optional[Callable[[float], None]] = None,
+        on_scale: Optional[Callable[[int, int], None]] = None,
         metrics: Optional[MetricsReplica] = None,
         metric_prefix: str = "pool",
         worker_noun: str = "worker",
@@ -198,6 +199,13 @@ class ElasticPool:
         self.dispatch_batch = dispatch_batch
         self.retire_mode = retire_mode
         self.collect = collect
+        # Scale actuation hook: called with (old_units, new_units) after
+        # the controller moves its target and BEFORE the worker set is
+        # reconciled toward it.  This is where a scale decision becomes a
+        # physical re-layout — the training job snapshots, remeshes
+        # (``distributed.elastic_mesh``), and reshapes its DP degree here.
+        # The hook may clamp by writing ``controller.target_size``.
+        self.on_scale = on_scale
         self.supervisor = supervisor or Supervisor(f"{name}-supervisor")
         self.heartbeat_timeout = heartbeat_timeout
         self.ingress: Optional[Mailbox] = None
@@ -480,11 +488,17 @@ class ElasticPool:
             worker.set_capacity(cap)
 
     def set_target_units(self, units: int) -> None:
-        """Manual scaling (elastic=False pools, e.g. producer resize)."""
+        """Manual scaling (elastic=False pools, e.g. producer resize).
+        Routes through the same ``on_scale`` actuation as autoscaler
+        decisions, so a manual resize of a meshed training pool still
+        reshards before the worker set moves."""
         cfg = self.controller.autoscaler.config
+        old = self.controller.target_size
         self.controller.target_size = min(
             max(units, cfg.min_workers), cfg.max_workers
         )
+        if self.on_scale is not None and self.controller.target_size != old:
+            self.on_scale(old, self.controller.target_size)
         self._reconcile(self._now)
 
     def _dispatch(self) -> int:
@@ -558,11 +572,19 @@ class ElasticPool:
             depths = [w.mailbox.depth() for w in self.workers]
             signal = sum(depths)
         if self.elastic:
+            old_target = self.controller.target_size
             decision, _ = self.controller.observe(depths, now=now)
             if decision.delta > 0:
                 self.metrics.incr(f"{self._px}.scale_out")
             elif decision.delta < 0:
                 self.metrics.incr(f"{self._px}.scale_in")
+            if (
+                self.on_scale is not None
+                and self.controller.target_size != old_target
+            ):
+                # Actuate before reconciling: a meshed job must re-lay its
+                # state out at the new degree before workers come or go.
+                self.on_scale(old_target, self.controller.target_size)
             if self.reconcile_on == "always" or decision.delta != 0:
                 self._reconcile(now)
         self.metrics.gauge(f"{self._px}.queue_depth", signal, timestamp=now)

@@ -1,10 +1,15 @@
 """Thread-backed live runtime for Reactive Liquid jobs.
 
-Runs the same components as ``repro.core.reactive`` on real threads with
-wall-clock supervision — used by the failure-drill example to kill live
-workers and watch the supervisor heal the pipeline.  The discrete-event
-simulator remains the source of the paper's figures (see DESIGN.md); this
-runtime exists to prove the components work under genuine concurrency.
+Drives any step-driven, ``ElasticPool``-backed job — ``ReactiveJob``,
+``ElasticServingPool``/``ServingJob``, or ``TrainingJob`` — on a real
+thread with wall-clock supervision.  The job contract is three methods:
+``step(now) -> int``, ``backlog() -> int``, and (optionally)
+``total_processed() -> int``; the chaos hooks resolve the job's
+underlying ``ElasticPool`` so a silenced worker is healed by the same
+supervisor regardless of which shim owns it.  The discrete-event
+simulator remains the source of the paper's figures (see DESIGN.md);
+this runtime exists to prove the components work under genuine
+concurrency.
 """
 
 from __future__ import annotations
@@ -12,9 +17,23 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Any, Optional
 
-from repro.core.reactive import ReactiveJob
+from repro.core.pool import ElasticPool
+
+
+def resolve_pool(job: Any) -> Optional[ElasticPool]:
+    """The ``ElasticPool`` behind any of the shims: ``job.pool`` may be
+    the pool itself (ReactiveJob, TrainingJob), a policy shim holding one
+    (ServingJob -> ElasticServingPool), or the job may *be* the shim
+    (ElasticServingPool)."""
+    for candidate in (getattr(job, "pool", None), job):
+        if isinstance(candidate, ElasticPool):
+            return candidate
+        inner = getattr(candidate, "pool", None)
+        if isinstance(inner, ElasticPool):
+            return inner
+    return None
 
 
 @dataclass
@@ -25,15 +44,16 @@ class RuntimeStats:
 
 
 class ThreadedRuntime:
-    """Drives a ReactiveJob from a coordinator thread.
+    """Drives a pool-backed job from a coordinator thread.
 
     Worker "failure" is modeled by silencing a component (it stops
     heartbeating and processing) — precisely what a hung JVM/process looks
-    like to a supervisor.  ``kill_task``/``kill_consumer`` are the chaos
-    hooks used by the failure drill.
+    like to a supervisor.  ``kill_worker`` (and the ReactiveJob-era
+    aliases ``kill_task``/``kill_consumer``) are the chaos hooks used by
+    the failure drills.
     """
 
-    def __init__(self, job: ReactiveJob, tick: float = 0.01) -> None:
+    def __init__(self, job: Any, tick: float = 0.01) -> None:
         self.job = job
         self.tick = tick
         self.stats = RuntimeStats()
@@ -41,14 +61,37 @@ class ThreadedRuntime:
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
 
+    # -- plumbing -----------------------------------------------------------
+    def _pool(self) -> ElasticPool:
+        pool = resolve_pool(self.job)
+        if pool is None:
+            raise TypeError(
+                f"{type(self.job).__name__} exposes no ElasticPool; "
+                "ThreadedRuntime drives pool-backed jobs"
+            )
+        return pool
+
+    def _supervisor(self):
+        sup = getattr(self.job, "supervisor", None)
+        return sup if sup is not None else self._pool().supervisor
+
+    def _processed(self) -> int:
+        fn = getattr(self.job, "total_processed", None)
+        return int(fn()) if callable(fn) else 0
+
     # -- chaos hooks --------------------------------------------------------
-    def kill_task(self, index: int = 0) -> str:
+    def kill_worker(self, index: int = 0) -> str:
+        """Silence pool worker ``index`` (task, replica, or DP trainer —
+        whatever the job's pool holds)."""
         with self._lock:
-            task = self.job.tasks[index % len(self.job.tasks)]
-            task.alive = False  # stops processing AND heartbeating
-            return task.name
+            return self._pool().kill_worker(index)
+
+    def kill_task(self, index: int = 0) -> str:
+        """ReactiveJob-era alias for :meth:`kill_worker`."""
+        return self.kill_worker(index)
 
     def kill_consumer(self, partition: int = 0) -> str:
+        """Silence a virtual consumer (jobs that hold a consumer group)."""
         with self._lock:
             vc = self.job.consumer_group.consumers[partition]
             vc.alive = False  # stops consuming AND heartbeating
@@ -56,20 +99,21 @@ class ThreadedRuntime:
 
     # -- loop ---------------------------------------------------------------
     def _run(self) -> None:
+        supervisor = self._supervisor()
         while not self._stop.is_set():
             now = time.monotonic()
             with self._lock:
                 # step() heartbeats only alive components; silenced ones
                 # miss beats and get restarted by supervisor.check(now).
-                n_events = len(self.job.supervisor.events)
+                n_events = len(supervisor.events)
                 self.job.step(now=now)
                 self.stats.restarts += sum(
                     1
-                    for e in self.job.supervisor.events[n_events:]
+                    for e in supervisor.events[n_events:]
                     if e[1] == "restarted"
                 )
                 self.stats.rounds += 1
-                self.stats.processed = self.job.total_processed()
+                self.stats.processed = self._processed()
             time.sleep(self.tick)
 
     def start(self) -> None:
@@ -98,4 +142,4 @@ class ThreadedRuntime:
                 break
             time.sleep(self.tick * 2)
         self.stop()
-        return self.job.total_processed()
+        return self._processed()

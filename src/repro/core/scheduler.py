@@ -136,6 +136,27 @@ class PowerOfTwoScheduler(Scheduler):
         return i if queues[i].depth() <= queues[j].depth() else j
 
 
+class PartitionAffinityScheduler(Scheduler):
+    """Route a message to the queue matching its source partition.
+
+    The training pipeline's ordered mode depends on this: with one
+    assembly queue per partition and partition-affine forwarding, each
+    queue is a per-partition FIFO, so draining the queues round-robin
+    yields documents in a strict partition-rotation order — a pure
+    function of the committed offsets, which is what makes batch
+    assembly (and therefore crash replay) deterministic.  Messages
+    without a source partition fall back to queue 0."""
+
+    name = "partition"
+
+    def pick(self, queues: Sequence[QueueView]) -> int:
+        return 0
+
+    def pick_msg(self, msg: Any, queues: Sequence[QueueView]) -> int:
+        partition = getattr(msg, "partition", -1)
+        return partition % len(queues) if partition >= 0 else 0
+
+
 class DeadlineScheduler(JoinShortestQueueScheduler):
     """Earliest-deadline-first admission over JSQ routing.
 
@@ -156,6 +177,7 @@ _REGISTRY: dict[str, Callable[[], Scheduler]] = {
     "jsq": JoinShortestQueueScheduler,
     "pow2": PowerOfTwoScheduler,
     "edf": DeadlineScheduler,
+    "partition": PartitionAffinityScheduler,
 }
 
 

@@ -110,7 +110,7 @@ class VirtualConsumer:
         msgs = self.topic.partitions[self.partition].read(start, self.batch_size)
         delivered = 0
         for msg in msgs:
-            idx = self.scheduler.pick(task_queues)
+            idx = self.scheduler.pick_msg(msg, task_queues)
             try:
                 task_queues[idx].put(msg)
             except MailboxOverflow:

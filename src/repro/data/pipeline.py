@@ -38,6 +38,15 @@ class PipelineConfig:
     seq_len: int = 128
     scheduler: str = "jsq"        # load-aware by default (our §5 fix)
     consume_batch: int = 16
+    # Ordered mode (the elastic training path, ``training/job.py``):
+    # one assembly queue per partition, partition-affine forwarding, and
+    # documents handed out in strict partition rotation — so the batch
+    # sequence is a pure function of the committed offsets and replay
+    # after a crash reproduces it exactly.
+    ordered: bool = False
+    # "manual": offsets commit only when the owner calls ``commit`` —
+    # after the optimizer step consuming them is durably journaled.
+    commit_policy: str = "on_forward"
 
 
 class TokenPipeline:
@@ -52,27 +61,86 @@ class TokenPipeline:
         self.log = log
         self.config = config
         self.topic = log.get(config.topic)
+        num_queues = config.num_queues
+        scheduler = config.scheduler
+        if config.ordered:
+            # Determinism by construction: queue i is partition i's FIFO.
+            num_queues = self.topic.num_partitions
+            scheduler = "partition"
         self.group = VirtualConsumerGroup(
             "train-data",
             self.topic,
-            scheduler_factory=lambda: make_scheduler(config.scheduler),
+            scheduler_factory=lambda: make_scheduler(scheduler),
             batch_size=config.consume_batch,
             journal_factory=journal_factory,
+            commit_policy=config.commit_policy,
         )
         self.queues = [
-            Mailbox(f"assembly-{i}") for i in range(config.num_queues)
+            Mailbox(f"assembly-{i}") for i in range(num_queues)
         ]
         self._rr = 0
         self._carry: List[int] = []  # token-level re-packing buffer
+        self._staged: List[Message] = []  # ordered-mode partial batch
+        # Rotation cursor aligned with the *committed* offsets.  The live
+        # cursor (_rr) runs ahead of the commits whenever the owner
+        # prefetches; a resume point must pair the committed offsets with
+        # the cursor as of the last committed document, or replay would
+        # hand the suffix out in a different rotation phase.
+        self._committed_rr = 0
 
     # -- checkpoint state ----------------------------------------------------
     def offsets(self) -> Dict[int, int]:
         return {c.partition: c.offset for c in self.group.consumers}
 
     def restore_offsets(self, offsets: Dict[int, int]) -> None:
+        # commit_to also advances the manual-mode read position, so a
+        # restored pipeline resumes at (not before) the committed point.
         for c in self.group.consumers:
             if c.partition in offsets:
-                c.state.record("committed", {"offset": offsets[c.partition]})
+                c.commit_to(offsets[c.partition])
+
+    def rotation_cursor(self) -> int:
+        """The live rotation cursor — read it right after ``next_docs``
+        to know the cursor value those documents correspond to."""
+        return self._rr
+
+    def stream_state(self) -> Dict:
+        """Ordered-mode resume point: committed offsets + the partition
+        rotation cursor *as of the last commit* (never the live prefetch
+        cursor — pairing those would silently replay a different document
+        sequence).  JSON/msgpack-safe (string keys)."""
+        return {
+            "offsets": {str(k): v for k, v in self.offsets().items()},
+            "rr": self._committed_rr,
+        }
+
+    def restore_stream_state(self, state: Dict) -> None:
+        self.restore_offsets({int(k): v for k, v in state["offsets"].items()})
+        self._rr = self._committed_rr = int(state["rr"])
+
+    def commit(
+        self, offsets: Dict[int, int], now: float = 0.0,
+        rr: Optional[int] = None,
+    ) -> None:
+        """Durably commit consumption progress (manual mode): the owner
+        calls this only once the step that consumed these documents is
+        journaled, closing the at-least-once replay window.  ``rr`` is
+        the rotation cursor (``rotation_cursor``) read right after the
+        committed documents were handed out; omit it only when nothing
+        has been prefetched past this commit (the live cursor is then
+        already aligned)."""
+        for c in self.group.consumers:
+            if c.partition in offsets:
+                c.commit_to(offsets[c.partition], now=now)
+        self._committed_rr = self._rr if rr is None else int(rr)
+
+    def lag(self) -> int:
+        """Unconsumed documents: unforwarded log suffix + queued + staged."""
+        return (
+            self.group.total_lag()
+            + sum(q.depth() for q in self.queues)
+            + len(self._staged)
+        )
 
     def state_dict(self) -> Dict:
         """Exact-resume state: committed offsets PLUS in-flight messages
@@ -99,6 +167,49 @@ class TokenPipeline:
     # -- iteration -------------------------------------------------------------
     def _pump(self) -> int:
         return self.group.step_all(self.queues)
+
+    # -- ordered mode (elastic training) ---------------------------------------
+    def _next_ordered_doc(self) -> Optional[Message]:
+        """Next document in strict partition rotation, or None when the
+        rotation is blocked (partition not yet forwarded — pump and
+        retry) or the stream is exhausted.  ``_rr`` advances only on a
+        pop or on skipping a *permanently* exhausted partition, so the
+        rotation is a pure function of the stream state — never of pump
+        timing — which is what makes replay deterministic."""
+        n = len(self.queues)
+        for _ in range(n):
+            p = self._rr % n
+            msg = self.queues[p].get()
+            if msg is not None:
+                self._rr += 1
+                return msg
+            if self.group.consumers[p].lag() > 0:
+                return None  # blocked on partition p: caller pumps
+            self._rr += 1  # partition p is drained for good: skip it
+        return None  # every partition exhausted
+
+    def next_docs(self, n: int) -> Optional[List[Message]]:
+        """The next ``n`` documents in deterministic order (ordered mode),
+        with their (partition, offset) provenance — or None if the stream
+        cannot currently supply ``n``.  Partially gathered documents stay
+        staged (never lost) for the next call."""
+        assert self.config.ordered, "next_docs requires PipelineConfig.ordered"
+        stall = 0
+        while len(self._staged) < n:
+            msg = self._next_ordered_doc()
+            if msg is None:
+                pumped = self._pump()
+                if pumped == 0:
+                    stall += 1
+                    if stall >= 2:
+                        return None
+                else:
+                    stall = 0
+                continue
+            stall = 0
+            self._staged.append(msg)
+        out, self._staged = self._staged[:n], self._staged[n:]
+        return out
 
     def _next_doc(self) -> Optional[np.ndarray]:
         for _ in range(len(self.queues)):

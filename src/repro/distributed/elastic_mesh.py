@@ -13,7 +13,10 @@ infrastructure level).
 
 ``reshard_state`` is the core primitive; the autoscaler decides WHEN
 (queue depth / straggler reports), the supervisor handles WHY (node
-loss), this module handles HOW.
+loss), this module handles HOW.  The live caller is
+``training.job.TrainingJob``: the pool's ``on_scale`` hook actuates a
+scale decision as snapshot -> ``mesh_for_devices`` at the new DP degree
+-> ``reshard_state`` -> resume at the exact stream position.
 """
 
 from __future__ import annotations
@@ -39,6 +42,13 @@ def mesh_for_devices(
     data = max(1, n_devices // model)
     devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
     return Mesh(devs, axis_names)
+
+
+def dp_degree(mesh: Optional[Mesh]) -> int:
+    """The data-parallel degree a mesh implies (1 for no mesh)."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get("data", 1))
 
 
 def reshard_state(

@@ -25,9 +25,12 @@ from typing import List, Optional
 
 @dataclass
 class WorkerSpec:
-    args: List[str]                  # argv after `python -m repro.launch.train`
+    args: List[str]                  # argv after `python -m <module>`
     heartbeat_file: str
     name: str = "worker-0"
+    # Any job driver that heartbeats to a file and resumes with --resume
+    # can be supervised this way; training is the default.
+    module: str = "repro.launch.train"
 
 
 @dataclass
@@ -59,7 +62,7 @@ class ProcessSupervisor:
         self.proc: Optional[subprocess.Popen] = None
 
     def _launch(self, resume: bool) -> None:
-        argv = [self.python, "-m", "repro.launch.train", *self.spec.args,
+        argv = [self.python, "-m", self.spec.module, *self.spec.args,
                 "--heartbeat-file", self.spec.heartbeat_file]
         if resume:
             argv.append("--resume")

@@ -1,20 +1,20 @@
-"""End-to-end training driver on the Reactive Liquid runtime.
+"""Training launcher: a thin shim over ``training.job.TrainingJob``.
 
-Wires every layer together (deliverable b's end-to-end example):
-
-  token topic -> virtual consumer group -> assembly queues   [paper's core]
-    -> train_step (jit, sharded if a mesh is configured)
-      -> event-sourced checkpoints (snapshot + per-step journal)
-        -> CRDT metrics replica -> hub
-          -> supervision heartbeat file (cluster.py restarts us if silent)
-
-Crash-and-resume is exact: the checkpoint carries the pipeline state
-(offsets + in-flight messages), so a Let-It-Crash restart continues the
-stream without skipping or re-training a single batch.
+The training loop, heartbeat cadence, checkpoint cadence, DP scaling,
+and crash recovery all live in the job object (the same one the
+step-driven tests and the thread-backed runtime drive); this module only
+parses flags, builds the token log, and reports progress.  The
+``ProcessSupervisor`` in ``launch/cluster.py`` wraps this entry point to
+get Let-It-Crash at the OS-process level — on a silent heartbeat it
+kills the process and relaunches with ``--resume``, and the job rebuilds
+from the event-sourced checkpoint + token log at the exact committed
+stream position.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 50
-  ... --resume --checkpoint-dir /tmp/ckpt     # resume after a crash
+  ... --resume --checkpoint-dir /tmp/ckpt       # resume after a crash
+  ... --dp 2 --elastic --max-dp 4               # autoscaled DP elasticity
+  ... --scale-at 10:4 --kill-worker-at 6        # scripted scale/chaos drill
 """
 
 from __future__ import annotations
@@ -25,16 +25,14 @@ import os
 import time
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint.store import CheckpointStore
 from repro.config import TrainingConfig, get_arch
-from repro.data.pipeline import PipelineConfig, TokenPipeline, build_token_log
+from repro.core.elastic import AutoscalerConfig
+from repro.data.pipeline import build_token_log
 from repro.models.zoo import build_model
-from repro.telemetry.metrics import MetricsHub, MetricsReplica
-from repro.training.train_step import init_train_state, make_train_step
+from repro.telemetry.metrics import MetricsHub
+from repro.training.job import TrainingJob
 
 
 def heartbeat(path: Optional[str], step: int) -> None:
@@ -44,24 +42,14 @@ def heartbeat(path: Optional[str], step: int) -> None:
             fh.write(f"{step} {time.time()}\n")
 
 
-def build_pipeline(args, vocab_size: int) -> TokenPipeline:
-    log = build_token_log(
-        vocab_size=vocab_size,
-        num_docs=args.num_docs,
-        doc_len=args.seq_len + 1,
-        partitions=args.partitions,
-        seed=args.data_seed,
-    )
-    return TokenPipeline(
-        log,
-        PipelineConfig(
-            partitions=args.partitions,
-            num_queues=args.queues,
-            batch_size=args.batch_size,
-            seq_len=args.seq_len,
-            scheduler=args.scheduler,
-        ),
-    )
+def parse_scale_at(spec: Optional[str]) -> dict:
+    """``"10:4,20:2"`` -> {10: 4, 20: 2} (scripted scale events)."""
+    out = {}
+    if spec:
+        for part in spec.split(","):
+            step, units = part.split(":")
+            out[int(step)] = int(units)
+    return out
 
 
 def main(argv=None) -> int:
@@ -73,9 +61,7 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--partitions", type=int, default=3)
-    ap.add_argument("--queues", type=int, default=8)
     ap.add_argument("--num-docs", type=int, default=4096)
-    ap.add_argument("--scheduler", default="jsq")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--schedule", default="cosine")
     ap.add_argument("--microbatch", type=int, default=0)
@@ -84,11 +70,31 @@ def main(argv=None) -> int:
     ap.add_argument("--checkpoint-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--heartbeat-file", default=None)
-    ap.add_argument("--crash-at-step", type=int, default=0,
-                    help="failure drill: hard-exit at this step")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    # -- elasticity / chaos (the live pool event surface) ------------------
+    ap.add_argument("--dp", type=int, default=1,
+                    help="initial data-parallel degree (pool workers)")
+    ap.add_argument("--max-dp", type=int, default=8)
+    ap.add_argument("--elastic", action="store_true",
+                    help="autoscale DP on stream backlog (queue-depth policy)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="device-level DP: scale events reshard onto a new "
+                         "mesh (needs >= dp * model-parallel devices)")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--scale-at", default=None, metavar="STEP:UNITS[,..]",
+                    help="scripted scale events, e.g. 10:4,20:2")
+    ap.add_argument("--kill-worker-at", type=int, default=0,
+                    help="chaos drill: silence a DP worker at this step")
+    ap.add_argument("--crash-at-step", type=int, default=0,
+                    help="failure drill: hard-exit at this step")
+    ap.add_argument("--heartbeat-timeout", type=float, default=5.0,
+                    help="pool-level worker heartbeat timeout (now-ticks)")
+    # accepted for back-compat with older drill scripts; the ordered
+    # pipeline derives queue count and routing from the partition count
+    ap.add_argument("--queues", type=int, default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--scheduler", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, smoke=not args.full_size)
@@ -102,82 +108,76 @@ def main(argv=None) -> int:
         grad_compression=args.grad_compression,
     )
     model = build_model(cfg, compute_dtype=jnp.float32)
-    pipeline = build_pipeline(args, cfg.vocab_size)
-    step_fn = jax.jit(make_train_step(model, tcfg))
+    log = build_token_log(
+        vocab_size=cfg.vocab_size,
+        num_docs=args.num_docs,
+        doc_len=args.seq_len + 1,
+        partitions=args.partitions,
+        seed=args.data_seed,
+    )
 
+    scale_at = parse_scale_at(args.scale_at)
     hub = MetricsHub()
-    metrics_replica = MetricsReplica(f"trainer-{os.getpid()}")
-
-    store = CheckpointStore(args.checkpoint_dir) if args.checkpoint_dir else None
-    state = None
-    start_step = 0
-    if args.resume and store is not None:
-        template = jax.eval_shape(
-            lambda r: init_train_state(model, tcfg, r), jax.random.PRNGKey(args.seed)
-        )
-        template = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
-        restored = store.restore_latest(template)
-        if restored is not None:
-            state, meta, events = restored
-            start_step = meta["step"]
-            # replay journal suffix: the newest stream position wins
-            pipe_state = meta.get("pipeline")
-            if pipe_state:
-                pipeline.load_state_dict(pipe_state)
-            for ev in events:
-                start_step = max(start_step, ev.data["step"])
-            offs = store.latest_offsets()
-            if offs and not pipe_state:
-                pipeline.restore_offsets(offs)
-            print(f"[resume] restored step={start_step} "
-                  f"offsets={pipeline.offsets()}", flush=True)
-    if state is None:
-        state = init_train_state(model, tcfg, jax.random.PRNGKey(args.seed))
-
-    losses = []
     t0 = time.time()
-    step = start_step
-    while step < args.steps:
-        batch = pipeline.next_batch()
-        if batch is None:
-            print("[train] stream exhausted", flush=True)
-            break
-        jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        state, m = step_fn(state, jb)
-        step = int(state.opt.step)
-        loss = float(m["loss"])
-        losses.append(loss)
-        metrics_replica.incr("steps")
-        metrics_replica.incr("tokens", args.batch_size * args.seq_len)
-        metrics_replica.gauge("loss", loss, timestamp=time.time())
+
+    def on_step(step: int, metrics) -> None:
         heartbeat(args.heartbeat_file, step)
-        if store is not None:
-            store.record_step(step, offsets=pipeline.offsets(),
-                              metrics={"loss": loss})
-            if step % args.checkpoint_every == 0:
-                store.save(state, step=step,
-                           extra={"pipeline": pipeline.state_dict()})
         if step % args.log_every == 0 or step == args.steps:
-            hub.ingest(metrics_replica)
+            hub.ingest(job.pool.merged_metrics())
             print(json.dumps({
-                "step": step, "loss": round(loss, 4),
-                "lr": round(float(m["lr"]), 6),
-                "grad_norm": round(float(m["grad_norm"]), 3),
-                "tokens": hub.counter("tokens"),
+                "step": step,
+                "loss": round(float(metrics["loss"]), 4),
+                "lr": round(float(metrics["lr"]), 6),
+                "grad_norm": round(float(metrics["grad_norm"]), 3),
+                "dp": job.dp,
+                "tokens": hub.counter("train.tokens"),
                 "wall_s": round(time.time() - t0, 1),
             }), flush=True)
+        if step in scale_at:
+            print(f"[scale] step {step}: dp {job.dp} -> {scale_at[step]}",
+                  flush=True)
+            job.request_scale(scale_at[step])
+        if args.kill_worker_at and step == args.kill_worker_at:
+            victim = job.kill_worker(0)
+            print(f"[chaos] step {step}: silenced {victim}", flush=True)
         if args.crash_at_step and step == args.crash_at_step:
             print(f"[drill] hard crash at step {step}", flush=True)
             os._exit(42)  # no cleanup — Let-It-Crash
 
-    if store is not None:
-        store.save(state, step=step, extra={"pipeline": pipeline.state_dict()})
-    hub.ingest(metrics_replica)
+    job = TrainingJob(
+        model, cfg, tcfg, log,
+        batch_size=args.batch_size,
+        seq_len=args.seq_len,
+        dp=args.dp,
+        max_dp=args.max_dp,
+        elastic=args.elastic,
+        autoscaler=AutoscalerConfig(
+            min_workers=1, max_workers=args.max_dp,
+            high_watermark=8.0, low_watermark=0.25, cooldown=5.0,
+        ),
+        heartbeat_timeout=args.heartbeat_timeout,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+        use_mesh=args.mesh,
+        model_parallel=args.model_parallel,
+        seed=args.seed,
+        on_step=on_step,
+    )
+    if args.resume:
+        print(f"[resume] restored step={job.applied_step()} "
+              f"offsets={job.committed_offsets()}", flush=True)
+
+    final_step = job.run(args.steps)
+    hub.ingest(job.pool.merged_metrics())
     print(json.dumps({
-        "final_step": step,
-        "final_loss": losses[-1] if losses else None,
-        "first_loss": losses[0] if losses else None,
-        "tokens": hub.counter("tokens"),
+        "final_step": final_step,
+        "final_loss": job.losses[-1] if job.losses else None,
+        "first_loss": job.losses[0] if job.losses else None,
+        "dp": job.dp,
+        "rescales": len(job.scale_log),
+        "restarts": job.counter("train.trainer_restarts"),
+        "tokens": hub.counter("train.tokens"),
     }), flush=True)
     return 0
 

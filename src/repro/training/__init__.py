@@ -1,2 +1,3 @@
 from repro.training.optimizer import AdamWState, adamw_init, adamw_update, lr_schedule
 from repro.training.train_step import TrainState, make_train_step
+from repro.training.job import TrainerWorker, TrainingJob

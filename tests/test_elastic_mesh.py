@@ -68,15 +68,133 @@ _PROGRAM = textwrap.dedent("""
 """)
 
 
-def test_remesh_preserves_training_trajectory():
+def _run_program(program: str) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     proc = subprocess.run(
-        [sys.executable, "-c", _PROGRAM],
+        [sys.executable, "-c", program],
         capture_output=True, text=True, timeout=900, env=env,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
-    out = json.loads(line[len("RESULT "):])
+    return json.loads(line[len("RESULT "):])
+
+
+def test_remesh_preserves_training_trajectory():
+    out = _run_program(_PROGRAM)
     assert out["match"], out
     assert abs(out["loss_golden"] - out["loss_elastic"]) < 1e-4
+
+
+_ROUNDTRIP_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import TrainingConfig, get_arch
+    from repro.distributed.elastic_mesh import dp_degree, mesh_for_devices, reshard_state
+    from repro.distributed.param_shardings import make_rules, train_state_shardings
+    from repro.models.zoo import build_model
+    from repro.training.train_step import init_train_state
+
+    cfg = get_arch("llama3.2-1b", smoke=True)
+    tcfg = TrainingConfig(learning_rate=1e-3, warmup_steps=0, schedule="constant")
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    baseline = [np.asarray(x) for x in jax.tree.leaves(state)]
+
+    ok_bits, ok_shard, degrees = True, True, []
+    for dp in (1, 2, 4, 3):
+        mesh = mesh_for_devices(dp, model_parallel=1)
+        degrees.append(dp_degree(mesh))
+        state = reshard_state(state, cfg, mesh)
+        # every leaf bitwise equal to the original host values...
+        for ref, leaf in zip(baseline, jax.tree.leaves(state)):
+            if not np.array_equal(ref, np.asarray(leaf)):
+                ok_bits = False
+        # ...and laid out with exactly the sharding this mesh implies
+        rules = make_rules(cfg, mesh)
+        expected = train_state_shardings(state, cfg, mesh, rules)
+        for leaf, want in zip(jax.tree.leaves(state), jax.tree.leaves(expected)):
+            if not leaf.sharding.is_equivalent_to(want, leaf.ndim):
+                ok_shard = False
+    print("RESULT " + json.dumps(
+        {"bitwise": ok_bits, "shardings": ok_shard, "degrees": degrees}))
+""")
+
+
+def test_reshard_state_roundtrip_1_2_4_3_bitwise_and_sharded():
+    """Property/regression (ISSUE 3 satellite): a TrainState round-
+    tripped across DP degrees 1 -> 2 -> 4 -> 3 keeps every leaf bitwise
+    identical and lands with the sharding each new mesh implies."""
+    out = _run_program(_ROUNDTRIP_PROGRAM)
+    assert out["degrees"] == [1, 2, 4, 3]
+    assert out["bitwise"], "resharding altered tensor bits"
+    assert out["shardings"], "a leaf kept a stale sharding after remesh"
+
+
+_ELASTIC_JOB_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import TrainingConfig, get_arch
+    from repro.core.elastic import AutoscalerConfig
+    from repro.data.pipeline import build_token_log
+    from repro.models.zoo import build_model
+    from repro.training.job import TrainingJob
+
+    cfg = get_arch("llama3.2-1b", smoke=True)
+    tcfg = TrainingConfig(learning_rate=1e-3, warmup_steps=0, schedule="constant")
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    log = build_token_log(cfg.vocab_size, 256, doc_len=33, partitions=4)
+    job = TrainingJob(
+        model, cfg, tcfg, log, batch_size=8, seq_len=32, dp=2, max_dp=4,
+        elastic=True, use_mesh=True, model_parallel=1,
+        autoscaler=AutoscalerConfig(
+            min_workers=2, max_workers=4, high_watermark=2.0,
+            low_watermark=0.1, cooldown=2.0, step_fraction=1.0,
+        ),
+    )
+    start_mesh = dict(job.mesh.shape)
+    final = job.run(20)
+    consumed = sum(job.committed_offsets().values())
+    # per-step offset deltas must tile the stream exactly (no skip/double)
+    prev, gapfree = {}, True
+    for step in range(1, final + 1):
+        offs = job.step_offsets[step]
+        for p, off in offs.items():
+            if off <= prev.get(p, 0):
+                gapfree = False
+            prev[p] = off
+    print("RESULT " + json.dumps({
+        "final": final,
+        "start_mesh": start_mesh,
+        "end_mesh": dict(job.mesh.shape),
+        "scale_log": [[o, n, m] for (_, o, n, m) in job.scale_log],
+        "scale_events": len(job.pool.controller.scale_events),
+        "consumed": consumed,
+        "gapfree": gapfree,
+        "workers": len(job.pool.active_workers()),
+        "loss_finite": bool(np.isfinite(job.losses[-1])),
+    }))
+""")
+
+
+def test_autoscaler_reshards_dp_2_to_4_mid_run():
+    """ACCEPTANCE (ISSUE 3): the queue-depth autoscaler's decision
+    actuates through the pool's on_scale hook as mesh_for_devices at the
+    new DP degree + reshard_state, mid-run, without losing stream
+    position."""
+    out = _run_program(_ELASTIC_JOB_PROGRAM)
+    assert out["final"] == 20
+    assert out["start_mesh"] == {"data": 2, "model": 1}
+    assert out["end_mesh"]["data"] == 4, out
+    assert out["scale_events"] >= 1
+    assert any(o == 2 and n == 4 for (o, n, m) in out["scale_log"]), out
+    # scale happened mid-run and the stream position was exact:
+    # 20 steps x 8 docs, no gaps, no double consumption
+    assert out["consumed"] == 160
+    assert out["gapfree"], "a step skipped or re-consumed an offset"
+    assert out["workers"] == 4
+    assert out["loss_finite"]

@@ -102,6 +102,40 @@ def test_process_level_failure_drill(tmp_path):
     assert "finished" in kinds
 
 
+def test_threaded_runtime_heals_killed_trainer():
+    """The generalized runtime (ISSUE 3 satellite) drives an ElasticPool-
+    backed *training* job under wall-clock supervision: a silenced DP
+    worker is healed and training completes with exact consumption."""
+    from repro.config import TrainingConfig, get_arch
+    from repro.core.runtime import ThreadedRuntime
+    from repro.data.pipeline import build_token_log
+    from repro.models.zoo import build_model
+    from repro.training.job import TrainingJob
+
+    cfg = get_arch("llama3.2-1b", smoke=True)
+    tcfg = TrainingConfig(learning_rate=1e-3, warmup_steps=0,
+                          schedule="constant")
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    log = build_token_log(cfg.vocab_size, 48, doc_len=17, partitions=3)
+    job = TrainingJob(model, cfg, tcfg, log, batch_size=4, seq_len=16,
+                      dp=2, max_dp=2, heartbeat_timeout=0.25,
+                      shard_budget=1)
+    rt = ThreadedRuntime(job, tick=0.005)
+    rt.start()
+    deadline = time.monotonic() + 60.0
+    while job.applied_step() < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)  # let it get in flight (incl. the jit compile)
+    killed = rt.kill_worker(0)
+    assert killed.startswith("train:dp")
+    processed = rt.drain(timeout=60.0)
+    rt.stop()
+    assert processed == 12  # 48 docs / batch 4: the whole stream
+    assert job.backlog() == 0
+    assert any(e[1] == "restarted" for e in job.supervisor.events)
+    assert rt.stats.restarts >= 1
+    assert sum(job.committed_offsets().values()) == 48
+
+
 def test_threaded_runtime_heals_killed_worker():
     from repro.core.reactive import ReactiveJob
     from repro.core.runtime import ThreadedRuntime
