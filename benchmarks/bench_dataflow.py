@@ -1,0 +1,174 @@
+"""Multi-stage dataflow study (ISSUE 4): chain shape and backpressure.
+
+Three tables, all on virtual time (deterministic — CI diffs the counters
+exactly):
+
+  * ``dataflow_chain`` — 1-stage vs 3-stage chains on
+    ``simulate_dataflow`` under a preloaded burst, plus a 3-stage run
+    with a mid-chain kill: terminal throughput, per-stage processed, and
+    recovery (a kill costs time, never messages).
+  * ``dataflow_throttle`` — the acceptance experiment, on the *live*
+    ``StageGraph`` (step-driven): a fast stage feeding a
+    capacity-limited slow stage.  With backpressure on, the fast stage's
+    unit target is throttled and the intermediate topic's peak lag is
+    bounded; with it off, the lag grows with the run.  Both rows are in
+    the table so the contrast is auditable.
+  * ``dataflow_occupancy`` — per-stage peak/final task counts for the
+    spike + mid-chain-kill live run (the elasticity trace).
+
+Frozen to ``BENCH_dataflow.json`` by ``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.dataflow import Stage, StageGraph
+from repro.core.elastic import AutoscalerConfig
+from repro.core.simulation import (
+    SimStageConfig,
+    WorkloadConfig,
+    simulate_dataflow,
+)
+from repro.data.topics import MessageLog
+
+MESSAGES = 800
+
+
+def chain_rows() -> List[Dict]:
+    wl = WorkloadConfig(total_messages=6000, partitions=3, batch_n=10,
+                        t_consume=0.0005, t_process0=0.01)
+    rows = []
+    for n_stages, kill in ((1, None), (3, None), (3, (10.0, 1))):
+        stages = [SimStageConfig(f"s{i}", t_process0=0.01)
+                  for i in range(n_stages)]
+        r = simulate_dataflow(stages, wl, duration=120.0,
+                              kill_stage_at=kill, restart_cost=5.0)
+        rows.append({
+            "table": "dataflow_chain",
+            "stages": n_stages,
+            "mid_chain_kill": kill is not None,
+            "terminal_processed": r.terminal.processed,
+            "per_stage_processed": [s.processed for s in r.stages],
+            "restarts": sum(s.restarts for s in r.stages),
+            "scale_events": sum(s.scale_events for s in r.stages),
+            "peak_intermediate_lag": (
+                max(r.peak_lag(i) for i in range(1, n_stages))
+                if n_stages > 1 else 0
+            ),
+            "throughput_msgs_per_s": round(r.terminal.throughput(), 1),
+        })
+    return rows
+
+
+def make_throttle_graph(backpressure: bool) -> StageGraph:
+    log = MessageLog()
+    log.create_topic("in", 3)
+    log.create_topic("mid", 3)
+    log.create_topic("out", 3)
+    for i in range(MESSAGES):
+        log.publish("in", payload=i)
+    graph = StageGraph(log, backpressure=backpressure,
+                       throttle_low=8, throttle_high=32)
+    graph.add(Stage(
+        "fast", log, "in", "mid", process=lambda m: [m.payload],
+        mailbox_capacity=4,
+        autoscaler=AutoscalerConfig(high_watermark=4.0, low_watermark=0.5,
+                                    min_workers=1, max_workers=16,
+                                    cooldown=0.0),
+    ))
+    graph.add(Stage(
+        "slow", log, "mid", "out", process=lambda m: [m.payload],
+        mailbox_capacity=2, step_budget=1,
+        autoscaler=AutoscalerConfig(high_watermark=4.0, low_watermark=0.5,
+                                    min_workers=1, max_workers=2,
+                                    cooldown=0.0),
+    ))
+    return graph
+
+
+def throttle_rows() -> List[Dict]:
+    rows = []
+    for backpressure in (True, False):
+        graph = make_throttle_graph(backpressure)
+        now = 0.0
+        # fixed window first (the lag comparison), then drain
+        for _ in range(120):
+            graph.step(now)
+            now += 1.0
+        peak = graph.peak_lag("slow")
+        lag_at_window = graph.stage("slow").input_lag()
+        graph.run_to_completion(now=now)
+        rows.append({
+            "table": "dataflow_throttle",
+            "backpressure": backpressure,
+            "messages": MESSAGES,
+            "peak_mid_topic_lag": peak,
+            "mid_topic_lag_at_t120": lag_at_window,
+            "fast_stage_throttled": graph.stage("fast").pool.counter(
+                "stage.throttled"),
+            "fast_stage_peak_target": max(
+                t for (_, t, _, _) in graph.stage("fast").pool.occupancy_log),
+            "terminal_outputs": len(graph.stage("slow").outputs()),
+            "drain_ticks": graph.steps,
+        })
+    return rows
+
+
+def occupancy_rows() -> List[Dict]:
+    """Spike + mid-chain kill on a live 3-stage graph."""
+    log = MessageLog()
+    for i in range(4):
+        log.create_topic(f"t{i}", 3)
+    graph = StageGraph(log)
+    for i in range(3):
+        graph.add(Stage(
+            f"s{i}", log, f"t{i}", f"t{i + 1}",
+            process=lambda m: [m.payload],
+            heartbeat_timeout=3.0,
+            autoscaler=AutoscalerConfig(high_watermark=6.0, low_watermark=0.5,
+                                        min_workers=1, max_workers=8,
+                                        cooldown=0.0),
+        ))
+    head = graph.stage("s0")
+    # calm head / 4x spike / calm tail
+    schedule = [2] * 10 + [8] * 10 + [2] * 10
+    now, killed = 0.0, False
+    for arriving in schedule:
+        for _ in range(arriving):
+            head.submit(int(now), now=now)
+        if now == 15.0:
+            graph.kill_stage("s1")
+            killed = True
+        graph.step(now)
+        now += 1.0
+    graph.run_to_completion(now=now)
+    rows = []
+    for name, s in graph.stages.items():
+        targets = [t for (_, t, _, _) in s.pool.occupancy_log]
+        rows.append({
+            "table": "dataflow_occupancy",
+            "stage": name,
+            "killed": killed and name == "s1",
+            "processed": s.pool.counter("task.processed"),
+            "published": s.pool.counter("stage.published"),
+            "restarts": s.pool.counter("stage.task_restarts"),
+            "peak_target_units": max(targets),
+            "final_target_units": targets[-1],
+            "peak_input_lag": graph.peak_lag(name),
+        })
+    return rows
+
+
+def run() -> List[Dict]:
+    t0 = time.time()
+    rows = chain_rows() + throttle_rows() + occupancy_rows()
+    for row in rows:
+        row.setdefault("wall_s", round(time.time() - t0, 2))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,717 @@
+"""Multi-stage reactive dataflow: a ``StageGraph`` of ElasticPools over
+durable topics.
+
+The paper's Liquid setting is not one pool but *chained incremental
+jobs*: Samza-style processing stages connected by Kafka topics, each
+independently elastic and resilient (paper §2–§3).  This module adds the
+missing layer above ``core.pool``:
+
+  * a **Stage** is one five-layer slice — durable input topic
+    (messaging) → ``VirtualConsumerGroup`` in *manual-commit* mode
+    (virtual messaging) → worker mailboxes (async messaging) →
+    ``ElasticPool`` of workers (processing) → durable output topic —
+    with the **chained commit-after-publish** contract: a consumed
+    offset becomes committable only once *every* output it produced is
+    durably appended downstream.  A chaos-killed worker re-admits
+    through the pool; a killed *process* replays the uncommitted suffix
+    from the topic, and publish-side dedup (keyed by the input's
+    ``(partition, offset)`` source, which survives process death) keeps
+    the downstream topic exactly-once.
+  * a **StageGraph** wires stages into a DAG — edges are the topics
+    themselves: stage B is downstream of stage A iff B consumes the
+    topic A publishes.  Linear chains, fan-out (two stages, two consumer
+    groups, one topic), and fan-in (two stages publishing one topic,
+    keyed re-partitioning via ``data.topics.partition_for_key``) all
+    fall out of that identification.  The graph steps every stage under
+    one clock and propagates **backpressure upstream**: a downstream
+    stage's pending work (input lag + queued + in-flight + rejected
+    demand) feeds the upstream pool's ``throttle`` hook as a unit cap,
+    so a slow stage slows its producers instead of ballooning the
+    intermediate topic.
+
+``ReactiveJob`` is a one-stage graph, ``ServingJob`` a two-stage graph
+(decode → response-publish), and ``TrainingJob``'s token-ingestion front
+half a terminal stage (``training.job.TokenIngestStage``) — see those
+modules.  The virtual-time restatement for paper-style figures is
+``core.simulation.simulate_dataflow``.
+
+Exactly-once bookkeeping (all bounded O(uncommitted suffix), evicted on
+every watermark advance — the ``DedupWindow`` memory invariant):
+
+  * ``_admitted``   — inputs forwarded into the pool, not yet done
+    (blocks double-forwarding when a restarted virtual consumer re-reads
+    the suffix its predecessor already delivered);
+  * ``_pub``        — ``(partition, offset, k)`` outputs already
+    appended downstream (makes publishing idempotent under pool-level
+    at-least-once redelivery *and* cross-process replay);
+  * ``_expected`` / ``_pubcount`` — how many outputs input ``(p, o)``
+    produces vs. how many are durably downstream; an input whose outputs
+    are all present replays as a commit, not a re-execution.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.elastic import AutoscalerConfig
+from repro.core.messages import Mailbox, Message
+from repro.core.pool import DedupWindow, ElasticPool, WorkerBase
+from repro.core.scheduler import make_scheduler
+from repro.core.state import EventJournal
+from repro.core.supervision import HeartbeatDetector, Supervisor
+from repro.core.virtual_messaging import VirtualConsumerGroup
+from repro.data.topics import MessageLog, Topic
+
+class StageWorkerStats:
+    """Live counter view over the worker's CRDT replica (the ReactiveTask
+    ``stats`` surface, kept for back-compat)."""
+
+    def __init__(self, worker: "StageWorker") -> None:
+        self._worker = worker
+
+    @property
+    def processed(self) -> int:
+        return self._worker.metrics.value("task.processed")
+
+    @property
+    def emitted(self) -> int:
+        return self._worker.metrics.value("task.emitted")
+
+    @property
+    def deduped(self) -> int:
+        return self._worker.metrics.value("task.deduped")
+
+
+class StageWorker(WorkerBase):
+    """A function worker inside a stage's pool.
+
+    ``process`` sees the (unwrapped) input message and returns output
+    values.  Results park in ``_ready`` until the stage harvests them
+    (pool ``collect`` runs before supervision can replace the worker, so
+    a kill between processing and harvest loses nothing).  The dedup
+    window is keyed by the input's ``(partition, offset)`` — stable
+    across redelivery — and *memoizes the outputs*, so a redelivered
+    input replays its outputs into the harvest without re-running
+    effects (exactly-once effects within a process lifetime; the stage's
+    publish-side dedup covers cross-process replay)."""
+
+    _ids = itertools.count()
+
+    def __init__(
+        self,
+        stage_name: str,
+        process: Callable[[Message], List[Any]],
+        mailbox_capacity: int = 0,
+        dedup_window: int = 65536,
+        step_budget: int = 8,
+    ) -> None:
+        self.task_id = next(StageWorker._ids)
+        super().__init__(
+            f"{stage_name}:task{self.task_id}",
+            mailbox_capacity=mailbox_capacity,
+        )
+        self.process = process
+        self.stats = StageWorkerStats(self)
+        self.dedup = DedupWindow(dedup_window)
+        self.step_budget = step_budget
+        self._ready: List[Tuple[Message, List[Any]]] = []
+
+    def step(self, now: float = 0.0) -> int:
+        n = 0
+        while n < self.step_budget and self.alive:
+            msg = self.mailbox.get()
+            if msg is None:
+                break
+            key = (
+                (msg.partition, msg.offset)
+                if msg.offset >= 0 else ("id", msg.msg_id)
+            )
+            if self.dedup.seen(key):
+                self.metrics.incr("task.deduped")
+                memo = self.dedup.lookup(key)
+                if memo is not None:
+                    # Redelivered after processing: replay the memoized
+                    # outputs (publish dedup drops any already landed).
+                    self._ready.append((msg, list(memo)))
+                continue
+            outputs = list(self.process(msg) or [])
+            self.dedup.remember(key, outputs)
+            self.metrics.incr("task.processed")
+            if outputs:
+                self.metrics.incr("task.emitted", len(outputs))
+            self._ready.append((msg, outputs))
+            n += 1
+        return n
+
+    def load(self) -> int:
+        return self.mailbox.depth() + len(self._ready)
+
+    def inflight(self) -> int:
+        return len(self._ready)
+
+    def take_ready(self) -> List[Tuple[Message, List[Any]]]:
+        out, self._ready = self._ready, []
+        return out
+
+    def drain_for_readmission(self) -> List[Message]:
+        out = [msg for msg, _ in self._ready]
+        self._ready = []
+        out.extend(self.mailbox.drain())
+        return out
+
+
+class _GuardedBox:
+    """A virtual consumer's view of one pool mailbox: admission dedup
+    runs *before* enqueue (a skip still advances the consumer's read
+    position — the input is already accounted for), and a raising ``put``
+    leaves no bookkeeping behind, so backpressured messages are re-read
+    cleanly."""
+
+    def __init__(self, stage: "Stage", box: Mailbox) -> None:
+        self.stage = stage
+        self.box = box
+
+    def depth(self) -> int:
+        return self.box.depth()
+
+    def put(self, msg: Message) -> None:
+        if not self.stage._admission_check(msg):
+            return
+        self.box.put(msg)  # may raise MailboxOverflow -> vc backpressure
+        self.stage._note_admitted(msg)
+
+
+class _IngressView:
+    """Same guard, for stages that admit through a central ingress (or a
+    subclass ``_admit`` adapter, e.g. the serving decode stage)."""
+
+    def __init__(self, stage: "Stage") -> None:
+        self.stage = stage
+
+    def depth(self) -> int:
+        return self.stage.pool.queue_depth()
+
+    def put(self, msg: Message) -> None:
+        if not self.stage._admission_check(msg):
+            return
+        if self.stage._admit(msg):  # may raise MailboxOverflow
+            self.stage._note_admitted(msg)
+
+
+class Stage:
+    """One dataflow stage: topic → virtual consumers (manual commit) →
+    elastic worker pool → topic, commit-after-publish.
+
+    Two processing modes:
+
+      * **function mode** (``process=``): the stage owns an
+        ``ElasticPool`` of ``StageWorker``s; ``feed`` selects the paper
+        pattern — ``"mailboxes"`` (virtual consumers are the dispatcher,
+        scheduler-routed into per-task mailboxes; the ``ReactiveJob``
+        shape) or ``"ingress"`` (one central bounded mailbox; the
+        serving shape).
+      * **adapter mode** (``pool=``): a subclass supplies an existing
+        pool plus ``_admit`` / ``_take_results`` (how ``ServingJob``
+        mounts ``ElasticServingPool`` as its decode stage).
+
+    ``key_fn`` computes the output partitioning key — keyed inter-stage
+    re-partitioning: equal keys land in the same downstream partition
+    (``data.topics.partition_for_key``), which is what makes fan-in
+    order-preserving per key.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        log: MessageLog,
+        in_topic: "str | Topic",
+        out_topic: "str | Topic | None" = None,
+        *,
+        process: Optional[Callable[[Message], List[Any]]] = None,
+        key_fn: Optional[Callable[[Any], Optional[str]]] = None,
+        feed: str = "mailboxes",
+        initial_tasks: int = 2,
+        scheduler: str = "round_robin",
+        batch_n: int = 8,
+        step_budget: int = 8,
+        mailbox_capacity: int = 0,
+        ingress_capacity: int = 0,
+        autoscaler: Optional[AutoscalerConfig] = None,
+        elastic: bool = True,
+        heartbeat_timeout: float = 5.0,
+        supervisor: Optional[Supervisor] = None,
+        journal_factory: Optional[Callable[[int], EventJournal]] = None,
+        autoscale_lag_cap: int = 256,
+        dedup_window: int = 65536,
+        pool: Optional[ElasticPool] = None,
+        source: Optional[Any] = None,
+        metric_prefix: str = "stage",
+        worker_noun: str = "task",
+    ) -> None:
+        if feed not in ("mailboxes", "ingress"):
+            raise ValueError(f"feed must be 'mailboxes' or 'ingress', got {feed!r}")
+        self.name = name
+        self.log = log
+        self.in_topic: Topic = log.get(in_topic) if isinstance(in_topic, str) else in_topic
+        self.out_topic: Optional[Topic] = (
+            (log.get(out_topic) if isinstance(out_topic, str) else out_topic)
+            if out_topic is not None else None
+        )
+        self.key_fn = key_fn
+        self.feed = feed
+        self.source = source
+        self.autoscale_lag_cap = autoscale_lag_cap
+        self._px = metric_prefix
+
+        self.consumers = VirtualConsumerGroup(
+            name,
+            self.in_topic,
+            scheduler_factory=lambda: make_scheduler(scheduler),
+            batch_size=batch_n,
+            journal_factory=journal_factory,
+            commit_policy="manual",
+        )
+
+        if pool is not None:
+            self.pool = pool
+        else:
+            if process is None:
+                raise ValueError("Stage needs either process= or pool=")
+            self.pool = ElasticPool(
+                name,
+                lambda: StageWorker(
+                    name, process,
+                    mailbox_capacity=mailbox_capacity,
+                    dedup_window=dedup_window,
+                    step_budget=step_budget,
+                ),
+                scheduler=scheduler,
+                initial_units=initial_tasks,
+                autoscaler=autoscaler
+                or AutoscalerConfig(min_workers=1, max_workers=256, cooldown=0.0),
+                elastic=elastic,
+                supervisor=supervisor,
+                heartbeat_timeout=heartbeat_timeout,
+                ingress_capacity=(ingress_capacity if feed == "ingress" else None),
+                ingress_name=f"{name}-ingress",
+                overflow="defer",
+                retire_mode="redistribute",
+                collect=self._harvest_workers,
+                metric_prefix=metric_prefix,
+                worker_noun=worker_noun,
+            )
+
+        # -- commit-after-publish bookkeeping ------------------------------
+        parts = range(self.in_topic.num_partitions)
+        self._done: Dict[int, set] = {p: set() for p in parts}
+        self._watermark: Dict[int, int] = {
+            c.partition: c.offset for c in self.consumers.consumers
+        }
+        self._admitted: set = set()
+        self._pub = DedupWindow(dedup_window)
+        self._expected: Dict[Tuple[int, int], int] = {}
+        self._pubcount: Dict[Tuple[int, int], int] = {}
+        self._fresh: List[Tuple[Message, List[Any]]] = []
+        self._seed_published()
+        for vc in self.consumers.consumers:
+            self._supervise_vc(vc.partition)
+
+    # -- recovery ------------------------------------------------------------
+    def _seed_published(self) -> None:
+        """Rebuild the publish-dedup state from the durable output topic:
+        everything this stage appended in a previous life, filtered to
+        the uncommitted suffix (entries below the committed watermark can
+        never be re-read, so carrying them would be O(history))."""
+        if self.out_topic is None:
+            return
+        for part in self.out_topic.partitions:
+            for msg in part.read(0, part.end_offset()):
+                if msg.src is None or msg.src[0] != self.name:
+                    continue
+                _, p, o, k, n = msg.src
+                if p < 0 or o < self._watermark.get(p, 0):
+                    continue
+                if not self._pub.seen((p, o, k)):
+                    self._pubcount[(p, o)] = self._pubcount.get((p, o), 0) + 1
+                self._expected[(p, o)] = n
+
+    # -- supervision ---------------------------------------------------------
+    def _supervise_vc(self, partition: int) -> None:
+        self.pool.supervisor.supervise(
+            f"{self.name}:vc{partition}",
+            restart=lambda p=partition: self.consumers.restart_consumer(p),
+            detector=HeartbeatDetector(self.pool.heartbeat_timeout),
+        )
+        self.pool.supervisor.heartbeat(f"{self.name}:vc{partition}", self.pool._now)
+
+    # -- admission -----------------------------------------------------------
+    def _fully_published(self, src: Tuple[int, int]) -> bool:
+        n = self._expected.get(src)
+        return n is not None and self._pubcount.get(src, 0) >= n and n > 0
+
+    def _admission_check(self, msg: Message) -> bool:
+        """True when the input should enter the pool.  Duplicates (an
+        already-admitted, already-done, or already-committed source) are
+        swallowed; a source whose outputs are all durably downstream
+        replays as a commit (``replay_deduped``), not a re-execution."""
+        p, o = msg.partition, msg.offset
+        if o < 0:
+            return True
+        if (
+            o < self._watermark.get(p, 0)
+            or o in self._done.get(p, ())
+            or (p, o) in self._admitted
+        ):
+            self.pool.metrics.incr(f"{self._px}.redelivered")
+            return False
+        if self._fully_published((p, o)):
+            self._mark_done(p, o)
+            self.pool.metrics.incr(f"{self._px}.replay_deduped")
+            return False
+        return True
+
+    def _note_admitted(self, msg: Message) -> None:
+        if msg.offset >= 0:
+            self._admitted.add((msg.partition, msg.offset))
+
+    def _admit(self, msg: Message) -> bool:
+        """Ingress-feed delivery (adapter stages override).  True when
+        the message entered the pool; False when admission handled it
+        some other way (the consumer still advances past it); raises
+        ``MailboxOverflow`` for backpressure (the consumer re-reads)."""
+        self.pool.ingress.put(msg)
+        return True
+
+    def _forward_targets(self) -> Sequence[Any]:
+        if self.feed == "ingress":
+            return [_IngressView(self)]
+        boxes = self.pool.mailboxes()
+        if not boxes:
+            return []
+        return [_GuardedBox(self, b) for b in boxes]
+
+    # -- harvest / publish / commit -------------------------------------------
+    def _harvest_workers(self, now: float) -> None:
+        del now
+        for worker in self.pool.workers:
+            take = getattr(worker, "take_ready", None)
+            if take is not None:
+                self._fresh.extend(take())
+
+    def _take_results(self) -> List[Tuple[int, int, List[Any]]]:
+        """(partition, offset, outputs) per finished input.  Adapter
+        stages override this to harvest from their own pool."""
+        out = []
+        for msg, outputs in self._fresh:
+            if msg.offset >= 0:
+                out.append((msg.partition, msg.offset, outputs))
+            else:
+                # Injected message (no log source): publish-only, keyed
+                # by msg_id so redelivery still cannot double-publish.
+                out.append((-1, msg.msg_id, outputs))
+        self._fresh = []
+        return out
+
+    def _publish_result(
+        self, p: int, o: int, outputs: List[Any], now: float
+    ) -> None:
+        n = len(outputs)
+        from_log = p >= 0
+        if self.out_topic is not None:
+            for k, value in enumerate(outputs):
+                if self._pub.seen((p, o, k)):
+                    continue  # already durably downstream (idempotent)
+                # Default key = provenance: downstream placement becomes
+                # a pure function of the message's identity, never of
+                # publish order — so a replayed run lands every message
+                # in the same partition (bitwise-identical committed
+                # offsets vs. an uninterrupted run).  Keyless round-robin
+                # would re-deal the suffix differently after a restart.
+                key = (
+                    self.key_fn(value) if self.key_fn is not None
+                    else f"{self.name}:{p}:{o}:{k}"
+                )
+                self.out_topic.publish(
+                    Message(
+                        topic=self.out_topic.name,
+                        payload=value,
+                        key=key,
+                        created_at=now,
+                        src=(self.name, p, o, k, n),
+                    )
+                )
+                # _expected/_pubcount drive cross-life replay skipping,
+                # which only applies to log-sourced inputs; injected
+                # sources rely on the bounded _pub window alone (their
+                # plain-dict entries would otherwise never be evicted —
+                # the watermark only covers real partitions).
+                if from_log:
+                    self._pubcount[(p, o)] = self._pubcount.get((p, o), 0) + 1
+                self.pool.metrics.incr(f"{self._px}.published")
+            if from_log:
+                self._expected[(p, o)] = n
+        if from_log:
+            self._mark_done(p, o, now)
+
+    def _mark_done(self, partition: int, offset: int, now: float = 0.0) -> None:
+        """Contiguous-prefix commit: the offset joins the done set; when
+        the watermark advances, the virtual consumer durably commits and
+        every dedup structure evicts below it (the O(uncommitted-suffix)
+        memory bound)."""
+        if partition < 0:
+            return
+        self._admitted.discard((partition, offset))
+        self._done[partition].add(offset)
+        w = self._watermark[partition]
+        while w in self._done[partition]:
+            self._done[partition].discard(w)
+            w += 1
+        if w != self._watermark[partition]:
+            self._watermark[partition] = w
+            self.consumers.consumers[partition].commit_to(w, now=now)
+            self._evict_below_watermark()
+
+    def _evict_below_watermark(self) -> None:
+        wm = self._watermark
+        self._pub.evict_below(wm)
+        dead = [k for k in self._expected if k[1] < wm.get(k[0], 0) and k[0] >= 0]
+        for k in dead:
+            self._expected.pop(k, None)
+            self._pubcount.pop(k, None)
+        for worker in self.pool.workers:
+            window = getattr(worker, "dedup", None)
+            if isinstance(window, DedupWindow):
+                window.evict_below(wm)
+
+    def _publish_and_commit(self, now: float) -> None:
+        for p, o, outputs in self._take_results():
+            self._publish_result(p, o, outputs, now)
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def supervisor(self) -> Supervisor:
+        return self.pool.supervisor
+
+    def input_lag(self) -> int:
+        return self.consumers.total_lag()
+
+    def committed_offsets(self) -> Dict[int, int]:
+        return {c.partition: c.offset for c in self.consumers.consumers}
+
+    def pending(self) -> int:
+        """Work not yet durably downstream: unread input suffix + queued
+        + in-flight + harvested-but-unpublished.  This is also the
+        backpressure signal the graph feeds upstream."""
+        return (
+            self.input_lag()
+            + self.pool.queue_depth()
+            + self.pool.occupancy()
+            + len(self._fresh)
+        )
+
+    def dedup_size(self) -> int:
+        """Total dedup entries held (publish window + worker windows) —
+        what the memory-bound property test watches."""
+        total = len(self._pub) + len(self._admitted) + len(self._expected)
+        for worker in self.pool.workers:
+            window = getattr(worker, "dedup", None)
+            if isinstance(window, DedupWindow):
+                total += len(window)
+        return total
+
+    def outputs(self) -> List[Any]:
+        """Values this stage has published, in per-partition order."""
+        if self.out_topic is None:
+            return []
+        out = []
+        for part in self.out_topic.partitions:
+            for msg in part.read(0, part.end_offset()):
+                if msg.src is not None and msg.src[0] == self.name:
+                    out.append(msg.payload)
+        return out
+
+    # -- input / chaos ---------------------------------------------------------
+    def submit(self, payload: Any, key: Optional[str] = None,
+               now: float = 0.0) -> None:
+        """Durably append an input to the stage's topic (head-of-graph
+        convenience; inner stages are fed by their upstream stage)."""
+        self.in_topic.publish(
+            Message(topic=self.in_topic.name, payload=payload, key=key,
+                    created_at=now)
+        )
+
+    def kill_worker(self, index: int = 0) -> str:
+        return self.pool.kill_worker(index)
+
+    def kill_all_workers(self) -> List[str]:
+        return [self.pool.kill_worker(i) for i in range(len(self.pool.workers))]
+
+    def close(self) -> None:
+        for journal in self.consumers._journals.values():
+            journal.close()
+
+    # -- main loop --------------------------------------------------------------
+    def step(self, now: float = 0.0) -> int:
+        """One stage round: beat + step virtual consumers (forward with
+        admission dedup), report parked input lag and source saturation
+        as rejected demand, run the pool, then publish-and-commit."""
+        for vc in self.consumers.consumers:
+            if vc.alive:
+                self.pool.supervisor.heartbeat(f"{self.name}:vc{vc.partition}", now)
+        self.consumers.step_all(self._forward_targets(), now=now)
+        if self.source is not None:
+            rejected = self.source.take_rejected()
+            if rejected:
+                self.pool.note_rejected(rejected)
+        lag = self.input_lag()
+        if lag and self.pool.elastic:
+            self.pool.note_rejected(min(lag, self.autoscale_lag_cap))
+        worked = self.pool.step(now)
+        self._publish_and_commit(now)
+        return worked
+
+
+class StageGraph:
+    """A DAG of stages over one message log, stepped under one clock.
+
+    Wiring is by topic identity: ``downstream(A)`` is every stage whose
+    input topic *is* A's output topic.  Add stages in topological order
+    (upstream first) — the step order follows insertion order, and the
+    paper's chains are acyclic by construction.
+
+    **Backpressure** (on by default): each stage with downstreams gets a
+    ``throttle`` hook on its pool.  When the summed downstream pending
+    work crosses ``throttle_low`` the stage's unit target is frozen (no
+    scale-out into a drowning consumer); past ``throttle_high`` it is
+    clamped to one unit, which cascades — the now-slowed stage backs up
+    its own input, throttling *its* upstream in turn, until the source
+    itself is pacing at the bottleneck rate.  The intermediate topics
+    then hold bounded lag instead of the whole imbalance
+    (``benchmarks/bench_dataflow.py`` freezes the on/off comparison).
+    """
+
+    def __init__(
+        self,
+        log: MessageLog,
+        *,
+        backpressure: bool = True,
+        throttle_low: int = 16,
+        throttle_high: int = 64,
+    ) -> None:
+        self.log = log
+        self.backpressure = backpressure
+        self.throttle_low = throttle_low
+        self.throttle_high = throttle_high
+        self.stages: Dict[str, Any] = {}
+        self.lag_log: List[Tuple[float, Dict[str, int]]] = []
+        self.steps = 0
+
+    # -- wiring ----------------------------------------------------------------
+    def add(self, stage: Any) -> Any:
+        if stage.name in self.stages:
+            raise ValueError(f"stage {stage.name!r} already in graph")
+        self.stages[stage.name] = stage
+        self._rewire()
+        return stage
+
+    def stage(self, name: str) -> Any:
+        return self.stages[name]
+
+    def downstream(self, stage: Any) -> List[Any]:
+        if stage.out_topic is None:
+            return []
+        return [
+            s for s in self.stages.values()
+            if s is not stage and s.in_topic is stage.out_topic
+        ]
+
+    def upstream(self, stage: Any) -> List[Any]:
+        return [
+            s for s in self.stages.values()
+            if s is not stage and s.out_topic is stage.in_topic
+        ]
+
+    def _rewire(self) -> None:
+        for s in self.stages.values():
+            pool = getattr(s, "pool", None)
+            if pool is None:
+                continue
+            if self.backpressure and self.downstream(s):
+                pool.throttle = (lambda st=s: self._unit_cap(st))
+
+    def _pressure_on(self, stage: Any) -> int:
+        return sum(d.pending() for d in self.downstream(stage))
+
+    def _unit_cap(self, stage: Any) -> Optional[int]:
+        """The throttle policy: freeze above ``throttle_low``, clamp to
+        one unit above ``throttle_high``, otherwise unthrottled."""
+        pressure = self._pressure_on(stage)
+        if pressure >= self.throttle_high:
+            return 1
+        if pressure >= self.throttle_low:
+            return stage.pool.controller.target_size
+        return None
+
+    # -- views -----------------------------------------------------------------
+    def pending(self) -> int:
+        return sum(s.pending() for s in self.stages.values())
+
+    def committed_offsets(self) -> Dict[str, Dict[int, int]]:
+        return {
+            name: s.committed_offsets() for name, s in self.stages.items()
+        }
+
+    def input_lags(self) -> Dict[str, int]:
+        return {name: s.input_lag() for name, s in self.stages.items()}
+
+    def peak_lag(self, stage_name: str) -> int:
+        """Max input lag the named stage's topic reached during the run
+        (the bounded-intermediate-topic claim of the throttle bench)."""
+        return max(
+            (lags.get(stage_name, 0) for _, lags in self.lag_log), default=0
+        )
+
+    def terminal_stages(self) -> List[Any]:
+        return [s for s in self.stages.values() if not self.downstream(s)]
+
+    # -- chaos ----------------------------------------------------------------
+    def kill_worker(self, stage_name: str, index: int = 0) -> str:
+        return self.stages[stage_name].kill_worker(index)
+
+    def kill_stage(self, stage_name: str) -> List[str]:
+        """Silence every worker of one stage at once (mid-chain chaos)."""
+        return self.stages[stage_name].kill_all_workers()
+
+    def close(self) -> None:
+        for s in self.stages.values():
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+
+    # -- main loop -------------------------------------------------------------
+    def step(self, now: float = 0.0) -> int:
+        worked = 0
+        for s in self.stages.values():
+            worked += s.step(now)
+        self.lag_log.append(
+            (now, {name: s.input_lag() for name, s in self.stages.items()})
+        )
+        self.steps += 1
+        return worked
+
+    def run_to_completion(
+        self, max_rounds: int = 100_000, now: float = 0.0, dt: float = 1.0
+    ) -> int:
+        """Step until every stage is drained (two consecutive idle
+        rounds with zero pending — the ReactiveJob termination rule)."""
+        total = 0
+        idle = 0
+        for _ in range(max_rounds):
+            n = self.step(now)
+            total += n
+            now += dt
+            idle = idle + 1 if (n == 0 and self.pending() == 0) else 0
+            if idle >= 2:
+                break
+        return total

@@ -39,6 +39,12 @@ class Message:
       created_at: simulated/wall time the message entered the system;
         completion time (paper Fig. 11) is measured against this.
       msg_id:   globally unique id (idempotence / dedup on redelivery).
+      src:      optional dataflow provenance ``(stage, partition, offset,
+        k, n)`` — which stage produced this message, from which input
+        offset, as output k of n.  Durable (spilled with the payload):
+        it is the cross-process exactly-once key for chained stages
+        (``core.dataflow``); msg_id is NOT stable across process
+        restarts, src is.
     """
 
     topic: str
@@ -48,6 +54,7 @@ class Message:
     partition: int = -1
     created_at: float = 0.0
     msg_id: int = field(default_factory=lambda: next(_msg_ids))
+    src: Optional[tuple] = None
 
     def with_source(self, partition: int, offset: int) -> "Message":
         return Message(
@@ -58,6 +65,7 @@ class Message:
             partition=partition,
             created_at=self.created_at,
             msg_id=self.msg_id,
+            src=self.src,
         )
 
 

@@ -124,21 +124,68 @@ class WorkerBase:
 class DedupWindow:
     """Bounded seen-set for exactly-once *effects* over at-least-once
     delivery: Let-It-Crash re-admission may redeliver, the window skips
-    duplicates.  Insertion-ordered; overflow drops the oldest half."""
+    duplicates.  Insertion-ordered; overflow drops the oldest half.
+
+    **Memory invariant** (owners that track a committed watermark):
+    a key below the committed watermark can never be redelivered — the
+    log is only ever re-read from the committed offset — so the owner
+    should :meth:`evict_below` (or :meth:`evict_if`) on every watermark
+    advance.  The window then holds O(uncommitted suffix) entries, not
+    O(history); the size-halving overflow path is a last-resort bound
+    for owners with no watermark (where eviction of a *live* key merely
+    re-opens the at-least-once window it was narrowing).  The dataflow
+    ``Stage`` relies on this: its publish-dedup and per-worker windows
+    are keyed ``(partition, offset, ...)`` and evicted at commit time
+    (property-tested in ``tests/test_dataflow.py``).
+    """
 
     def __init__(self, window: int = 65536) -> None:
         self.window = window
-        self._seen: Dict[Any, None] = {}
+        self._seen: Dict[Any, Any] = {}
 
-    def seen(self, key: Any) -> bool:
-        """Record ``key``; True if it was already recorded."""
+    def seen(self, key: Any, value: Any = None) -> bool:
+        """Record ``key``; True if it was already recorded.  ``value``
+        is memoized on first sight (see :meth:`lookup`) so an owner can
+        replay a duplicate's *outputs* without re-running its effects."""
         if key in self._seen:
             return True
-        self._seen[key] = None
+        self._seen[key] = value
         if len(self._seen) > self.window:
             for k in list(self._seen)[: self.window // 2]:
                 del self._seen[k]
         return False
+
+    def lookup(self, key: Any) -> Any:
+        """The value memoized with ``key`` (None if absent/valueless)."""
+        return self._seen.get(key)
+
+    def remember(self, key: Any, value: Any) -> None:
+        """Attach/replace the memo for an already-seen key (owners that
+        compute the value only after the ``seen`` check)."""
+        if key in self._seen:
+            self._seen[key] = value
+
+    def evict_if(self, pred: Callable[[Any], bool]) -> int:
+        """Drop every key for which ``pred`` holds; returns the count.
+        The owner asserts those keys can never be redelivered."""
+        dead = [k for k in self._seen if pred(k)]
+        for k in dead:
+            del self._seen[k]
+        return len(dead)
+
+    def evict_below(self, watermarks: Dict[int, int]) -> int:
+        """Watermark eviction for ``(partition, offset, ...)``-tuple
+        keys: drop entries whose offset sits below the partition's
+        committed watermark.  Non-tuple keys (e.g. raw msg_ids) are
+        kept — they carry no offset to compare."""
+        return self.evict_if(
+            lambda k: (
+                isinstance(k, tuple)
+                and len(k) >= 2
+                and isinstance(k[1], int)
+                and k[1] < watermarks.get(k[0], 0)
+            )
+        )
 
     def __len__(self) -> int:
         return len(self._seen)
@@ -179,6 +226,7 @@ class ElasticPool:
         retire_mode: str = "redistribute",  # or "drain"
         collect: Optional[Callable[[float], None]] = None,
         on_scale: Optional[Callable[[int, int], None]] = None,
+        throttle: Optional[Callable[[], Optional[int]]] = None,
         metrics: Optional[MetricsReplica] = None,
         metric_prefix: str = "pool",
         worker_noun: str = "worker",
@@ -206,6 +254,13 @@ class ElasticPool:
         # (``distributed.elastic_mesh``), and reshapes its DP degree here.
         # The hook may clamp by writing ``controller.target_size``.
         self.on_scale = on_scale
+        # Upstream-throttle hook (the on_scale counterpart for *demand*):
+        # called once per step, may return a unit cap.  A dataflow
+        # ``StageGraph`` wires this to downstream pressure — a slow
+        # downstream stage caps this pool's unit target, so the stage
+        # slows its producers instead of ballooning the topic between
+        # them.  None (or a None return) means unthrottled.
+        self.throttle = throttle
         self.supervisor = supervisor or Supervisor(f"{name}-supervisor")
         self.heartbeat_timeout = heartbeat_timeout
         self.ingress: Optional[Mailbox] = None
@@ -569,15 +624,32 @@ class ElasticPool:
             units = max(self.controller.target_size, 1)
             depths: Sequence[float] = [signal / units] * units
         else:
+            # Rejected demand counts here too: a mailboxes-fed stage
+            # whose virtual consumers park backlog in the topic reports
+            # that lag via note_rejected, and it must reach the
+            # controller exactly as a bounded ingress's overflow does.
             depths = [w.mailbox.depth() for w in self.workers]
-            signal = sum(depths)
+            signal = sum(depths) + self._rejected_since_observe
+            if self._rejected_since_observe and depths:
+                extra = self._rejected_since_observe / len(depths)
+                depths = [d + extra for d in depths]
+            self._rejected_since_observe = 0
         if self.elastic:
             old_target = self.controller.target_size
+            # Backpressure throttle: evaluate the cap BEFORE the
+            # autoscaler moves the target, so a "freeze" cap (cap ==
+            # current target) really freezes — then apply it after the
+            # decision, suppressing (and undoing) scale-out that would
+            # only feed an already-drowning consumer.
+            cap = self.throttle() if self.throttle is not None else None
             decision, _ = self.controller.observe(depths, now=now)
             if decision.delta > 0:
                 self.metrics.incr(f"{self._px}.scale_out")
             elif decision.delta < 0:
                 self.metrics.incr(f"{self._px}.scale_in")
+            if cap is not None and self.controller.target_size > max(cap, 1):
+                self.controller.target_size = max(cap, 1)
+                self.metrics.incr(f"{self._px}.throttled")
             if (
                 self.on_scale is not None
                 and self.controller.target_size != old_target
@@ -585,7 +657,11 @@ class ElasticPool:
                 # Actuate before reconciling: a meshed job must re-lay its
                 # state out at the new degree before workers come or go.
                 self.on_scale(old_target, self.controller.target_size)
-            if self.reconcile_on == "always" or decision.delta != 0:
+            if (
+                self.reconcile_on == "always"
+                or decision.delta != 0
+                or self.controller.target_size != old_target
+            ):
                 self._reconcile(now)
         self.metrics.gauge(f"{self._px}.queue_depth", signal, timestamp=now)
         self.metrics.gauge(f"{self._px}.occupancy", self.occupancy(), timestamp=now)

@@ -1,122 +1,54 @@
 """The live Reactive Liquid pipeline (paper §3.2).
 
-Wires the five layers together over real messages:
+``ReactiveJob`` is now a **one-stage dataflow graph**: the five-layer
+wiring — messaging topic → virtual consumer group → task mailboxes →
+``ElasticPool`` of tasks → (optional) output topic — is the generic
+``core.dataflow.Stage`` in ``feed="mailboxes"`` mode, held inside a
+one-node ``StageGraph``.  This module is only the back-compat surface:
+the task view (``tasks``/``stats``), the chaos hooks, and the historical
+constructor.  The private virtual-consumer supervision and forwarding
+loops this class used to carry live in ``Stage`` now; multi-stage chains
+use ``StageGraph`` directly (see DESIGN.md §2).
 
-  messaging layer (``repro.data.topics``)
-    → virtual messaging layer (``VirtualConsumerGroup`` / producer pool)
-      → asynchronous messaging layer (task ``Mailbox``es)
-        → processing layer (``core.pool.ElasticPool`` of ``ReactiveTask``s)
-  with the reactive processing layer's three services — supervision,
-  elastic workers, event-sourced state — attached.
-
-The spawn/retire/drain/restart/heartbeat machinery lives in the shared
-``ElasticPool`` runtime; this module is the *policy shim* that binds it
-to a topic: virtual consumers forward into the pool's task mailboxes and
-task outputs publish through the virtual producer pool.  The serving
-layer rides the identical runtime (``repro.serving.elastic``), as does
-the log-backed serving job (``repro.serving.job``).  The thread-backed
-variant lives in ``repro.core.runtime``; the timing model for the
-paper's figures in ``repro.core.simulation``.
+Semantics upgrade that comes free with the re-base: the consumer group
+runs in *manual-commit* mode with **commit-after-publish** — offsets
+advance only once a task's outputs are durably appended to the output
+topic — so with a spilled log a killed process replays the uncommitted
+suffix instead of losing it (the old per-forward commits were lossy
+across process death).  Exactly-once effects within a life are the
+workers' ``(partition, offset)``-keyed dedup windows; exactly-once
+*topic contents* across lives are the stage's publish dedup.
 """
 
 from __future__ import annotations
 
-import itertools
 from typing import Any, Callable, List, Optional
 
+from repro.core.dataflow import Stage, StageGraph, StageWorker, StageWorkerStats
 from repro.core.elastic import AutoscalerConfig
 from repro.core.messages import Message
-from repro.core.pool import DedupWindow, ElasticPool, WorkerBase
-from repro.core.scheduler import make_scheduler
 from repro.core.state import EventJournal
-from repro.core.supervision import HeartbeatDetector, Supervisor
-from repro.core.virtual_messaging import VirtualConsumerGroup, VirtualProducerGroup
+from repro.core.supervision import Supervisor
 from repro.data.topics import MessageLog, Topic
 
 ProcessFn = Callable[[Message], List[Any]]
 
-
-class ReactiveTaskStats:
-    """Live view over the task's CRDT replica (kept for back-compat —
-    the counters themselves are what merges into the MetricsHub)."""
-
-    def __init__(self, task: "ReactiveTask") -> None:
-        self._task = task
-
-    @property
-    def processed(self) -> int:
-        return self._task.metrics.value("task.processed")
-
-    @property
-    def emitted(self) -> int:
-        return self._task.metrics.value("task.emitted")
-
-    @property
-    def deduped(self) -> int:
-        return self._task.metrics.value("task.deduped")
-
-
-class ReactiveTask(WorkerBase):
-    """A processing task fed by its mailbox.
-
-    Exactly-once *effects* on top of at-least-once delivery: tasks track
-    seen ``msg_id``s (bounded ``DedupWindow``) and skip duplicates caused
-    by Let-It-Crash redelivery.
-    """
-
-    _ids = itertools.count()
-
-    def __init__(
-        self,
-        job_name: str,
-        process: ProcessFn,
-        producer_group: Optional[VirtualProducerGroup],
-        mailbox_capacity: int = 0,
-        dedup_window: int = 65536,
-    ) -> None:
-        self.task_id = next(ReactiveTask._ids)
-        super().__init__(
-            f"{job_name}:task{self.task_id}", mailbox_capacity=mailbox_capacity
-        )
-        self.process = process
-        self.producer_group = producer_group
-        self.stats = ReactiveTaskStats(self)
-        self._dedup = DedupWindow(dedup_window)
-        self.step_budget = 8
-
-    def step(self, now: float = 0.0) -> int:
-        n = 0
-        while n < self.step_budget and self.alive:
-            msg = self.mailbox.get()
-            if msg is None:
-                break
-            if self._dedup.seen(msg.msg_id):
-                self.metrics.incr("task.deduped")
-                continue
-            outputs = self.process(msg)
-            self.metrics.incr("task.processed")
-            if self.producer_group is not None:
-                for payload in outputs:
-                    self.producer_group.submit(
-                        Message(
-                            topic=self.producer_group.topic.name,
-                            payload=payload,
-                            created_at=msg.created_at,
-                        )
-                    )
-                    self.metrics.incr("task.emitted")
-            n += 1
-        return n
+# Back-compat aliases: ReactiveTask IS the generic stage worker now.
+ReactiveTask = StageWorker
+ReactiveTaskStats = StageWorkerStats
 
 
 class ReactiveJob:
-    """A job on the Reactive Liquid stack.
+    """A job on the Reactive Liquid stack — a thin shim over a one-stage
+    ``StageGraph``.
 
-    The task pool is elastic (autoscaled on mailbox depth) and unlimited
-    by partition count; virtual consumers are supervised, stateful
-    (journaled offsets) workers.  All pool mechanics — spawn, retire
-    (overflow-safe drain to the survivors), Let-It-Crash restart,
-    heartbeat supervision, CRDT telemetry — come from ``ElasticPool``.
+    The task pool is elastic (autoscaled on mailbox depth plus parked
+    topic lag) and unlimited by partition count; virtual consumers are
+    supervised, stateful (journaled offsets) workers.  All pool
+    mechanics — spawn, retire (overflow-safe drain to the survivors),
+    Let-It-Crash restart, heartbeat supervision, CRDT telemetry — come
+    from ``ElasticPool``; all stage mechanics — forwarding, admission
+    dedup, commit-after-publish, vc supervision — from ``Stage``.
     """
 
     def __init__(
@@ -140,39 +72,33 @@ class ReactiveJob:
         self.log = log
         self.topic: Topic = log.get(in_topic)
         self.process = process
-        self.producer_group = (
-            VirtualProducerGroup(log.get(out_topic)) if out_topic else None
-        )
-        self.consumer_group = VirtualConsumerGroup(
+        self.graph = StageGraph(log)
+        self.stage = self.graph.add(Stage(
             name,
-            self.topic,
-            scheduler_factory=lambda: make_scheduler(scheduler),
-            batch_size=batch_n,
-            journal_factory=journal_factory,
-        )
-        self.pool = ElasticPool(
-            name,
-            lambda: ReactiveTask(
-                name, process, self.producer_group,
-                mailbox_capacity=mailbox_capacity,
-            ),
+            log,
+            in_topic,
+            out_topic,
+            process=process,
+            feed="mailboxes",
+            initial_tasks=initial_tasks,
             scheduler=scheduler,
-            initial_units=initial_tasks,
+            batch_n=batch_n,
+            mailbox_capacity=mailbox_capacity,
             autoscaler=autoscaler
             or AutoscalerConfig(min_workers=1, max_workers=256, cooldown=0.0),
             elastic=elastic,
             supervisor=supervisor,
             heartbeat_timeout=heartbeat_timeout,
-            retire_mode="redistribute",
+            journal_factory=journal_factory,
             metric_prefix="job",
             worker_noun="task",
-        )
-        for vc in self.consumer_group.consumers:
-            self._supervise_vc(vc.partition)
+        ))
+        self.pool = self.stage.pool
+        self.consumer_group = self.stage.consumers
 
     # -- pool views ----------------------------------------------------------
     @property
-    def tasks(self) -> List[ReactiveTask]:
+    def tasks(self) -> List[StageWorker]:
         return self.pool.workers
 
     @property
@@ -183,46 +109,19 @@ class ReactiveJob:
     def elastic(self) -> bool:
         return self.pool.elastic
 
-    # -- supervision hooks -------------------------------------------------
-    def _supervise_vc(self, partition: int) -> None:
-        self.supervisor.supervise(
-            f"{self.name}:vc{partition}",
-            restart=lambda p=partition: self.consumer_group.restart_consumer(p),
-            detector=HeartbeatDetector(self.pool.heartbeat_timeout),
-        )
-
     # -- main loop ----------------------------------------------------------
     def step(self, now: float = 0.0, task_budget: int = 8) -> int:
         """One pipeline round: consume->forward, process, publish, scale."""
         for task in self.pool.workers:
             task.step_budget = task_budget
-        self.consumer_group.step_all(self.pool.mailboxes(), now=now)
-        # Heartbeats: live virtual consumers beat; the pool beats live
-        # tasks inside step(); the supervisor check restarts any that a
-        # failure drill silenced (see examples/failure_drill).
-        for vc in self.consumer_group.consumers:
-            if vc.alive:
-                self.supervisor.heartbeat(f"{self.name}:vc{vc.partition}", now)
-        processed = self.pool.step(now)
-        if self.producer_group is not None:
-            self.producer_group.step_all()
-        return processed
+        return self.stage.step(now)
 
     def run_to_completion(self, max_rounds: int = 1_000_000) -> int:
-        total = 0
-        idle = 0
-        for r in range(max_rounds):
-            n = self.step(now=float(r))
-            total += n
-            idle = idle + 1 if n == 0 and self.backlog() == 0 else 0
-            if idle >= 2:
-                break
-        return total
+        self.graph.run_to_completion(max_rounds=max_rounds)
+        return self.total_processed()
 
     def total_processed(self) -> int:
         return self.pool.counter("task.processed")
 
     def backlog(self) -> int:
-        return self.consumer_group.total_lag() + sum(
-            t.mailbox.depth() for t in self.tasks
-        )
+        return self.stage.pending()

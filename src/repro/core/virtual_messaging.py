@@ -231,9 +231,20 @@ class VirtualProducerGroup:
         topic: Topic,
         initial_size: int = 1,
         scheduler: Optional[Scheduler] = None,
+        producer_capacity: int = 0,
     ) -> None:
         self.topic = topic
         self._ids = itertools.count()
+        self.producer_capacity = producer_capacity
+        # Demand that arrived while every live producer mailbox was at
+        # capacity.  Delivery still happens (overflow-safe put_front —
+        # accepted work is never dropped), but the saturation must be
+        # *reported*: the owning stage feeds it to its autoscaler via
+        # ``note_rejected`` (exactly as serving ingress does with topic
+        # lag), so a saturated source stage is visible to the graph
+        # instead of silently spinning at a fixed size.
+        self.rejected = 0
+        self._rejected_unreported = 0
         self.pool = ElasticPool(
             f"vp:{topic.name}",
             self._make_producer,
@@ -246,9 +257,13 @@ class VirtualProducerGroup:
         )
 
     def _make_producer(self) -> VirtualProducer:
-        return VirtualProducer(
+        producer = VirtualProducer(
             f"vp:{self.topic.name}:{next(self._ids)}", self.topic
         )
+        if self.producer_capacity > 0:
+            producer.mailbox.capacity = self.producer_capacity
+            producer.inbox = producer.mailbox
+        return producer
 
     @property
     def producers(self) -> List[VirtualProducer]:
@@ -260,8 +275,39 @@ class VirtualProducerGroup:
 
     def resize(self, n: int) -> None:
         self.pool.set_target_units(max(1, n))
+        # A shrink can leave the survivors saturated (the victims' work
+        # redistributes into bounded mailboxes): report the overage as
+        # rejected demand so the decision is visible as pressure, not
+        # discovered later as a stall.
+        if self.producer_capacity > 0:
+            over = sum(
+                max(p.mailbox.depth() - self.producer_capacity, 0)
+                for p in self.pool.active_workers()
+            )
+            if over:
+                self._note_rejected(over)
+
+    def _note_rejected(self, n: int) -> None:
+        self.rejected += n
+        self._rejected_unreported += n
+        self.pool.note_rejected(n)
+        self.pool.metrics.incr("vp.rejected", n)
+
+    def take_rejected(self) -> int:
+        """Drain the unreported rejected-demand count (stage wiring:
+        the owner forwards it into its own pool's ``note_rejected``)."""
+        n, self._rejected_unreported = self._rejected_unreported, 0
+        return n
 
     def submit(self, msg: Message) -> None:
+        if self.producer_capacity > 0:
+            boxes = [
+                p.mailbox for p in (self.pool.active_workers() or self.producers)
+            ]
+            if boxes and all(
+                b.capacity > 0 and b.depth() >= b.capacity for b in boxes
+            ):
+                self._note_rejected(1)
         self.pool.route(msg)
 
     def step_all(self, max_messages: int = 32) -> int:
@@ -295,13 +341,20 @@ class VirtualTopic:
         scheduler_factory: Callable[[], Scheduler] = RoundRobinScheduler,
         batch_size: int = 8,
         journal_factory: Optional[Callable[[int], EventJournal]] = None,
+        commit_policy: str = "on_forward",
     ) -> VirtualConsumerGroup:
+        """One consumer group per subscriber: each stage of a dataflow
+        graph subscribing the same topic gets independent offsets, which
+        is what makes topic-level fan-out (two stages, one topic) safe.
+        Stages subscribe with ``commit_policy="manual"`` so offsets
+        advance only when the stage's results are durably downstream."""
         group = VirtualConsumerGroup(
             job_name,
             self.topic,
             scheduler_factory=scheduler_factory,
             batch_size=batch_size,
             journal_factory=journal_factory,
+            commit_policy=commit_policy,
         )
         self.consumer_groups[job_name] = group
         return group

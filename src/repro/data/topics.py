@@ -36,6 +36,58 @@ from repro.core.messages import Message
 _MANIFEST = "topics.json"
 
 
+def partition_for_key(key: str, num_partitions: int) -> int:
+    """Deterministic key → partition placement (blake2s hash).
+
+    This is the inter-stage re-partitioning contract: every stage that
+    publishes with the same key lands in the same partition of the
+    downstream topic, so keyed fan-in from multiple upstream stages
+    preserves per-key ordering, and a downstream consumer group sees one
+    total order per key.  Shared by ``Topic.publish`` and the dataflow
+    layer's keyed stages (``core.dataflow.Stage`` ``key_fn``).
+    """
+    digest = hashlib.blake2s(key.encode("utf-8"), digest_size=8).digest()
+    return int.from_bytes(digest, "little") % max(num_partitions, 1)
+
+
+def _recover_spill_lines(path: str) -> tuple[List[dict], int]:
+    """Read a JSONL spill file, tolerating a torn trailing line.
+
+    A process killed mid-append leaves a final line that is truncated
+    (no newline, or malformed JSON).  That trailing fragment is *not*
+    data — the append never completed, so the message was never durably
+    published and its producer will replay it.  Returns the parsed
+    complete records plus the byte length of the valid prefix; a torn
+    line anywhere *before* the tail is real corruption and raises.
+    """
+    records: List[dict] = []
+    valid_bytes = 0
+    with open(path, "rb") as fh:
+        raw = fh.read()
+    for line in raw.splitlines(keepends=True):
+        stripped = line.strip()
+        if not stripped:
+            valid_bytes += len(line)
+            continue
+        try:
+            d = json.loads(stripped.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError):
+            if valid_bytes + len(line) == len(raw):
+                break  # torn tail: truncate to the last complete record
+            raise ValueError(
+                f"corrupt spill record mid-file in {path!r} "
+                f"(byte {valid_bytes}): not a torn tail, refusing to drop data"
+            )
+        if not line.endswith(b"\n") and valid_bytes + len(line) == len(raw):
+            # Complete JSON but no newline: the append was cut between
+            # the payload write and the terminator.  The *next* append
+            # would otherwise concatenate onto it and poison replay.
+            break
+        records.append(d)
+        valid_bytes += len(line)
+    return records, valid_bytes
+
+
 class Partition:
     """A single append-only, totally-ordered message sequence.
 
@@ -55,21 +107,25 @@ class Partition:
         self._spill_fh = None
         if spill_path is not None:
             if os.path.exists(spill_path):
-                with open(spill_path, "r", encoding="utf-8") as fh:
-                    for line in fh:
-                        line = line.strip()
-                        if not line:
-                            continue
-                        d = json.loads(line)
-                        msg = Message(
-                            topic=topic,
-                            payload=d["payload"],
-                            key=d.get("key"),
-                            created_at=d.get("created_at", 0.0),
-                        )
-                        self._entries.append(
-                            msg.with_source(index, len(self._entries))
-                        )
+                records, valid_bytes = _recover_spill_lines(spill_path)
+                if valid_bytes < os.path.getsize(spill_path):
+                    # Torn tail (killed mid-append): truncate the file to
+                    # the last complete record so the next append starts
+                    # on a clean line instead of poisoning replay.
+                    with open(spill_path, "r+b") as fh:
+                        fh.truncate(valid_bytes)
+                for d in records:
+                    src = d.get("src")
+                    msg = Message(
+                        topic=topic,
+                        payload=d["payload"],
+                        key=d.get("key"),
+                        created_at=d.get("created_at", 0.0),
+                        src=tuple(src) if src is not None else None,
+                    )
+                    self._entries.append(
+                        msg.with_source(index, len(self._entries))
+                    )
             self._spill_fh = open(spill_path, "a", encoding="utf-8")
 
     def append(self, msg: Message) -> int:
@@ -77,11 +133,14 @@ class Partition:
             offset = len(self._entries)
             self._entries.append(msg.with_source(self.index, offset))
             if self._spill_fh is not None:
-                self._spill_fh.write(json.dumps({
+                record = {
                     "payload": msg.payload,
                     "key": msg.key,
                     "created_at": msg.created_at,
-                }) + "\n")
+                }
+                if msg.src is not None:
+                    record["src"] = list(msg.src)
+                self._spill_fh.write(json.dumps(record) + "\n")
                 self._spill_fh.flush()
             return offset
 
@@ -128,8 +187,7 @@ class Topic:
 
     def _partition_for(self, msg: Message) -> int:
         if msg.key is not None:
-            digest = hashlib.blake2s(msg.key.encode("utf-8"), digest_size=8).digest()
-            return int.from_bytes(digest, "little") % self.num_partitions
+            return partition_for_key(msg.key, self.num_partitions)
         return next(self._rr) % self.num_partitions
 
     def publish(self, msg: Message) -> tuple[int, int]:

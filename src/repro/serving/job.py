@@ -1,34 +1,35 @@
-"""Log-backed serving: requests flow through the durable message log.
-
-``ElasticServingPool`` alone is fed by direct ``submit`` calls into a
-bare ingress ``Mailbox`` — fast, but a full-process crash loses every
-request that was queued or in flight.  ``ServingJob`` routes serving
-through the same five-layer path as ``ReactiveJob`` and the training
-``TokenPipeline``:
+"""Log-backed serving: requests flow through the durable message log —
+now as a **two-stage dataflow graph** (``core.dataflow.StageGraph``):
 
   ``requests`` topic (messaging layer, optional JSONL spill)
-    → ``VirtualConsumerGroup`` (virtual messaging, *manual* commits)
-      → pool ingress ``Mailbox`` (asynchronous messaging)
-        → ``ElasticServingPool`` replicas (processing layer)
-          → ``responses`` topic (durable completions)
+    → **decode stage** — ``VirtualConsumerGroup`` (manual commits) →
+      pool ingress ``Mailbox`` → ``ElasticServingPool`` replicas →
+      ``completions`` topic (durable, provenance-tagged)
+    → **respond stage** — consumer group over ``completions`` →
+      publish workers → ``responses`` topic (the client-visible wire
+      form)
 
-Recovery contract (at-least-once replay, exactly-once completion):
+Each stage runs the chained commit-after-publish contract: a requests
+offset commits only once its completion is durably in ``completions``;
+a completions offset commits only once its response is durably in
+``responses``.  The graph's backpressure wiring means a slow respond
+stage throttles decode instead of ballooning ``completions``.
 
-  * offsets are committed only after the request *completes* — the
-    contiguous completed prefix per partition, journaled per virtual
-    consumer — so nothing consumed-but-unfinished is ever lost;
-  * completions are published to the ``responses`` topic before their
-    offsets commit; a rebuilt job seeds its dedup set by scanning
-    ``responses``, so requests that completed in a previous life are
-    skipped (their offsets just commit) and every request produces
-    exactly one response across any number of process restarts;
-  * with a spilled ``MessageLog`` (``MessageLog.reopen``) plus file-backed
-    offset journals (``journal_dir``), the *entire pool* can be killed
-    and rebuilt from the requests topic + committed offsets alone.
+Recovery contract (at-least-once replay, exactly-once completion) is
+unchanged from the single-stage version, but now *per stage*:
 
-A bounded pool ingress backpressures the virtual consumers (their
-``put`` overflows, they stop forwarding and re-read the suffix later),
-so the log absorbs bursts instead of the process heap.
+  * a rebuilt decode stage seeds its publish-dedup from the durable
+    ``completions`` topic (``Message.src`` provenance), so requests that
+    completed in a previous life replay as commits, never re-decodes;
+  * the respond stage's publish dedup keeps ``responses`` exactly-once
+    the same way;
+  * with a spilled ``MessageLog`` (``MessageLog.reopen``) plus
+    file-backed offset journals (``journal_dir``), the *entire process*
+    can be killed and rebuilt from the topics + committed offsets alone.
+
+A bounded pool ingress backpressures the decode stage's virtual
+consumers (their ``put`` overflows, they stop forwarding and re-read the
+suffix later), so the log absorbs bursts instead of the process heap.
 """
 
 from __future__ import annotations
@@ -36,10 +37,9 @@ from __future__ import annotations
 import os
 from typing import Any, Dict, List, Optional
 
+from repro.core.dataflow import Stage, StageGraph
 from repro.core.messages import Message
-from repro.core.scheduler import make_scheduler
 from repro.core.state import EventJournal
-from repro.core.virtual_messaging import VirtualConsumerGroup
 from repro.data.topics import MessageLog
 from repro.serving.batcher import Request, ensure_req_ids_above
 from repro.serving.elastic import ElasticServingPool
@@ -66,39 +66,62 @@ def request_from_payload(d: Dict[str, Any]) -> Request:
     )
 
 
-class _IngressAdapter:
-    """The virtual consumers' view of the pool: one "task queue" that
-    converts wire payloads to ``Request``s on the way in, drops requests
-    the responses topic already answered (replay dedup), and records the
-    log source of everything admitted so completions can commit offsets.
-    Raises ``MailboxOverflow`` untouched — that is the backpressure
-    signal the consumer's commit-prefix logic understands."""
+class _DecodeStage(Stage):
+    """The batcher stage: adapter-mode ``Stage`` over the serving pool's
+    inner ``ElasticPool``.  Admission converts wire payloads to
+    ``Request``s (dropping req-ids the job already answered in any
+    life), harvest drains the serving pool's completed list and maps
+    each back to its requests-topic source offset."""
 
-    def __init__(self, job: "ServingJob") -> None:
+    def __init__(self, job: "ServingJob", **kwargs: Any) -> None:
         self.job = job
+        self._collected = 0
+        super().__init__(pool=job.pool.pool, feed="ingress",
+                         metric_prefix="serve", **kwargs)
 
-    def depth(self) -> int:
-        return self.job.pool.ingress.depth()
-
-    def put(self, msg: Message) -> None:
+    def _admit(self, msg: Message) -> bool:
         d = msg.payload
         rid = d["req_id"]
         if rid in self.job.responded:
-            # Answered in a previous life: no re-execution, just let the
+            # Answered in a previous life under a *different* source
+            # offset (resubmitted id): no re-execution, just let this
             # offset become committable.
-            self.job._mark_done(msg.partition, msg.offset)
+            self._mark_done(msg.partition, msg.offset)
             self.job.metrics.incr("serve.replay_deduped")
-            return
+            return False
         req = request_from_payload(d)
         req.enqueued_at = msg.created_at
-        self.job.pool.ingress.put(
+        self.job.pool.pool.ingress.put(
             Message(topic="serve", payload=req, created_at=msg.created_at)
         )  # may raise MailboxOverflow -> consumer backpressure
         self.job._source[rid] = (msg.partition, msg.offset)
+        return True
+
+    def _take_results(self) -> List[tuple]:
+        fresh = self.job.pool.completed[self._collected:]
+        self._collected = len(self.job.pool.completed)
+        out = []
+        for req in fresh:
+            if req.req_id in self.job.responded:
+                continue
+            self.job.responded.add(req.req_id)
+            completion = {
+                "req_id": req.req_id,
+                "prompt": list(req.prompt),
+                "output": list(req.output or []),
+                "restarts": req.restarts,
+                "enqueued_at": req.enqueued_at,
+                "completed_at": req.completed_at,
+            }
+            src = self.job._source.pop(req.req_id, None)
+            if src is None:
+                continue  # replay-completed in a previous life
+            out.append((src[0], src[1], [completion]))
+        return out
 
 
 class ServingJob:
-    """Serving as a reactive job over the durable ``requests`` topic."""
+    """Serving as a two-stage reactive dataflow over durable topics."""
 
     def __init__(
         self,
@@ -109,10 +132,12 @@ class ServingJob:
         spill_dir: Optional[str] = None,
         request_topic: str = "requests",
         response_topic: str = "responses",
+        completion_topic: str = "completions",
         partitions: int = 2,
         batch_n: int = 8,
         consumer_scheduler: str = "round_robin",
         journal_dir: Optional[str] = None,
+        backpressure: bool = True,
         **pool_kwargs: Any,
     ) -> None:
         if log is None:
@@ -124,34 +149,34 @@ class ServingJob:
             else:
                 log = MessageLog(spill_dir=spill_dir)
         self.log = log
-        for topic, n_parts in ((request_topic, partitions), (response_topic, 1)):
+        for topic, n_parts in (
+            (request_topic, partitions),
+            (completion_topic, 1),
+            (response_topic, 1),
+        ):
             if not log.exists(topic):
                 log.create_topic(topic, n_parts)
         self.requests_topic = log.get(request_topic)
+        self.completions_topic = log.get(completion_topic)
         self.responses_topic = log.get(response_topic)
         self.pool = ElasticServingPool(model, params, **pool_kwargs)
 
-        journal_factory = None
-        if journal_dir is not None:
+        def journal_factory(topic_name: str):
+            if journal_dir is None:
+                return None
             os.makedirs(journal_dir, exist_ok=True)
-            journal_factory = lambda p: EventJournal(  # noqa: E731
-                os.path.join(journal_dir, f"{request_topic}-p{p}.journal")
+            return lambda p: EventJournal(
+                os.path.join(journal_dir, f"{topic_name}-p{p}.journal")
             )
-        self.consumers = VirtualConsumerGroup(
-            f"serve:{request_topic}",
-            self.requests_topic,
-            scheduler_factory=lambda: make_scheduler(consumer_scheduler),
-            batch_size=batch_n,
-            journal_factory=journal_factory,
-            commit_policy="manual",
-        )
-        self._adapter = _IngressAdapter(self)
+
         # Exactly-once completion across restarts: everything the durable
-        # responses topic already answered is skipped at admission.
+        # responses/completions topics already answered is skipped at
+        # admission (id-level; the stage-level src dedup covers offsets).
         self.responded: set = set()
-        for part in self.responses_topic.partitions:
-            for msg in part.read(0, part.end_offset()):
-                self.responded.add(msg.payload["req_id"])
+        for topic in (self.completions_topic, self.responses_topic):
+            for part in topic.partitions:
+                for msg in part.read(0, part.end_offset()):
+                    self.responded.add(msg.payload["req_id"])
         # A restarted process restarts the module-level Request id
         # counter at 0; ids already living in the durable log would then
         # be reissued and their requests silently "deduped" away.  Bump
@@ -163,17 +188,40 @@ class ServingJob:
         ]
         if seen_ids:
             ensure_req_ids_above(max(seen_ids))
-        # req_id -> (partition, offset) for in-flight requests; completed
-        # offsets accumulate per partition until the contiguous prefix
-        # commits (commit-after-complete).
+        # req_id -> (partition, offset) for in-flight requests.
         self._source: Dict[int, tuple] = {}
-        self._done: Dict[int, set] = {
-            p: set() for p in range(self.requests_topic.num_partitions)
-        }
-        self._watermark: Dict[int, int] = {
-            c.partition: c.offset for c in self.consumers.consumers
-        }
-        self._collected = 0
+
+        self.graph = StageGraph(log, backpressure=backpressure)
+        self.decode_stage = self.graph.add(_DecodeStage(
+            self,
+            name=f"serve:{request_topic}",
+            log=log,
+            in_topic=request_topic,
+            out_topic=completion_topic,
+            scheduler=consumer_scheduler,
+            batch_n=batch_n,
+            journal_factory=journal_factory(request_topic),
+        ))
+        self.respond_stage = self.graph.add(Stage(
+            f"serve:{completion_topic}",
+            log,
+            completion_topic,
+            response_topic,
+            process=self._make_response,
+            key_fn=lambda d: str(d["req_id"]),
+            feed="mailboxes",
+            initial_tasks=1,
+            elastic=False,
+            batch_n=batch_n,
+            journal_factory=journal_factory(completion_topic),
+            metric_prefix="respond",
+            worker_noun="publisher",
+        ))
+        self.consumers = self.decode_stage.consumers
+
+    def _make_response(self, msg: Message) -> List[Dict[str, Any]]:
+        self.metrics.incr("serve.responses")
+        return [msg.payload]
 
     # -- views ---------------------------------------------------------------
     @property
@@ -185,7 +233,7 @@ class ServingJob:
         return self.pool.completed
 
     def committed_offsets(self) -> Dict[int, int]:
-        return {c.partition: c.offset for c in self.consumers.consumers}
+        return self.decode_stage.committed_offsets()
 
     def responses(self) -> List[Dict[str, Any]]:
         """Every durable completion, in publish order."""
@@ -195,10 +243,10 @@ class ServingJob:
         return out
 
     def request_lag(self) -> int:
-        return sum(c.lag() for c in self.consumers.consumers)
+        return self.decode_stage.input_lag()
 
     def pending(self) -> int:
-        return self.request_lag() + self.pool.queue_depth() + self.pool.occupancy()
+        return self.graph.pending()
 
     # -- API -----------------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> int:
@@ -225,69 +273,15 @@ class ServingJob:
     def close(self) -> None:
         """Flush and release journals + spill files (clean process exit;
         crash recovery works without it — appends flush line-by-line)."""
-        for journal in self.consumers._journals.values():
-            journal.close()
+        self.graph.close()
         self.log.close()
-
-    # -- internals -------------------------------------------------------------
-    def _mark_done(self, partition: int, offset: int) -> None:
-        if partition < 0:
-            return
-        self._done[partition].add(offset)
-        w = self._watermark[partition]
-        while w in self._done[partition]:
-            self._done[partition].discard(w)
-            w += 1
-        if w != self._watermark[partition]:
-            self._watermark[partition] = w
-            self.consumers.consumers[partition].commit_to(w)
-
-    def _collect(self, now: float) -> None:
-        fresh = self.pool.completed[self._collected:]
-        self._collected = len(self.pool.completed)
-        for req in fresh:
-            if req.req_id in self.responded:
-                continue
-            # Durable completion FIRST, offset commit second: a crash
-            # between the two replays the request, and the response scan
-            # dedups it — at-least-once replay, exactly-once response.
-            self.responses_topic.publish(
-                Message(
-                    topic=self.responses_topic.name,
-                    payload={
-                        "req_id": req.req_id,
-                        "prompt": list(req.prompt),
-                        "output": list(req.output or []),
-                        "restarts": req.restarts,
-                        "enqueued_at": req.enqueued_at,
-                        "completed_at": req.completed_at,
-                    },
-                    key=str(req.req_id),
-                    created_at=now,
-                )
-            )
-            self.responded.add(req.req_id)
-            self.metrics.incr("serve.responses")
-            src = self._source.pop(req.req_id, None)
-            if src is not None:
-                self._mark_done(*src)
 
     # -- main loop --------------------------------------------------------------
     def step(self, now: float = 0.0) -> int:
-        """One round: log -> virtual consumers -> pool ingress, then the
-        pool's dispatch/decode/supervise/autoscale, then durable
-        completion + offset commit."""
-        self.consumers.step_all([self._adapter], now=now)
-        # Backlog parked in the requests topic (a full ingress made the
-        # consumers stop forwarding) is invisible to the pool's queues;
-        # report it as rejected demand or a bounded ingress would pin the
-        # autoscaler at the very moment scale-out is warranted.
-        lag = self.request_lag()
-        if lag:
-            self.pool.pool.note_rejected(lag)
-        decoded = self.pool.step(now)
-        self._collect(now)
-        return decoded
+        """One graph round: decode stage (log → consumers → pool ingress
+        → decode → durable completions + offset commit), then the
+        respond stage (completions → durable responses + commit)."""
+        return self.graph.step(now)
 
     def run_until_drained(
         self, max_steps: int = 10_000, now: float = 0.0, dt: float = 1.0

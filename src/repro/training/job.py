@@ -68,6 +68,60 @@ from repro.training.train_step import init_train_state, make_train_step
 _worker_ids = itertools.count()
 
 
+class TokenIngestStage:
+    """The training job's token-ingestion front half as a dataflow
+    stage: ``tokens`` topic → ordered manual-commit ``TokenPipeline`` →
+    shard messages → ``TrainerWorker`` pool → barrier step → journal →
+    offset commit.  It satisfies the ``StageGraph`` protocol (``name`` /
+    ``in_topic`` / ``out_topic`` / ``pool`` / ``step`` / ``pending`` /
+    ``input_lag`` / ``committed_offsets``), so a training job can sit as
+    the terminal stage of a graph — an upstream preprocessing stage
+    publishing into the tokens topic is throttled by training backlog
+    exactly like any other producer stage.  The "publish" that gates the
+    commit is the event-sourced checkpoint journal: commit-after-journal
+    is this stage's instance of chained commit-after-publish."""
+
+    def __init__(self, job: "TrainingJob") -> None:
+        self.job = job
+        self.name = f"train:{job.pipeline.config.topic}"
+        self.in_topic = job.pipeline.topic
+        self.out_topic = None
+        self.pool = job.pool
+
+    def input_lag(self) -> int:
+        return self.job.pipeline.lag()
+
+    def committed_offsets(self) -> Dict[int, int]:
+        return self.job.pipeline.offsets()
+
+    def pending(self) -> int:
+        return self.job.backlog()
+
+    def kill_worker(self, index: int = 0) -> str:
+        return self.pool.kill_worker(index)
+
+    def kill_all_workers(self) -> List[str]:
+        return [self.pool.kill_worker(i) for i in range(len(self.pool.workers))]
+
+    def close(self) -> None:
+        pass
+
+    def step(self, now: float = 0.0) -> int:
+        """One training round: assemble shard messages from the ordered
+        stream, report stream backlog as rejected demand, run the pool
+        (dispatch/process/collect/supervise/autoscale), then fire every
+        complete barrier.  Returns optimizer steps applied."""
+        job = self.job
+        job._now = max(job._now, now)
+        job._assemble(now)
+        if job.pool.elastic:
+            lag_batches = job.pipeline.lag() // job.batch_size
+            if lag_batches:
+                job.pool.note_rejected(min(lag_batches, job.autoscale_lag_cap))
+        job.pool.step(now)
+        return job._fire_barriers(now)
+
+
 class TrainerWorker(WorkerBase):
     """One DP replica's control-plane proxy: a supervised, killable,
     drainable pool worker.  ``step`` consumes shard messages from its
@@ -277,6 +331,9 @@ class TrainingJob:
             metric_prefix="train",
             worker_noun="trainer",
         )
+        # The ingestion front half as a graph-mountable stage (the main
+        # loop below is a delegation to it).
+        self.stage = TokenIngestStage(self)
 
     # -- views -----------------------------------------------------------------
     @property
@@ -484,20 +541,17 @@ class TrainingJob:
         lower = [d for d in self._feasible if d <= units]
         return lower[-1] if lower else self._feasible[0]
 
+    def as_stage(self) -> TokenIngestStage:
+        """Mount point for ``core.dataflow.StageGraph``: add the return
+        value to a graph whose upstream stage publishes into the tokens
+        topic, and the graph clock drives training."""
+        return self.stage
+
     # -- main loop ----------------------------------------------------------------
     def step(self, now: float = 0.0) -> int:
-        """One training round: assemble shard messages from the ordered
-        stream, report stream backlog to the autoscaler, run the pool
-        (dispatch/process/collect/supervise/autoscale), then fire every
-        complete barrier.  Returns optimizer steps applied this round."""
-        self._now = max(self._now, now)
-        self._assemble(now)
-        if self.pool.elastic:
-            lag_batches = self.pipeline.lag() // self.batch_size
-            if lag_batches:
-                self.pool.note_rejected(min(lag_batches, self.autoscale_lag_cap))
-        self.pool.step(now)
-        return self._fire_barriers(now)
+        """One training round, delegated to the ingest stage (assemble →
+        pool → barrier).  Returns optimizer steps applied this round."""
+        return self.stage.step(now)
 
     def run(
         self,

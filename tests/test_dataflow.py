@@ -1,0 +1,655 @@
+"""Multi-stage reactive dataflow (ISSUE 4 tentpole): a ``StageGraph`` of
+ElasticPools over durable topics — chained commit-after-publish,
+end-to-end exactly-once across worker chaos kills AND full-process
+death, keyed re-partitioning, topic fan-out, upstream backpressure, and
+the bounded-dedup-memory invariant."""
+
+import os
+
+import pytest
+
+from repro.core.dataflow import Stage, StageGraph
+from repro.core.elastic import AutoscalerConfig
+from repro.core.pool import DedupWindow
+from repro.core.simulation import (
+    SimStageConfig,
+    WorkloadConfig,
+    simulate_dataflow,
+)
+from repro.core.state import EventJournal
+from repro.data.topics import MessageLog, partition_for_key
+from tests._hypothesis_support import given, settings, st
+
+
+def fill(log, topic, n, partitions=3, keyed=False):
+    if not log.exists(topic):
+        log.create_topic(topic, partitions)
+    for i in range(n):
+        log.publish(topic, payload=i, key=(str(i) if keyed else None))
+
+
+def chain3(log, graph_kwargs=None, stage_kwargs=None, journal_dir=None):
+    """in -> (+1) -> mid1 -> (*2) -> mid2 -> (-3) -> out."""
+    for t, p in (("in", 3), ("mid1", 3), ("mid2", 3), ("out", 3)):
+        if not log.exists(t):
+            log.create_topic(t, p)
+    graph = StageGraph(log, **(graph_kwargs or {}))
+    fns = [lambda m: [m.payload + 1], lambda m: [m.payload * 2],
+           lambda m: [m.payload - 3]]
+    topics = ["in", "mid1", "mid2", "out"]
+    for i, fn in enumerate(fns):
+        kw = dict(initial_tasks=2, heartbeat_timeout=2.0, batch_n=8)
+        kw.update(stage_kwargs or {})
+        if journal_dir is not None:
+            os.makedirs(journal_dir, exist_ok=True)
+            topic = topics[i]
+            kw["journal_factory"] = (
+                lambda p, t=topic: EventJournal(
+                    os.path.join(journal_dir, f"{t}-p{p}.journal")
+                )
+            )
+        graph.add(Stage(f"s{i}", log, topics[i], topics[i + 1],
+                        process=fn, **kw))
+    return graph
+
+
+def expected_outputs(n):
+    return sorted((i + 1) * 2 - 3 for i in range(n))
+
+
+def terminal_values(graph):
+    return sorted(graph.stage("s2").outputs())
+
+
+def assert_fully_committed(graph):
+    for s in graph.stages.values():
+        for c in s.consumers.consumers:
+            assert c.offset == s.in_topic.partitions[c.partition].end_offset(), (
+                s.name, c.partition
+            )
+
+
+# --- basic chains -------------------------------------------------------------
+
+
+def test_three_stage_chain_exactly_once():
+    log = MessageLog()
+    fill(log, "in", 90)
+    graph = chain3(log)
+    graph.run_to_completion()
+    assert terminal_values(graph) == expected_outputs(90)
+    assert_fully_committed(graph)
+    # per-stage counts: every stage processed and published exactly once
+    for s in graph.stages.values():
+        assert s.pool.counter("task.processed") == 90
+        assert s.pool.counter("stage.published") == 90
+
+
+def test_keyed_repartition_preserves_per_key_partition():
+    """Keyed outputs land in the partition the key hashes to — the
+    inter-stage re-partitioning contract (fan-in stays ordered per
+    key)."""
+    log = MessageLog()
+    log.create_topic("in", 2)
+    log.create_topic("out", 4)
+    for i in range(40):
+        log.publish("in", payload=i, key=str(i))
+    graph = StageGraph(log)
+    graph.add(Stage("s", log, "in", "out",
+                    process=lambda m: [m.payload],
+                    key_fn=lambda v: f"k{v % 5}"))
+    graph.run_to_completion()
+    out = log.get("out")
+    assert out.total_messages() == 40
+    for p_idx, part in enumerate(out.partitions):
+        for msg in part.read(0, 1000):
+            assert msg.key is not None
+            assert partition_for_key(msg.key, out.num_partitions) == p_idx
+
+
+def test_fanout_two_stages_one_topic():
+    """Kafka-style fan-out: two stages subscribe the same intermediate
+    topic with independent consumer groups; both see every message."""
+    log = MessageLog()
+    fill(log, "in", 30)
+    log.create_topic("mid", 3)
+    log.create_topic("outA", 1)
+    log.create_topic("outB", 1)
+    graph = StageGraph(log)
+    graph.add(Stage("head", log, "in", "mid", process=lambda m: [m.payload]))
+    graph.add(Stage("a", log, "mid", "outA", process=lambda m: [m.payload + 100]))
+    graph.add(Stage("b", log, "mid", "outB", process=lambda m: [m.payload + 200]))
+    graph.run_to_completion()
+    assert sorted(graph.stage("a").outputs()) == sorted(i + 100 for i in range(30))
+    assert sorted(graph.stage("b").outputs()) == sorted(i + 200 for i in range(30))
+    assert_fully_committed(graph)
+
+
+def test_fan_in_two_stages_one_downstream_topic():
+    """Two upstream stages publish the same downstream topic; the
+    consumer stage sees each exactly once (publish dedup is per-stage,
+    keyed by (stage, partition, offset))."""
+    log = MessageLog()
+    fill(log, "inA", 20, partitions=2)
+    fill(log, "inB", 20, partitions=2)
+    log.create_topic("mid", 3)
+    log.create_topic("out", 1)
+    graph = StageGraph(log)
+    graph.add(Stage("a", log, "inA", "mid", process=lambda m: [("a", m.payload)]))
+    graph.add(Stage("b", log, "inB", "mid", process=lambda m: [("b", m.payload)]))
+    graph.add(Stage("sink", log, "mid", "out", process=lambda m: [m.payload]))
+    graph.run_to_completion()
+    out = [tuple(v) for v in graph.stage("sink").outputs()]
+    assert sorted(out) == sorted(
+        [("a", i) for i in range(20)] + [("b", i) for i in range(20)]
+    )
+
+
+# --- chaos: worker kills at every stage ---------------------------------------
+
+
+def test_chain_kill_middle_stage_workers_exactly_once():
+    """Acceptance drill, part 1: chaos-kill the *middle* stage's workers
+    mid-run; the supervisor heals the stage and every input still
+    produces exactly one terminal output, with per-stage committed
+    offsets reaching the end of every topic."""
+    log = MessageLog()
+    fill(log, "in", 120)
+    graph = chain3(log)
+    now = 0.0
+    for _ in range(3):
+        graph.step(now)
+        now += 1.0
+    graph.kill_stage("s1")  # every middle-stage worker at once
+    for _ in range(600):
+        graph.step(now)
+        now += 1.0
+        if graph.pending() == 0:
+            break
+    graph.step(now)
+    assert terminal_values(graph) == expected_outputs(120)
+    assert_fully_committed(graph)
+    assert graph.stage("s1").pool.counter("stage.task_restarts") >= 1
+    # zero-skip / zero-double per stage: every intermediate topic holds
+    # each (stage, partition, offset) source exactly once
+    for topic in ("mid1", "mid2", "out"):
+        srcs = [
+            m.src for p in log.get(topic).partitions for m in p.read(0, 10_000)
+        ]
+        assert len(srcs) == len(set(srcs)) == 120
+
+
+def test_chain_kill_every_stage_in_turn():
+    log = MessageLog()
+    fill(log, "in", 90)
+    graph = chain3(log)
+    now = 0.0
+    for kill_tick, name in ((2, "s0"), (6, "s1"), (10, "s2")):
+        while now <= kill_tick:
+            graph.step(now)
+            now += 1.0
+        graph.kill_worker(name, 0)
+    for _ in range(600):
+        graph.step(now)
+        now += 1.0
+        if graph.pending() == 0:
+            break
+    graph.step(now)
+    assert terminal_values(graph) == expected_outputs(90)
+    assert_fully_committed(graph)
+
+
+def test_chain_virtual_consumer_crash_no_duplicates():
+    """A crashed virtual consumer restarts from the *committed* offset
+    and re-reads the forwarded-but-uncommitted suffix; stage-level
+    admission dedup keeps processing exactly-once anyway."""
+    log = MessageLog()
+    fill(log, "in", 90)
+    graph = chain3(log)
+    graph.step(0.0)
+    vc = graph.stage("s0").consumers.consumers[0]
+    vc.alive = False  # crash: stops consuming AND heartbeating
+    now = 1.0
+    for _ in range(600):
+        graph.step(now)
+        now += 1.0
+        if graph.pending() == 0:
+            break
+    graph.step(now)
+    assert terminal_values(graph) == expected_outputs(90)
+    for s in graph.stages.values():
+        assert s.pool.counter("task.processed") == 90
+
+
+# --- chaos: full-process death ------------------------------------------------
+
+
+def test_full_process_death_replays_exactly_once(tmp_path):
+    """Acceptance drill, part 2: kill the whole process mid-run (abandon
+    the graph), rebuild from the spilled topics + committed offset
+    journals, drain — terminal outputs are exactly-once and identical to
+    an uninterrupted run, and per-stage committed offsets match the
+    uninterrupted run bitwise."""
+    def build(spill_dir, journal_dir):
+        manifest = os.path.join(spill_dir, "topics.json")
+        if os.path.exists(manifest):
+            log = MessageLog.reopen(spill_dir)
+        else:
+            log = MessageLog(spill_dir=spill_dir)
+            fill(log, "in", 100)
+        return log, chain3(log, journal_dir=journal_dir,
+                           stage_kwargs={"mailbox_capacity": 4, "batch_n": 4})
+
+    # Reference: uninterrupted run on its own spill dir.
+    ref_dir = str(tmp_path / "ref")
+    ref_log, ref = build(ref_dir, os.path.join(ref_dir, "j"))
+    ref.run_to_completion()
+    ref_outputs = terminal_values(ref)
+    ref_offsets = ref.committed_offsets()
+    assert ref_outputs == expected_outputs(100)
+
+    # Chaos: partial progress, then the process "dies" (objects dropped).
+    # One straggler worker per stage pins each partition's commit
+    # watermark behind faster workers' completions — so at death time
+    # there are outputs durably published above uncommitted offsets,
+    # exactly the window where naive replay would double-execute.
+    d = str(tmp_path / "chaos")
+    jdir = os.path.join(d, "j")
+    log1, g1 = build(d, jdir)
+    for s in g1.stages.values():
+        s.pool.workers[0].step_budget = 1
+    now = 0.0
+    for _ in range(6):
+        g1.step(now)
+        now += 1.0
+    done_phase1 = len(g1.stage("s2").outputs())
+    assert 0 < done_phase1 < 100, "the kill must land mid-flight"
+    committed1 = g1.committed_offsets()
+    g1.close()
+    log1.close()  # process exit; in-heap state (mailboxes, pools) is GONE
+
+    log2, g2 = build(d, jdir)
+    # rebuilt consumers resume from the committed offsets...
+    assert g2.committed_offsets() == committed1
+    # ...and at least one stage has an uncommitted suffix to replay
+    assert sum(s.input_lag() for s in g2.stages.values()) > 0
+    g2.run_to_completion(now=100.0)
+
+    assert terminal_values(g2) == ref_outputs
+    assert g2.committed_offsets() == ref_offsets
+    assert_fully_committed(g2)
+    # replay was dedup'd, not re-executed, wherever outputs already
+    # existed above an uncommitted offset
+    replayed = sum(
+        s.pool.counter("stage.replay_deduped") for s in g2.stages.values()
+    )
+    assert replayed >= 1
+    # zero-skip/zero-double: each topic holds every source exactly once
+    for topic in ("mid1", "mid2", "out"):
+        srcs = [
+            m.src for p in log2.get(topic).partitions for m in p.read(0, 10_000)
+        ]
+        assert len(srcs) == len(set(srcs)) == 100
+
+
+# --- backpressure -------------------------------------------------------------
+
+
+def make_throttle_graph(backpressure, n=300):
+    log = MessageLog()
+    fill(log, "in", n)
+    log.create_topic("mid", 3)
+    log.create_topic("out", 3)
+    graph = StageGraph(log, backpressure=backpressure,
+                       throttle_low=8, throttle_high=32)
+    fast = AutoscalerConfig(high_watermark=4.0, low_watermark=0.5,
+                            min_workers=1, max_workers=16, cooldown=0.0)
+    slow_scaler = AutoscalerConfig(high_watermark=4.0, low_watermark=0.5,
+                                   min_workers=1, max_workers=2, cooldown=0.0)
+    graph.add(Stage("fast", log, "in", "mid", process=lambda m: [m.payload],
+                    autoscaler=fast, mailbox_capacity=4))
+    graph.add(Stage("slow", log, "mid", "out", process=lambda m: [m.payload],
+                    autoscaler=slow_scaler, mailbox_capacity=2,
+                    step_budget=1))
+    return graph
+
+
+def test_backpressure_bounds_intermediate_topic_lag():
+    """The throttle experiment: a capacity-limited slow stage behind a
+    fast stage.  With backpressure the fast stage is throttled (its unit
+    target capped) and the intermediate topic's peak lag stays well
+    below the no-backpressure run's."""
+    on = make_throttle_graph(True)
+    off = make_throttle_graph(False)
+    for g in (on, off):
+        now = 0.0
+        for _ in range(60):
+            g.step(now)
+            now += 1.0
+    peak_on = on.peak_lag("slow")
+    peak_off = off.peak_lag("slow")
+    assert on.stage("fast").pool.counter("stage.throttled") >= 1
+    assert off.stage("fast").pool.counter("stage.throttled") == 0
+    assert peak_on < peak_off, (peak_on, peak_off)
+    # drain both: throttling must not lose anything
+    for g in (on, off):
+        g.run_to_completion(now=100.0)
+        assert sorted(g.stage("slow").outputs()) == sorted(range(300))
+
+
+def test_throttle_freeze_band_blocks_scale_out():
+    """Regression: with downstream pressure inside [throttle_low,
+    throttle_high) the upstream unit target must FREEZE — the cap is
+    evaluated before the autoscaler's decision, so scale-out into a
+    drowning consumer is suppressed, not rubber-stamped."""
+    log = MessageLog()
+    fill(log, "in", 400)
+    log.create_topic("mid", 3)
+    log.create_topic("out", 3)
+    # throttle_high effectively unreachable: only the freeze band acts
+    graph = StageGraph(log, backpressure=True,
+                       throttle_low=4, throttle_high=10_000)
+    graph.add(Stage("fast", log, "in", "mid",
+                    process=lambda m: [m.payload], mailbox_capacity=4,
+                    autoscaler=AutoscalerConfig(
+                        high_watermark=2.0, low_watermark=0.0,
+                        min_workers=1, max_workers=16, cooldown=0.0)))
+    graph.add(Stage("slow", log, "mid", "out",
+                    process=lambda m: [m.payload], mailbox_capacity=2,
+                    step_budget=1, elastic=False, initial_tasks=1))
+    fast = graph.stage("fast")
+    now = 0.0
+    frozen_at = None
+    for _ in range(40):
+        graph.step(now)
+        now += 1.0
+        pressure = graph.stage("slow").pending()
+        if frozen_at is None and 4 <= pressure < 10_000:
+            frozen_at = fast.pool.target_units()
+        elif frozen_at is not None:
+            assert fast.pool.target_units() <= frozen_at, \
+                "freeze band let the target grow"
+    assert frozen_at is not None, "pressure never entered the freeze band"
+    assert fast.pool.counter("stage.throttled") >= 1
+    graph.run_to_completion(now=now)
+    assert sorted(graph.stage("slow").outputs()) == sorted(range(400))
+
+
+def test_throttle_caps_target_units():
+    on = make_throttle_graph(True)
+    now = 0.0
+    peak_target = 0
+    for _ in range(40):
+        on.step(now)
+        now += 1.0
+        peak_target = max(peak_target, on.stage("fast").pool.target_units())
+        if on.stage("fast").pool.counter("stage.throttled"):
+            break
+    # once throttled the fast stage's target collapses toward 1
+    for _ in range(5):
+        on.step(now)
+        now += 1.0
+    assert on.stage("fast").pool.target_units() <= peak_target
+
+
+# --- simulate_dataflow --------------------------------------------------------
+
+
+def test_simulate_dataflow_chain_and_backpressure():
+    wl = WorkloadConfig(total_messages=6000, partitions=3, batch_n=10,
+                        t_consume=0.0005, t_process0=0.02)
+    fast = AutoscalerConfig(high_watermark=16, low_watermark=2,
+                            min_workers=1, max_workers=12, cooldown=10.0)
+    slow = AutoscalerConfig(high_watermark=32, low_watermark=2,
+                            min_workers=1, max_workers=2, cooldown=20.0)
+    stages = [
+        SimStageConfig("a", t_process0=0.02, autoscaler=fast),
+        SimStageConfig("b", t_process0=0.05, autoscaler=slow),
+        SimStageConfig("c", t_process0=0.002),
+    ]
+    on = simulate_dataflow(stages, wl, duration=120.0, backpressure=True)
+    off = simulate_dataflow(stages, wl, duration=120.0, backpressure=False)
+    assert on.throttle_events > 0 and off.throttle_events == 0
+    assert on.peak_lag(1) < off.peak_lag(1)
+    # determinism: same config, same result
+    again = simulate_dataflow(stages, wl, duration=120.0, backpressure=True)
+    assert again.terminal.processed == on.terminal.processed
+    assert again.peak_lag(1) == on.peak_lag(1)
+
+
+def test_simulate_dataflow_mid_chain_kill_loses_time_not_messages():
+    wl = WorkloadConfig(total_messages=2000, partitions=3, batch_n=10,
+                        t_consume=0.0005, t_process0=0.005)
+    stages = [SimStageConfig("a"), SimStageConfig("b"), SimStageConfig("c")]
+    clean = simulate_dataflow(stages, wl, duration=300.0)
+    killed = simulate_dataflow(stages, wl, duration=300.0,
+                               kill_stage_at=(5.0, 1), restart_cost=10.0)
+    assert killed.stages[1].restarts >= 1
+    assert killed.terminal.processed == clean.terminal.processed == 2000
+
+
+# --- dedup-memory bound (satellite) -------------------------------------------
+
+
+def test_dedup_window_watermark_eviction_unit():
+    d = DedupWindow()
+    for p in range(2):
+        for o in range(10):
+            assert not d.seen((p, o))
+    assert len(d) == 20
+    dropped = d.evict_below({0: 5, 1: 10})
+    assert dropped == 15
+    assert len(d) == 5
+    assert d.seen((0, 7))  # survivors still known
+    assert not d.seen((1, 3))  # evicted: counts as new again
+
+
+def test_dedup_window_memo_roundtrip():
+    d = DedupWindow()
+    assert not d.seen("k")
+    d.remember("k", [1, 2])
+    assert d.seen("k")
+    assert d.lookup("k") == [1, 2]
+    d.remember("missing", "x")  # no-op for unseen keys
+    assert d.lookup("missing") is None
+
+
+def test_stage_dedup_memory_stays_bounded_by_uncommitted_suffix():
+    """Long chaos run: the stage's dedup structures (publish window,
+    admitted set, worker windows) are evicted below the committed
+    watermark every commit, so they track the uncommitted suffix — not
+    the full history."""
+    log = MessageLog()
+    fill(log, "in", 600, partitions=2)
+    log.create_topic("out", 2)
+    graph = StageGraph(log)
+    stage = graph.add(Stage("s", log, "in", "out",
+                            process=lambda m: [m.payload],
+                            initial_tasks=3, heartbeat_timeout=2.0,
+                            batch_n=16))
+    now = 0.0
+    peak_window = 0
+    bound = 0
+    for r in range(2000):
+        if r % 7 == 3 and stage.pool.workers:
+            stage.kill_worker(r % 3)
+        graph.step(now)
+        now += 1.0
+        uncommitted = sum(
+            p.end_offset() - stage._watermark.get(p.index, 0)
+            for p in stage.in_topic.partitions
+        )
+        peak_window = max(peak_window, stage.dedup_size())
+        # window <= a small multiple of the uncommitted suffix
+        bound = max(bound, 4 * uncommitted + 8)
+        assert stage.dedup_size() <= 4 * uncommitted + 8, (
+            r, stage.dedup_size(), uncommitted
+        )
+        if graph.pending() == 0 and r > 4:
+            break
+    assert sorted(stage.outputs()) == sorted(range(600))
+    # and after the run everything committed: windows are ~empty
+    assert stage.dedup_size() <= 8
+    assert peak_window < 600, "window tracked history, not the suffix"
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=1,
+                max_size=40))
+def test_dedup_window_eviction_property(offsets_per_commit):
+    """Property: feeding N keys and committing in arbitrary chunks keeps
+    the window at O(suffix) — after every commit the window holds
+    exactly the keys at/above the watermark."""
+    d = DedupWindow()
+    watermark = 0
+    total = 0
+    for chunk in offsets_per_commit:
+        for _ in range(chunk):
+            d.seen((0, total))
+            total += 1
+        # commit everything but an arbitrary (bounded) suffix; the
+        # watermark only ever moves forward
+        watermark = min(max(watermark, total - (chunk % 3)), total)
+        d.evict_below({0: watermark})
+        assert len(d) == total - watermark
+
+
+# --- torn trailing JSONL line (satellite) -------------------------------------
+
+
+def test_torn_trailing_spill_line_truncated_and_recovered(tmp_path):
+    """A process killed mid-append leaves a half-written JSONL tail;
+    reopen must truncate to the last complete record and keep going —
+    appends continue onto the clean prefix."""
+    d = str(tmp_path / "log")
+    log = MessageLog(spill_dir=d)
+    log.create_topic("t", 1)
+    for i in range(5):
+        log.publish("t", payload={"i": i})
+    log.close()
+    path = os.path.join(d, "t-p0.jsonl")
+    size = os.path.getsize(path)
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write('{"payload": {"i": 99}, "key"')  # killed mid-append
+
+    re = MessageLog.reopen(d)
+    part = re.get("t").partitions[0]
+    assert part.end_offset() == 5
+    assert [m.payload["i"] for m in part.read(0, 10)] == list(range(5))
+    assert os.path.getsize(path) == size  # file physically truncated
+    re.publish("t", payload={"i": 5})
+    re.close()
+    re2 = MessageLog.reopen(d)
+    assert [m.payload["i"] for m in re2.get("t").partitions[0].read(0, 10)] \
+        == [0, 1, 2, 3, 4, 5]
+
+
+def test_torn_line_without_newline_terminator(tmp_path):
+    """Complete JSON but no trailing newline is also a torn append (the
+    terminator write never landed): drop it, or the next append would
+    concatenate onto it."""
+    d = str(tmp_path / "log")
+    log = MessageLog(spill_dir=d)
+    log.create_topic("t", 1)
+    for i in range(3):
+        log.publish("t", payload=i)
+    log.close()
+    path = os.path.join(d, "t-p0.jsonl")
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write('{"payload": 99, "key": null, "created_at": 0.0}')  # no \n
+
+    re = MessageLog.reopen(d)
+    assert re.get("t").partitions[0].end_offset() == 3
+    re.publish("t", payload=3)
+    re.close()
+    assert [m.payload for m in
+            MessageLog.reopen(d).get("t").partitions[0].read(0, 10)] \
+        == [0, 1, 2, 3]
+
+
+def test_mid_file_corruption_refuses_to_drop_data(tmp_path):
+    d = str(tmp_path / "log")
+    log = MessageLog(spill_dir=d)
+    log.create_topic("t", 1)
+    for i in range(3):
+        log.publish("t", payload=i)
+    log.close()
+    path = os.path.join(d, "t-p0.jsonl")
+    lines = open(path, "r", encoding="utf-8").read().splitlines(True)
+    lines[1] = '{"broken\n'
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.writelines(lines)
+    with pytest.raises(ValueError, match="mid-file"):
+        MessageLog.reopen(d)
+
+
+# --- producer-stage rejected demand (satellite) -------------------------------
+
+
+def test_producer_group_reports_rejected_demand():
+    from repro.core.messages import Message
+    from repro.core.virtual_messaging import VirtualProducerGroup
+    from repro.data.topics import Topic
+
+    out = Topic("out", 1)
+    pg = VirtualProducerGroup(out, initial_size=2, producer_capacity=2)
+    for i in range(8):  # 4 fit (2 producers x cap 2), 4 are overflow
+        pg.submit(Message(topic="out", payload=i))
+    assert pg.pending() == 8  # overflow-safe: nothing dropped
+    assert pg.rejected == 4
+    assert pg.take_rejected() == 4
+    assert pg.take_rejected() == 0  # drained
+    assert pg.pool.counter("vp.rejected") == 4
+    while pg.step_all() > 0:
+        pass
+    assert out.total_messages() == 8
+
+
+def test_producer_resize_reports_survivor_saturation():
+    from repro.core.messages import Message
+    from repro.core.virtual_messaging import VirtualProducerGroup
+    from repro.data.topics import Topic
+
+    out = Topic("out", 1)
+    pg = VirtualProducerGroup(out, initial_size=4, producer_capacity=2)
+    for i in range(8):  # exactly fills 4 producers x cap 2: no rejects
+        pg.submit(Message(topic="out", payload=i))
+    assert pg.take_rejected() == 0
+    pg.resize(1)  # survivors now hold 8 > capacity 2
+    assert pg.take_rejected() >= 6
+    while pg.step_all() > 0:
+        pass
+    assert out.total_messages() == 8
+
+
+def test_source_saturation_feeds_stage_autoscaler():
+    """Stage wiring: a saturated source producer group's rejected demand
+    reaches the stage's autoscaler via note_rejected (the serving-ingress
+    pattern), so the stage scales out for demand it cannot yet see."""
+    from repro.core.messages import Message
+    from repro.core.virtual_messaging import VirtualProducerGroup
+
+    log = MessageLog()
+    log.create_topic("in", 1)
+    log.create_topic("out", 1)
+    pg = VirtualProducerGroup(log.get("in"), initial_size=1,
+                              producer_capacity=1)
+    graph = StageGraph(log)
+    stage = graph.add(Stage(
+        "s", log, "in", "out", process=lambda m: [m.payload],
+        source=pg, initial_tasks=1,
+        autoscaler=AutoscalerConfig(high_watermark=2.0, low_watermark=0.0,
+                                    min_workers=1, max_workers=8,
+                                    cooldown=0.0),
+    ))
+    for i in range(24):
+        pg.submit(Message(topic="in", payload=i))
+    assert pg.rejected > 0
+    graph.step(0.0)  # rejected demand reaches the stage before the data
+    assert stage.pool.target_units() > 1
+    for r in range(1, 200):
+        pg.step_all()
+        graph.step(float(r))
+        if graph.pending() == 0 and pg.pending() == 0:
+            break
+    assert sorted(stage.outputs()) == sorted(range(24))

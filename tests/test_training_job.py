@@ -312,3 +312,47 @@ def test_retired_workers_never_lose_shards(rig):
     final = job.run(10, now=now)
     assert final == 10
     assert_exact_consumption(job, 10)
+
+
+def test_training_as_terminal_stage_of_a_dataflow_graph(rig):
+    """ISSUE 4: the token-ingestion front half is a dataflow stage — a
+    preprocessing stage feeds the tokens topic through a StageGraph, the
+    graph clock drives training, and two identical graph runs reach
+    bitwise-identical params with exact consumption accounting (stage
+    placement is provenance-keyed, so the document sequence is a pure
+    function of the inputs, not of scheduling)."""
+    from repro.core.dataflow import Stage, StageGraph
+    from repro.data.sources import TokenSource
+    from repro.data.topics import MessageLog
+
+    cfg, tcfg, model, step_fn = rig
+
+    def run_graph():
+        log = MessageLog()
+        log.create_topic("raw", 2)
+        log.create_topic("tokens", PARTS)
+        src = TokenSource(vocab_size=cfg.vocab_size, doc_len=SEQ + 1, seed=0)
+        for key, doc in src.stream(DOCS):
+            log.publish("raw", payload=doc, key=key)
+        graph = StageGraph(log)
+        graph.add(Stage("tokenize", log, "raw", "tokens",
+                        process=lambda m: [m.payload],
+                        initial_tasks=1, elastic=False))
+        job = TrainingJob(model, cfg, tcfg, log, batch_size=BATCH,
+                          seq_len=SEQ, dp=2, max_dp=4, train_step_fn=step_fn)
+        graph.add(job.as_stage())
+        assert graph.downstream(graph.stage("tokenize")) == [job.stage]
+        graph.run_to_completion(max_rounds=2000)
+        return job, graph
+
+    job_a, graph_a = run_graph()
+    job_b, _ = run_graph()
+    assert job_a.applied_step() == DOCS // BATCH
+    assert sum(job_a.committed_offsets().values()) == DOCS
+    assert job_a.losses == job_b.losses
+    assert_bitwise_equal(job_a, job_b)
+    assert_exact_consumption(job_a, job_a.applied_step())
+    # the preprocessing stage fully committed its own input too
+    tk = graph_a.stage("tokenize")
+    for c in tk.consumers.consumers:
+        assert c.offset == tk.in_topic.partitions[c.partition].end_offset()
