@@ -18,8 +18,10 @@ from repro.core.simulation import (
     simulate_reactive,
 )
 
-WL = WorkloadConfig(total_messages=1_000_000, partitions=3)
-DURATION = 1800.0
+# Scaled to the live actuator (real ReactiveJob objects on the event
+# heap); the Eq. 1/Eq. 2 completion-time contrast is scale-free.
+WL = WorkloadConfig(total_messages=200_000, partitions=3)
+DURATION = 300.0
 
 
 def _row(name: str, res) -> Dict:

@@ -1,6 +1,16 @@
-"""Paper Fig. 10: total processed messages under node-failure injection
-(p in {0, 30, 60, 90}% every 10 simulated minutes, 5-minute restarts),
-Liquid (3/6 tasks) vs Reactive Liquid."""
+"""Paper Fig. 10: total processed messages under node-failure injection,
+Liquid (3/6 tasks) vs Reactive Liquid — produced by the *live* actuator:
+``simulate_reactive`` drives a real ``ReactiveJob`` on a ``Cluster``
+(placement, relocation, dilation all in ``core.pool``/``core.cluster``),
+so this grid is a statement about the shipped control plane.
+
+The paper's 10-minute failure interval / 5-minute restart is scaled to a
+60 s / 30 s cadence (same 2:1 ratio; rebalance pause scaled alike) so the
+grid fits CI; claims are ratios, not absolute seconds.  Everything is
+virtual-time deterministic given the seed, so the counters are frozen to
+``BENCH_failure.json`` and smoke-diffed in CI like the serving/training/
+dataflow benches.
+"""
 
 from __future__ import annotations
 
@@ -14,18 +24,24 @@ from repro.core.simulation import (
     simulate_reactive,
 )
 
-WL = WorkloadConfig(total_messages=2_000_000, partitions=3)
-DURATION = 3600.0
+WL = WorkloadConfig(total_messages=200_000, partitions=3)
+DURATION = 300.0
 PROBS = (0.0, 0.3, 0.6, 0.9)
+INTERVAL = 60.0        # paper: 600 s, scaled 10x
+RESTART = 30.0         # paper: 300 s
+REBALANCE_PAUSE = 3.0  # paper-era ~30 s group rebalance, scaled alike
 
 
-def run(seed: int = 1) -> List[Dict]:
+def run(seed: int = 0) -> List[Dict]:
     rows: List[Dict] = []
     base = {}
     for p in PROBS:
-        fc = FailureConfig(probability=p, seed=seed)
-        l3 = simulate_liquid(3, WL, DURATION, failures=fc)
-        l6 = simulate_liquid(6, WL, DURATION, failures=fc)
+        fc = FailureConfig(probability=p, interval=INTERVAL,
+                           restart_delay=RESTART, seed=seed)
+        l3 = simulate_liquid(3, WL, DURATION, failures=fc,
+                             rebalance_pause=REBALANCE_PAUSE)
+        l6 = simulate_liquid(6, WL, DURATION, failures=fc,
+                             rebalance_pause=REBALANCE_PAUSE)
         r = simulate_reactive(WL, DURATION, failures=fc,
                               config=ReactiveSimConfig(initial_tasks=6))
         if p == 0.0:
@@ -40,17 +56,31 @@ def run(seed: int = 1) -> List[Dict]:
             "liquid6_loss_pct": round(100 * (1 - l6.processed / base["l6"]), 1),
             "reactive_loss_pct": round(100 * (1 - r.processed / base["r"]), 1),
             "reactive_restarts": r.restarts,
+            "reactive_scale_events": r.scale_events,
         })
-    worst = rows[-1]
+    grid = [row for row in rows if row["table"] == "fig10_failures"]
+    worst = grid[-1]
+    p30 = next(row for row in grid if row["p_failure"] == 0.3)
     rows.append({
         "table": "fig10_summary",
         "paper_claim_reactive_degrades_less": bool(
             all(
                 row["reactive_loss_pct"] <= row["liquid3_loss_pct"]
-                for row in rows
-                if row["table"] == "fig10_failures" and row["p_failure"] > 0
+                for row in grid
+                if row["p_failure"] > 0
             )
+        ),
+        # super-linear: tripling p (0.3 -> 0.9) more than triples the loss
+        # (restarted Liquid members rebuild state from history; at high p
+        # the rebuilds stop fitting between failures)
+        "paper_claim_liquid_superlinear_p90": bool(
+            worst["liquid3_loss_pct"] > 3 * p30["liquid3_loss_pct"]
         ),
         "reactive_heals": bool(worst["reactive_restarts"] > 0),
     })
     return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

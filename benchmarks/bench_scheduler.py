@@ -16,8 +16,10 @@ from repro.core.simulation import (
     simulate_reactive,
 )
 
-WL = WorkloadConfig(total_messages=800_000, partitions=3)
-DURATION = 1200.0
+# Scaled to the live actuator (16 real-object runs); the Pareto frontier
+# is about ratios between schedulers, not absolute seconds.
+WL = WorkloadConfig(total_messages=150_000, partitions=3)
+DURATION = 240.0
 
 
 def run() -> List[Dict]:
@@ -54,7 +56,7 @@ def run() -> List[Dict]:
     # RR keeps feeding the straggler's tasks (its mailboxes are chosen
     # blindly), JSQ/P2C route around them and flatten the latency tail.
     wl_arrivals = WorkloadConfig(
-        total_messages=300_000, partitions=3, growth_alpha=0.0,
+        total_messages=100_000, partitions=3, growth_alpha=0.0,
         arrival_rate=300.0,  # capacity ~ (4 + 2*0.25) cores / 0.01s = 450/s
     )
     for sched in ("round_robin", "jsq", "pow2"):

@@ -14,9 +14,10 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT]
 Prints one CSV-ish line per result row: ``table,key=value,...``.
 
-Whenever the serving or training bench runs, its rows are also frozen to
-``BENCH_serving.json`` / ``BENCH_training.json`` at the repo root — the
-perf baselines future PRs regress against.
+Whenever the serving, training, dataflow, or failure bench runs, its rows
+are also frozen to ``BENCH_<name>.json`` at the repo root — the perf
+baselines future PRs regress against (CI smoke-diffs the deterministic
+counters).
 """
 
 from __future__ import annotations
@@ -81,7 +82,7 @@ def main() -> None:
         all_rows.extend(rows)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", flush=True)
-        if name in ("serving", "training", "dataflow"):
+        if name in ("serving", "training", "dataflow", "failure"):
             out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
             with open(out, "w") as fh:
                 json.dump({"bench": name, "wall_s": round(elapsed, 1),

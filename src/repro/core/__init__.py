@@ -1,7 +1,15 @@
 """The paper's contribution: virtual messaging, supervision, elasticity,
-event-sourced state, CRDTs, schedulers, and the Liquid/Reactive-Liquid
-pipelines over a deterministic discrete-event cluster simulator."""
+event-sourced state, CRDTs, schedulers, the cluster/placement layer, and
+the Liquid/Reactive-Liquid pipelines — one actuator driven under a
+virtual clock (paper figures) and a wall clock (live runtimes)."""
 
+from repro.core.cluster import (
+    Cluster,
+    FailureConfig,
+    FailureInjector,
+    Node,
+    StepCost,
+)
 from repro.core.messages import Message, Mailbox, MessageBus
 from repro.core.crdt import GCounter, PNCounter, LWWRegister, GSet, ORSet, VClock
 from repro.core.state import Event, EventJournal, Snapshot, EventSourcedState

@@ -1,0 +1,214 @@
+"""The cluster/placement layer: nodes, placement, failure injection.
+
+This used to be a private model inside ``core.simulation`` — which meant
+the paper's §4 figures exercised a *re-statement* of the control loop,
+not the live ``ElasticPool`` actuator.  It is now a first-class reactive
+service shared by every tier: the live pool places workers on ``Node``s,
+dilates their step costs by co-residency and node speed, silences every
+resident worker when a node goes down, and relocates failed components
+to the healthiest live node (``core.pool``); the virtual-clock driver
+(``core.runtime.VirtualRuntime``) and the launch demos inject failures
+through the same ``FailureInjector``.
+
+Invariants (property-tested in ``tests/test_cluster.py``):
+
+  * residency conservation — every placed component is a resident of
+    exactly one node, across arbitrary fail/restart/relocate sequences;
+  * down-node quiescence — once the supervisor has had a detection
+    window with a healthy node available, no *active* component remains
+    placed on a down node;
+  * epoch monotonicity — ``Node.epoch`` bumps on every failure and a
+    restore carrying a stale epoch is a no-op, so delayed restart events
+    can never resurrect a node (or the workers on it) that failed again
+    in the meantime.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Set
+
+
+@dataclass
+class Node:
+    """One machine: a core budget, a speed, and a liveness epoch."""
+
+    node_id: int
+    cores: int = 2
+    speed: float = 1.0      # heterogeneity: <1 = straggler node
+    up: bool = True
+    epoch: int = 0          # bumps on every failure; stale events check it
+    residents: Set[str] = field(default_factory=set)
+
+    @property
+    def resident(self) -> int:  # back-compat: the old SimNode counter
+        return len(self.residents)
+
+    def dilation(self) -> float:
+        """Per-message processing dilation on this node: more runnable
+        components than cores time-share (``resident/cores``), and a
+        slow node stretches everything by ``1/speed``."""
+        return max(len(self.residents) / max(self.cores, 1), 1.0) / self.speed
+
+
+class Cluster:
+    """A set of nodes plus the placement policy.
+
+    Placement is least-loaded-healthiest: among up nodes, the fewest
+    residents (ties broken by node id — deterministic).  Residency is
+    tracked by component *name* so conservation is checkable; components
+    that are deliberately weightless (virtual consumers: consume-and-
+    forward is "much simpler than processing a message", paper §3.1) may
+    ``place()`` without ``assign()`` and never count toward dilation.
+    """
+
+    def __init__(self, num_nodes: int, cores: int = 2,
+                 speeds: Optional[List[float]] = None) -> None:
+        self.nodes = [
+            Node(i, cores=cores, speed=(speeds[i] if speeds else 1.0))
+            for i in range(num_nodes)
+        ]
+        # Bumps on every node recovery: pools watch it to rebalance onto
+        # freshly healed capacity (otherwise it would sit idle forever).
+        self.topology_version = 0
+        self.failures = 0
+
+    # -- views ---------------------------------------------------------------
+    def healthy(self) -> List[Node]:
+        return [n for n in self.nodes if n.up]
+
+    def least_loaded(self) -> Optional[Node]:
+        live = self.healthy()
+        if not live:
+            return None
+        return min(live, key=lambda n: (len(n.residents), n.node_id))
+
+    # The placement policy by its contract name.
+    place = least_loaded
+
+    def total_residents(self) -> int:
+        return sum(len(n.residents) for n in self.nodes)
+
+    # -- residency ------------------------------------------------------------
+    def assign(self, node: Node, name: str) -> None:
+        """Make ``name`` resident on ``node`` (and nowhere else)."""
+        for n in self.nodes:
+            n.residents.discard(name)
+        node.residents.add(name)
+
+    def release(self, name: str) -> None:
+        for n in self.nodes:
+            n.residents.discard(name)
+
+    def node_of(self, name: str) -> Optional[Node]:
+        for n in self.nodes:
+            if name in n.residents:
+                return n
+        return None
+
+    def dilation(self, node: Optional[Node]) -> float:
+        return node.dilation() if node is not None else 1.0
+
+    # -- chaos ----------------------------------------------------------------
+    def fail(self, node: Node) -> int:
+        """Take a node down; every resident component is silenced at once
+        (the pool's step/heartbeat loops gate on ``node.up``).  Returns
+        the epoch of this failure, the token a restore must present."""
+        if not node.up:
+            return node.epoch
+        node.up = False
+        node.epoch += 1
+        self.failures += 1
+        return node.epoch
+
+    def restore(self, node: Node, epoch: Optional[int] = None) -> bool:
+        """Bring a node back.  ``epoch`` (from the matching :meth:`fail`)
+        guards against stale events: a delayed restore for failure N is a
+        no-op once failure N+1 has happened — it must never resurrect a
+        node that died again in the meantime."""
+        if node.up:
+            return False
+        if epoch is not None and epoch != node.epoch:
+            return False  # stale: the node failed again after this event
+        node.up = True
+        self.topology_version += 1
+        return True
+
+
+@dataclass
+class FailureConfig:
+    probability: float = 0.0       # per node, per interval
+    interval: float = 600.0        # every 10 simulated minutes (paper §4.3)
+    restart_delay: float = 300.0   # node back after 5 minutes
+    seed: int = 0
+
+
+class FailureInjector:
+    """Paper §4.3: every ``interval``, each node fails w.p. ``probability``
+    and restarts ``restart_delay`` later.  Events ride the caller's event
+    heap (any object with ``schedule(delay, fn)`` — ``SimEngine`` in the
+    simulator, a per-tick-pumped engine in the launch demos), so the same
+    injector drives the virtual-clock figures and the live chaos demos.
+    """
+
+    def __init__(
+        self,
+        engine,
+        cluster: Cluster,
+        config: FailureConfig,
+        on_down: Optional[Callable[[Node], None]] = None,
+        on_up: Optional[Callable[[Node], None]] = None,
+    ) -> None:
+        self.engine = engine
+        self.cluster = cluster
+        self.config = config
+        self.on_down = on_down
+        self.on_up = on_up
+        self.rng = random.Random(config.seed)
+        self.failures = 0
+        self.restores = 0
+        if config.probability > 0:
+            engine.schedule(config.interval, self._tick)
+
+    def _tick(self) -> None:
+        for node in self.cluster.nodes:
+            if node.up and self.rng.random() < self.config.probability:
+                epoch = self.cluster.fail(node)
+                self.failures += 1
+                if self.on_down is not None:
+                    self.on_down(node)
+                self.engine.schedule(
+                    self.config.restart_delay,
+                    lambda n=node, e=epoch: self._restart(n, e),
+                )
+        self.engine.schedule(self.config.interval, self._tick)
+
+    def _restart(self, node: Node, epoch: int) -> None:
+        if self.cluster.restore(node, epoch):
+            self.restores += 1
+            if self.on_up is not None:
+                self.on_up(node)
+
+
+@dataclass
+class StepCost:
+    """Per-message processing-cost model for metered pools.
+
+    TCMM's nearest-micro-cluster search slows as micro-clusters
+    accumulate (paper Fig. 8's decelerating slope):
+    ``t_p(k) = t_p0 * (1 + alpha * sqrt(k))`` where ``k`` is messages
+    processed so far.  A pool given a ``StepCost`` converts elapsed
+    (virtual or wall) time into per-worker message budgets, dilated by
+    the worker's node — this is how the *live* actuator reproduces the
+    paper's timing model without a parallel control loop.
+    """
+
+    t_process0: float = 0.010
+    growth_alpha: float = 0.0
+
+    def t_process(self, processed_so_far: int) -> float:
+        return self.t_process0 * (
+            1.0 + self.growth_alpha * math.sqrt(processed_so_far)
+        )

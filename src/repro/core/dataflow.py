@@ -32,8 +32,11 @@ missing layer above ``core.pool``:
 ``ReactiveJob`` is a one-stage graph, ``ServingJob`` a two-stage graph
 (decode → response-publish), and ``TrainingJob``'s token-ingestion front
 half a terminal stage (``training.job.TokenIngestStage``) — see those
-modules.  The virtual-time restatement for paper-style figures is
-``core.simulation.simulate_dataflow``.
+modules.  The paper-figure simulations drive this same graph on the
+virtual clock: ``core.simulation.simulate_dataflow`` is a thin harness
+that builds real ``Stage``s (optionally on a ``core.cluster.Cluster``)
+and steps them via ``core.runtime.VirtualRuntime`` — no restated control
+loop.
 
 Exactly-once bookkeeping (all bounded O(uncommitted suffix), evicted on
 every watermark advance — the ``DedupWindow`` memory invariant):
@@ -52,8 +55,10 @@ every watermark advance — the ``DedupWindow`` memory invariant):
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.cluster import Cluster, StepCost
 from repro.core.elastic import AutoscalerConfig
 from repro.core.messages import Mailbox, Message
 from repro.core.pool import DedupWindow, ElasticPool, WorkerBase
@@ -246,6 +251,11 @@ class Stage:
         dedup_window: int = 65536,
         pool: Optional[ElasticPool] = None,
         source: Optional[Any] = None,
+        cluster: Optional[Cluster] = None,
+        restart_cost: float = 0.0,
+        step_cost: Optional[StepCost] = None,
+        consume_cost: Optional[float] = None,
+        completion_window: Optional[int] = 65536,
         metric_prefix: str = "stage",
         worker_noun: str = "task",
     ) -> None:
@@ -298,9 +308,42 @@ class Stage:
                 overflow="defer",
                 retire_mode="redistribute",
                 collect=self._harvest_workers,
+                cluster=cluster,
+                restart_cost=restart_cost,
+                step_cost=step_cost,
                 metric_prefix=metric_prefix,
                 worker_noun=worker_noun,
             )
+
+        # Placement for the stage's virtual consumers: they live on
+        # nodes (and die with them) but are *weightless* — consume-and-
+        # forward is "much simpler than processing a message" (paper
+        # §3.1), so they never count toward core dilation.  Adapter-mode
+        # stages inherit the supplied pool's cluster.
+        self.cluster = (
+            cluster if cluster is not None
+            else getattr(self.pool, "cluster", None)
+        )
+        self.restart_cost = (
+            restart_cost if restart_cost > 0
+            else getattr(self.pool, "restart_cost", 0.0)
+        )
+        # Consume-cost metering: seconds per consumed message (the
+        # paper's ``t_c`` + forward cost).  None = unmetered (live mode:
+        # a step consumes up to ``batch_n``).
+        self.consume_cost = consume_cost
+        self._vc_credit: Dict[int, float] = {}
+        self._vc_prev: Dict[int, float] = {}
+        self._gate_vcs = self.cluster is not None or self.restart_cost > 0
+        # Per-message completion times (forward -> durably done): the
+        # paper's Eq. 2 ``n·t_c + t_wi + t_p`` observable, recorded by
+        # the stage itself so every tier reports the same quantity.
+        # Bounded by default (a long-lived live stage must not leak
+        # O(history)); the figure harnesses pass ``None`` to keep the
+        # full distribution.
+        self.completions: "deque[float]" = deque(maxlen=completion_window)
+        self._forward_time: Dict[Tuple[int, int], float] = {}
+        self._now = 0.0
 
         # -- commit-after-publish bookkeeping ------------------------------
         parts = range(self.in_topic.num_partitions)
@@ -313,7 +356,13 @@ class Stage:
         self._expected: Dict[Tuple[int, int], int] = {}
         self._pubcount: Dict[Tuple[int, int], int] = {}
         self._fresh: List[Tuple[Message, List[Any]]] = []
+        # partition -> (lo, hi): offsets committed since the last
+        # eviction round (the targeted-eviction work list).
+        self._evict_spans: Dict[int, Tuple[int, int]] = {}
         self._seed_published()
+        if self.cluster is not None:
+            for vc in self.consumers.consumers:
+                vc.node = self.cluster.place()
         for vc in self.consumers.consumers:
             self._supervise_vc(vc.partition)
 
@@ -340,10 +389,54 @@ class Stage:
     def _supervise_vc(self, partition: int) -> None:
         self.pool.supervisor.supervise(
             f"{self.name}:vc{partition}",
-            restart=lambda p=partition: self.consumers.restart_consumer(p),
+            restart=lambda p=partition: self._restart_vc(p),
             detector=HeartbeatDetector(self.pool.heartbeat_timeout),
         )
         self.pool.supervisor.heartbeat(f"{self.name}:vc{partition}", self.pool._now)
+
+    def _restart_vc(self, partition: int) -> "None | bool":
+        """Let-It-Crash for a virtual consumer: rebuild from the journal,
+        relocated to the healthiest live node, warm after restart_cost.
+        With no live node, keep the old instance and defer (``False``) —
+        it resumes when its own node heals, or the supervisor retries
+        next window."""
+        node = None
+        if self.cluster is not None:
+            node = self.cluster.place()
+            if node is None:
+                return False
+        vc = self.consumers.restart_consumer(partition)
+        vc.node = node
+        if self.restart_cost > 0:
+            vc.warm_until = self._now + self.restart_cost
+
+    def _vc_up(self, vc: Any) -> bool:
+        """Heartbeat gate: a consumer on a down node is silenced (it
+        misses beats and gets relocated), exactly like a pool worker."""
+        if self.cluster is None:
+            return True
+        node = getattr(vc, "node", None)
+        return node is not None and node.up
+
+    def _vc_ready(self, vc: Any, now: float) -> bool:
+        """Step gate: up *and* past any relocation warm-up."""
+        return self._vc_up(vc) and now >= getattr(vc, "warm_until", 0.0)
+
+    def _meter_consumers(self, now: float) -> None:
+        """Convert elapsed virtual time to per-consumer batch budgets:
+        a consumer may pull ``(now - prev) / consume_cost`` messages this
+        round.  Unused capacity is not banked — consuming is
+        use-it-or-lose-it, so an idle partition cannot burst later."""
+        for vc in self.consumers.consumers:
+            prev = self._vc_prev.get(vc.partition, now)
+            self._vc_prev[vc.partition] = now
+            credit = (
+                self._vc_credit.get(vc.partition, 0.0)
+                + (now - prev) / self.consume_cost
+            )
+            batch = int(credit)
+            vc.batch_size = batch
+            self._vc_credit[vc.partition] = credit - batch
 
     # -- admission -----------------------------------------------------------
     def _fully_published(self, src: Tuple[int, int]) -> bool:
@@ -374,6 +467,7 @@ class Stage:
     def _note_admitted(self, msg: Message) -> None:
         if msg.offset >= 0:
             self._admitted.add((msg.partition, msg.offset))
+            self._forward_time[(msg.partition, msg.offset)] = self._now
 
     def _admit(self, msg: Message) -> bool:
         """Ingress-feed delivery (adapter stages override).  True when
@@ -462,31 +556,57 @@ class Stage:
         if partition < 0:
             return
         self._admitted.discard((partition, offset))
+        t0 = self._forward_time.pop((partition, offset), None)
+        if t0 is not None:
+            self.completions.append(now - t0)
         self._done[partition].add(offset)
         w = self._watermark[partition]
         while w in self._done[partition]:
             self._done[partition].discard(w)
             w += 1
         if w != self._watermark[partition]:
+            old = self._watermark[partition]
             self._watermark[partition] = w
-            self.consumers.consumers[partition].commit_to(w, now=now)
-            self._evict_below_watermark()
+            # The durable commit and dedup eviction are deferred to the
+            # end of the publish/commit round (one journal append per
+            # partition per step, not per offset; eviction addresses the
+            # committed offsets directly instead of scanning every
+            # window) — the state observable after every step() is
+            # unchanged, and a restart in between merely replays a
+            # slightly longer suffix through the admission dedup.
+            lo, _ = self._evict_spans.get(partition, (old, old))
+            self._evict_spans[partition] = (min(lo, old), w)
 
-    def _evict_below_watermark(self) -> None:
-        wm = self._watermark
-        self._pub.evict_below(wm)
-        dead = [k for k in self._expected if k[1] < wm.get(k[0], 0) and k[0] >= 0]
-        for k in dead:
-            self._expected.pop(k, None)
-            self._pubcount.pop(k, None)
-        for worker in self.pool.workers:
-            window = getattr(worker, "dedup", None)
-            if isinstance(window, DedupWindow):
-                window.evict_below(wm)
+    def _evict_committed(self, spans: Dict[int, Tuple[int, int]]) -> None:
+        """Drop every dedup entry for the offsets committed this round
+        (the ``DedupWindow`` memory invariant: a key below the committed
+        watermark can never be redelivered).  The spans are known, so
+        eviction is O(committed × workers) — addressed directly, never a
+        scan over the windows."""
+        windows = [
+            worker.dedup for worker in self.pool.workers
+            if isinstance(getattr(worker, "dedup", None), DedupWindow)
+        ]
+        for p, (lo, hi) in spans.items():
+            for o in range(lo, hi):
+                key = (p, o)
+                n = self._expected.pop(key, None)
+                self._pubcount.pop(key, None)
+                for k in range(n if n is not None else 0):
+                    self._pub.discard((p, o, k))
+                for window in windows:
+                    window.discard(key)
 
     def _publish_and_commit(self, now: float) -> None:
         for p, o, outputs in self._take_results():
             self._publish_result(p, o, outputs, now)
+        if self._evict_spans:
+            spans, self._evict_spans = self._evict_spans, {}
+            for vc in self.consumers.consumers:
+                w = self._watermark.get(vc.partition, 0)
+                if w > vc.offset:
+                    vc.commit_to(w, now=now)
+            self._evict_committed(spans)
 
     # -- views ----------------------------------------------------------------
     @property
@@ -555,11 +675,29 @@ class Stage:
     def step(self, now: float = 0.0) -> int:
         """One stage round: beat + step virtual consumers (forward with
         admission dedup), report parked input lag and source saturation
-        as rejected demand, run the pool, then publish-and-commit."""
+        as rejected demand, run the pool, then publish-and-commit.
+        Placement-aware stages gate consumers on their node's health and
+        relocation warm-up; cost-metered stages budget the batch size
+        from elapsed virtual time."""
+        self._now = now
+        if self.cluster is not None:
+            for vc in self.consumers.consumers:
+                if getattr(vc, "node", None) is None:
+                    # Unplaced (the whole cluster was down): adopt the
+                    # first healthy node that appears.
+                    vc.node = self.cluster.place()
         for vc in self.consumers.consumers:
-            if vc.alive:
+            if vc.alive and self._vc_up(vc):
                 self.pool.supervisor.heartbeat(f"{self.name}:vc{vc.partition}", now)
-        self.consumers.step_all(self._forward_targets(), now=now)
+        if self.consume_cost is not None and self.consume_cost > 0:
+            self._meter_consumers(now)
+        self.consumers.step_all(
+            self._forward_targets(),
+            now=now,
+            gate=(
+                (lambda c: self._vc_ready(c, now)) if self._gate_vcs else None
+            ),
+        )
         if self.source is not None:
             rejected = self.source.take_rejected()
             if rejected:

@@ -5,9 +5,14 @@ workers.  Before this module existed the repo carried three hand-rolled
 copies of the same loop — ``ReactiveJob``'s task pool, the serving
 layer's ``ElasticServingPool``, and the virtual producer pool — each with
 its own spawn/retire/drain/restart code.  They are now thin policy shims
-over this runtime (the discrete-event simulator in ``core.simulation``
-deliberately re-implements the loop over *virtual* time; it shares the
-policy objects — autoscaler, schedulers, detectors — not this actuator).
+over this runtime, and so is the paper-figure simulator: with a
+``core.cluster.Cluster`` attached the pool is *placement-aware* (workers
+carry a ``node``; a node-down event silences every resident worker at
+once; the supervisor relocates failures to the healthiest live node
+after ``restart_cost``; step costs dilate by ``resident/cores × 1/speed``)
+and with a ``StepCost`` it is *time-metered* (elapsed virtual or wall
+time converts to per-worker message budgets) — one actuator under two
+clocks (see ``core.runtime``).
 
 What the pool owns:
 
@@ -48,6 +53,7 @@ from __future__ import annotations
 from dataclasses import replace as dc_replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
 
+from repro.core.cluster import Cluster, StepCost
 from repro.core.elastic import (
     AutoscalerConfig,
     WorkerPoolController,
@@ -165,6 +171,12 @@ class DedupWindow:
         if key in self._seen:
             self._seen[key] = value
 
+    def discard(self, key: Any) -> None:
+        """Drop one key (no-op if absent).  Targeted eviction for owners
+        that know exactly which keys just fell below their watermark —
+        O(1) per key instead of an :meth:`evict_if` window scan."""
+        self._seen.pop(key, None)
+
     def evict_if(self, pred: Callable[[Any], bool]) -> int:
         """Drop every key for which ``pred`` holds; returns the count.
         The owner asserts those keys can never be redelivered."""
@@ -227,6 +239,9 @@ class ElasticPool:
         collect: Optional[Callable[[float], None]] = None,
         on_scale: Optional[Callable[[int, int], None]] = None,
         throttle: Optional[Callable[[], Optional[int]]] = None,
+        cluster: Optional[Cluster] = None,
+        restart_cost: float = 0.0,
+        step_cost: Optional[StepCost] = None,
         metrics: Optional[MetricsReplica] = None,
         metric_prefix: str = "pool",
         worker_noun: str = "worker",
@@ -263,6 +278,23 @@ class ElasticPool:
         self.throttle = throttle
         self.supervisor = supervisor or Supervisor(f"{name}-supervisor")
         self.heartbeat_timeout = heartbeat_timeout
+        # Placement layer (None = infinite homogeneous machine — the
+        # pre-cluster behavior, bit-for-bit).  With a cluster attached,
+        # every worker carries a ``node``, spawn/restart consult the
+        # placement policy, a down node silences its residents, and step
+        # costs dilate by co-residency and node speed.
+        self.cluster = cluster
+        self.restart_cost = restart_cost
+        self.step_cost = step_cost
+        # Messages processed over the pool's lifetime — the ``k`` of the
+        # cost model's t_p(k) and the cheap progress counter harnesses
+        # sample (merged_metrics() would cost a CRDT merge per sample).
+        self.work_done = 0
+        self._credit: Dict[str, float] = {}     # fractional step budgets
+        self._cost_prev: Dict[str, float] = {}  # last metered step time
+        self._seen_topology = cluster.topology_version if cluster else 0
+        # Fast path: no placement, no metering, no warm-up gating.
+        self._plain = cluster is None and step_cost is None and restart_cost <= 0
         self.ingress: Optional[Mailbox] = None
         if ingress_capacity is not None:
             self.ingress = Mailbox(
@@ -381,12 +413,74 @@ class ElasticPool:
         worker.alive = False
         return worker.name
 
+    # -- placement -------------------------------------------------------------
+    def _place(self, worker: Any, node: Any = None) -> None:
+        """Bind a worker to a node (least-loaded healthy by default) and
+        record its residency.  With every node down, the worker stays
+        unplaced — silenced until the rebalance pass re-places it."""
+        node = node if node is not None else self.cluster.place()
+        worker.node = node
+        if node is not None:
+            self.cluster.assign(node, worker.name)
+
+    def _release(self, worker: Any) -> None:
+        """Departure bookkeeping: residency and metering credits."""
+        if self.cluster is not None:
+            self.cluster.release(worker.name)
+        self._credit.pop(worker.name, None)
+        self._cost_prev.pop(worker.name, None)
+
+    def _placement_up(self, worker: Any) -> bool:
+        """False when the worker's node is down (or it has none while a
+        cluster is attached): it neither steps nor heartbeats — a node
+        failure silences *all* resident workers at once, and the
+        supervisor's missed-beat path relocates them."""
+        if self.cluster is None:
+            return True
+        node = getattr(worker, "node", None)
+        return node is not None and node.up
+
+    def _rebalance(self, now: float) -> None:
+        """A node recovered: place any unplaced workers, then move this
+        pool's workers off the most-crowded nodes until the residency
+        spread is within one (elastic service placement rebalancing —
+        without it, healed capacity would sit idle forever).  Each
+        relocation pays ``restart_cost`` before the worker steps again;
+        its mailbox moves with it."""
+        for worker in self.workers:
+            if worker.alive and getattr(worker, "node", None) is None:
+                self._place(worker)
+                if worker.node is not None:
+                    worker.warm_until = now + self.restart_cost
+        while True:
+            target = self.cluster.place()
+            if target is None:
+                break
+            movable = [
+                w for w in self.workers
+                if w.alive
+                and getattr(w, "node", None) is not None
+                and w.node.up and w.node is not target
+                and len(w.node.residents) > len(target.residents) + 1
+            ]
+            if not movable:
+                break
+            worker = max(
+                movable, key=lambda w: (len(w.node.residents), w.load())
+            )
+            self._place(worker, target)
+            worker.warm_until = now + self.restart_cost
+            self.metrics.incr(f"{self._px}.{self._noun}_relocations")
+
     # -- internals -------------------------------------------------------------
     def _spawn(self) -> Any:
         worker = self.worker_factory()
         if getattr(worker, "metrics", None) is None:
             worker.metrics = MetricsReplica(worker.name)
         self.workers.append(worker)
+        if self.cluster is not None:
+            self._place(worker)
+        self._cost_prev[worker.name] = self._now
         self._supervise(worker)
         self.metrics.incr(f"{self._px}.{self._noun}_spawns")
         return worker
@@ -438,12 +532,25 @@ class ElasticPool:
         if msgs:
             self.metrics.incr(f"{self._px}.readmitted", len(msgs))
 
-    def _restart_worker(self, worker: Any) -> None:
+    def _restart_worker(self, worker: Any) -> "None | bool":
         """Let-It-Crash: strip everything the victim held, swap in a
         fresh instance (draining victims are not replaced — they were
-        leaving), re-admit the work."""
+        leaving), re-admit the work.  With a cluster, the fresh instance
+        is *relocated* to the healthiest live node and pays
+        ``restart_cost`` before it steps again.  Returns ``False`` when
+        the restart is deferred (no healthy node to place on)."""
         if worker not in self.workers:
             return  # already replaced by an earlier restart
+        new_node = None
+        if self.cluster is not None and not worker.draining:
+            new_node = self.cluster.place()
+            if new_node is None:
+                # Nowhere to relocate: leave the victim in place (its
+                # messages stay with it) and tell the supervisor this
+                # was a deferral, not a heal — it retries after another
+                # detection window, or the worker simply resumes when
+                # its own node comes back.
+                return False
         msgs = list(worker.drain_for_readmission())
         worker.alive = False
         self._fold(worker)
@@ -451,6 +558,7 @@ class ElasticPool:
         idx = self.workers.index(worker)
         if worker.draining:
             self.workers.pop(idx)
+            self._release(worker)
             if msgs:
                 if self.ingress is not None:
                     self._readmit(msgs)
@@ -464,6 +572,12 @@ class ElasticPool:
         if cap is not None:
             fresh.set_capacity(cap)
         self.workers[idx] = fresh
+        self._release(worker)
+        if self.cluster is not None:
+            self._place(fresh, new_node)
+        self._cost_prev[fresh.name] = self._now
+        if self.restart_cost > 0:
+            fresh.warm_until = self._now + self.restart_cost
         self._supervise(fresh)
         if self.ingress is not None:
             self._readmit(msgs)
@@ -504,6 +618,7 @@ class ElasticPool:
         self.workers.remove(victim)
         victim.alive = False
         self._fold(victim)
+        self._release(victim)
         self.supervisor.unsupervise(victim.name)
         self._redistribute(list(victim.drain_for_readmission()))
         self.metrics.incr(f"{self._px}.{self._noun}_retired")
@@ -513,6 +628,7 @@ class ElasticPool:
             if worker.load() == 0 and worker.inflight() == 0:
                 self.workers.remove(worker)
                 self._fold(worker)
+                self._release(worker)
                 self.supervisor.unsupervise(worker.name)
                 self.metrics.incr(f"{self._px}.{self._noun}_retired")
 
@@ -593,6 +709,62 @@ class ElasticPool:
             self.ingress.put_front(msg)
         return moved
 
+    def _metered_step(self, worker: Any, now: float, t_p: float) -> int:
+        """Step one worker under placement and cost awareness.
+
+        * Node down (or unplaced): silenced — no step, no accrual.
+        * Warming (relocation in flight): the ``restart_cost`` window.
+        * ``step_cost`` set: elapsed time since the worker's last step
+          converts to a message budget, ``(now - prev) / (t_p × dilation)``
+          — fractional remainders carry (capped at one message, so an
+          idle worker cannot bank a burst), and an un-budgeted worker
+          that overdraws pays it back through negative credit.
+        * cluster only: skip-step credits — the worker runs a
+          ``1/dilation`` fraction of rounds (one step = one quantum).
+        """
+        node = getattr(worker, "node", None)
+        if self.cluster is not None and (node is None or not node.up):
+            self._cost_prev[worker.name] = now
+            return 0
+        if now < getattr(worker, "warm_until", 0.0):
+            self._cost_prev[worker.name] = now
+            return 0
+        dil = self.cluster.dilation(node) if self.cluster is not None else 1.0
+        if self.step_cost is None:
+            credit = self._credit.get(worker.name, 0.0) + 1.0 / dil
+            rounds = int(credit)
+            n = 0
+            for _ in range(rounds):
+                n += worker.step(now)
+            self._credit[worker.name] = min(credit - rounds, 1.0)
+            return n
+        prev = self._cost_prev.get(worker.name, now)
+        self._cost_prev[worker.name] = now
+        credit = self._credit.get(worker.name, 0.0) + (now - prev) / (t_p * dil)
+        budget = int(credit)
+        if budget <= 0:
+            self._credit[worker.name] = credit
+            return 0
+        base = getattr(worker, "step_budget", None)
+        if base is not None:
+            worker.step_budget = budget
+            n = worker.step(now)
+            worker.step_budget = base
+            self._credit[worker.name] = min(credit - n, 1.0)
+            return n
+        # No per-call budget knob: spend the credit one step at a time; a
+        # step that overdraws (processes several quanta) pays it back, an
+        # idle step ends the round.
+        n = 0
+        while credit >= 1.0:
+            done = worker.step(now)
+            credit -= max(done, 1)
+            n += done
+            if done == 0:
+                break
+        self._credit[worker.name] = min(credit, 1.0)
+        return n
+
     # -- main loop ---------------------------------------------------------------
     def step(self, now: float = 0.0) -> int:
         """One pool round: reap drained, dispatch, step workers, collect,
@@ -603,16 +775,31 @@ class ElasticPool:
         if self.ingress is not None:
             self._dispatch()
         worked = 0
-        for worker in self.workers:
-            if worker.alive:
-                worked += worker.step(now)
+        if self._plain:
+            for worker in self.workers:
+                if worker.alive:
+                    worked += worker.step(now)
+        else:
+            if self.cluster is not None and (
+                self.cluster.topology_version != self._seen_topology
+            ):
+                self._seen_topology = self.cluster.topology_version
+                self._rebalance(now)
+            t_p = (
+                self.step_cost.t_process(self.work_done)
+                if self.step_cost is not None else 0.0
+            )
+            for worker in self.workers:
+                if worker.alive:
+                    worked += self._metered_step(worker, now, t_p)
+        self.work_done += worked
         if self.collect is not None:
             # Harvest finished outputs BEFORE supervision: the restart
             # path replaces the worker object, and anything harvestable
             # must be off it by then.
             self.collect(now)
         for worker in self.workers:
-            if worker.alive:
+            if worker.alive and self._placement_up(worker):
                 self.supervisor.heartbeat(worker.name, now)
         self.supervisor.check(now)
         # Elasticity: offered load drives the unit target — queued

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, List, Optional
 
+from repro.core.cluster import Cluster, StepCost
 from repro.core.dataflow import Stage, StageGraph, StageWorker, StageWorkerStats
 from repro.core.elastic import AutoscalerConfig
 from repro.core.messages import Message
@@ -67,6 +68,11 @@ class ReactiveJob:
         supervisor: Optional[Supervisor] = None,
         heartbeat_timeout: float = 10.0,
         elastic: bool = True,
+        cluster: Optional[Cluster] = None,
+        restart_cost: float = 0.0,
+        step_cost: Optional[StepCost] = None,
+        consume_cost: Optional[float] = None,
+        completion_window: Optional[int] = 65536,
     ) -> None:
         self.name = name
         self.log = log
@@ -90,6 +96,11 @@ class ReactiveJob:
             supervisor=supervisor,
             heartbeat_timeout=heartbeat_timeout,
             journal_factory=journal_factory,
+            cluster=cluster,
+            restart_cost=restart_cost,
+            step_cost=step_cost,
+            consume_cost=consume_cost,
+            completion_window=completion_window,
             metric_prefix="job",
             worker_noun="task",
         ))
@@ -110,10 +121,15 @@ class ReactiveJob:
         return self.pool.elastic
 
     # -- main loop ----------------------------------------------------------
-    def step(self, now: float = 0.0, task_budget: int = 8) -> int:
-        """One pipeline round: consume->forward, process, publish, scale."""
-        for task in self.pool.workers:
-            task.step_budget = task_budget
+    def step(self, now: float = 0.0, task_budget: "int | None" = None) -> int:
+        """One pipeline round: consume->forward, process, publish, scale.
+
+        ``task_budget`` overrides every task's per-round budget; ``None``
+        (the default) leaves each worker's own ``step_budget`` alone —
+        required when the pool's cost metering owns the budgets."""
+        if task_budget is not None:
+            for task in self.pool.workers:
+                task.step_budget = task_budget
         return self.stage.step(now)
 
     def run_to_completion(self, max_rounds: int = 1_000_000) -> int:

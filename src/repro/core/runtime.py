@@ -1,25 +1,58 @@
-"""Thread-backed live runtime for Reactive Liquid jobs.
+"""One actuator, two clocks: the runtimes that drive Reactive Liquid jobs.
 
-Drives any step-driven, ``ElasticPool``-backed job — ``ReactiveJob``,
-``ElasticServingPool``/``ServingJob``, or ``TrainingJob`` — on a real
-thread with wall-clock supervision.  The job contract is three methods:
+Both runtimes drive the *same* step-driven, ``ElasticPool``-backed job
+objects — ``ReactiveJob``/``StageGraph``, ``ElasticServingPool``/
+``ServingJob``, ``TrainingJob``.  The job contract is three methods:
 ``step(now) -> int``, ``backlog() -> int``, and (optionally)
 ``total_processed() -> int``; the chaos hooks resolve the job's
 underlying ``ElasticPool`` so a silenced worker is healed by the same
-supervisor regardless of which shim owns it.  The discrete-event
-simulator remains the source of the paper's figures (see DESIGN.md);
-this runtime exists to prove the components work under genuine
-concurrency.
+supervisor regardless of which shim owns it.
+
+  * ``ThreadedRuntime`` — wall clock: a coordinator thread calls
+    ``job.step(time.monotonic())``; proves the components under genuine
+    concurrency.
+  * ``VirtualRuntime`` — virtual clock: ``job.step(now)`` rides the
+    ``SimEngine`` event heap at a fixed tick, interleaved with failure
+    injection (``core.cluster.FailureInjector``), arrival schedules, and
+    samplers.  This is how the paper's §4 figures are produced from the
+    *live* actuator (``core.simulation`` is a thin harness over it):
+    results are exact, seedable, and independent of the host's core
+    count.  Equivalence with hand-stepping the same job tick-by-tick is
+    regression-tested (``tests/test_virtual_runtime.py``).
+
+Fixes must land in the shared job/pool/cluster objects so both clocks
+inherit them.
 """
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 from repro.core.pool import ElasticPool
+
+
+class SimEngine:
+    """Minimal event-heap engine (the virtual clock)."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (self.now + max(delay, 0.0), next(self._seq), fn))
+
+    def run_until(self, t_end: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        self.now = t_end
 
 
 def resolve_pool(job: Any) -> Optional[ElasticPool]:
@@ -143,3 +176,75 @@ class ThreadedRuntime:
             time.sleep(self.tick * 2)
         self.stop()
         return self._processed()
+
+
+class VirtualRuntime:
+    """Drives a pool-backed job on the virtual clock.
+
+    The job's ``step(now)`` is scheduled on the ``SimEngine`` heap every
+    ``dt`` of virtual time; failure injectors, arrival schedules, chaos
+    one-shots (:meth:`at`), and samplers (:meth:`every`) ride the same
+    heap, so their interleaving with the control loop is exact and
+    reproducible.  All control flow — dispatch, supervision, relocation,
+    autoscaling, dilation — stays inside the job's own pools; this class
+    owns nothing but the clock.
+
+    Driving ``job.step`` at a fixed tick is *identical* to hand-stepping
+    the job in a for-loop with the same timestamps — that equivalence is
+    what makes figures produced here statements about the shipped
+    system (regression-tested bitwise in ``tests/test_virtual_runtime.py``).
+    """
+
+    def __init__(self, job: Any, dt: float = 1.0,
+                 engine: Optional[SimEngine] = None) -> None:
+        self.job = job
+        self.dt = dt
+        self.engine = engine or SimEngine()
+        self.stats = RuntimeStats()
+        self._ticking = False
+
+    # -- scheduling -----------------------------------------------------------
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        """One-shot event at absolute virtual time ``t``."""
+        self.engine.schedule(max(t - self.engine.now, 0.0), fn)
+
+    def every(self, interval: float, fn: Callable[[], None],
+              start: Optional[float] = None) -> None:
+        """Recurring event each ``interval`` (first at ``start`` or now)."""
+        def fire() -> None:
+            fn()
+            self.engine.schedule(interval, fire)
+        self.at(start if start is not None else self.engine.now, fire)
+
+    # -- chaos hooks ----------------------------------------------------------
+    def _pool(self) -> ElasticPool:
+        pool = resolve_pool(self.job)
+        if pool is None:
+            raise TypeError(
+                f"{type(self.job).__name__} exposes no ElasticPool; "
+                "VirtualRuntime drives pool-backed jobs"
+            )
+        return pool
+
+    def kill_worker(self, index: int = 0) -> str:
+        return self._pool().kill_worker(index)
+
+    def kill_consumer(self, partition: int = 0) -> str:
+        vc = self.job.consumer_group.consumers[partition]
+        vc.alive = False
+        return vc.name
+
+    # -- loop -----------------------------------------------------------------
+    def _tick(self) -> None:
+        self.stats.processed += self.job.step(self.engine.now)
+        self.stats.rounds += 1
+        self.engine.schedule(self.dt, self._tick)
+
+    def run_until(self, t_end: float) -> RuntimeStats:
+        """Advance virtual time to ``t_end`` (resumable: successive calls
+        continue the same tick chain)."""
+        if not self._ticking:
+            self._ticking = True
+            self.engine.schedule(0.0, self._tick)
+        self.engine.run_until(t_end)
+        return self.stats

@@ -1,4 +1,4 @@
-"""Deterministic discrete-event simulation of the paper's §4 experiments.
+"""Deterministic virtual-time reproduction of the paper's §4 experiments.
 
 The paper evaluates Liquid vs. Reactive Liquid on 3 nodes (dual-core),
 3-partition topics, with node-failure injection: every 10 minutes each
@@ -6,152 +6,79 @@ node fails with probability p ∈ {0, 30, 60, 90}% and restarts 5 minutes
 later.  Metrics: total processed messages over time, throughput, and
 per-message completion time (Eq. 1 vs Eq. 2).
 
-We reproduce that grid on a deterministic discrete-event simulator rather
-than wall-clock threads: results are exact, seedable, and independent of
-this container's single CPU core (see DESIGN.md assumption notes).  The
-simulator reuses the *real* policy objects — ``Mailbox`` semantics,
-``VirtualConsumer`` offsets, ``Scheduler``, ``Supervisor`` timing model,
-``QueueDepthAutoscaler`` — only time is virtual.  It deliberately does
-NOT reuse the live ``core.pool.ElasticPool`` actuator (see DESIGN.md §3):
-its spawn/retire/relocate events ride the event heap, so the loop here is
-a virtual-time re-statement of that contract, not a third copy to evolve
-independently — behavioral fixes belong in the shared policy objects.
+We reproduce that grid on virtual time rather than wall-clock threads:
+results are exact, seedable, and independent of this container's single
+CPU core (see DESIGN.md assumption notes).  ``simulate_reactive`` and
+``simulate_dataflow`` are **thin harnesses over the live stack**: they
+build the *real* job objects — ``ReactiveJob`` / ``StageGraph`` — on a
+``core.cluster.Cluster`` and drive their ``step(now)`` on the
+``SimEngine`` event heap via ``core.runtime.VirtualRuntime``.  All
+control flow (spawn, retire, heartbeat supervision, relocation,
+autoscaling, dilation, backpressure) lives in ``core.pool`` /
+``core.cluster`` / ``core.dataflow``; the harnesses own only workload
+construction, failure schedules, and sampling.  One actuator, two clocks:
+a behavioral fix lands once and the figures prove the shipped system.
+
+``simulate_liquid`` stays a self-contained event-heap model: Liquid *is*
+the pinned-task baseline the paper argues against — there is no live
+actuator for it to reuse, only the Kafka consumer-group semantics it is
+condemned to (stop-the-world rebalances, tasks idle beyond the partition
+count).  It shares ``Cluster``/``FailureInjector``/``SimResult`` with the
+reactive harnesses so the comparison runs on the same ground.
 
 Timing model
 ------------
-* consuming a batch of ``n`` messages from the log costs ``n * t_c``;
+* consuming a batch of ``n`` messages from the log costs ``n * t_c``
+  (metered per virtual consumer by ``Stage.consume_cost``);
 * processing one message costs ``t_p(k)`` where ``k`` is the number of
   messages processed so far — TCMM's nearest-micro-cluster search slows
   down as micro-clusters accumulate (paper Fig. 8's decelerating slope):
-  ``t_p(k) = t_p0 * (1 + alpha * sqrt(k))``;
-* a node has ``cores`` cores; when more runnable tasks than cores share a
-  node, per-message processing dilates by ``tasks_on_node / cores``;
+  ``t_p(k) = t_p0 * (1 + alpha * sqrt(k))`` (``core.cluster.StepCost``,
+  metered per worker by the pool);
+* a node has ``cores`` cores; when more resident components than cores
+  share a node, per-message processing dilates by ``resident/cores``,
+  and a straggler node by ``1/speed`` (``Node.dilation``);
 * Liquid tasks are pinned to their node: a node failure stalls its
   partitions until the node restarts (no supervision relocation);
-* Reactive components heartbeat every ``hb_interval``; the supervisor
-  checks every ``check_interval`` and relocates failed components to the
-  healthiest live node after ``restart_cost`` (Let-It-Crash + delegation),
-  with virtual consumers resuming from their committed offsets.
+* Reactive components are supervised: a silenced component (chaos kill
+  or node down) misses heartbeats for ``detect_timeout`` and is then
+  relocated to the healthiest live node, paying ``restart_cost`` before
+  it steps again; virtual consumers resume from committed offsets.
 """
 
 from __future__ import annotations
 
-import heapq
-import itertools
 import math
-import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.elastic import AutoscalerConfig, QueueDepthAutoscaler
-from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.cluster import (  # re-exported for back-compat
+    Cluster,
+    FailureConfig,
+    FailureInjector,
+    Node,
+    StepCost,
+)
+from repro.core.dataflow import Stage, StageGraph
+from repro.core.elastic import AutoscalerConfig
+from repro.core.reactive import ReactiveJob
+from repro.core.runtime import SimEngine, VirtualRuntime
+from repro.data.topics import MessageLog
 
-# ---------------------------------------------------------------------------
-# Engine
-# ---------------------------------------------------------------------------
+# The old cluster-model names, now first-class in core.cluster.
+SimNode = Node
 
-
-class SimEngine:
-    """Minimal event-heap engine."""
-
-    def __init__(self) -> None:
-        self.now = 0.0
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
-
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (self.now + max(delay, 0.0), next(self._seq), fn))
-
-    def run_until(self, t_end: float) -> None:
-        while self._heap and self._heap[0][0] <= t_end:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = t
-            fn()
-        self.now = t_end
+__all__ = [
+    "Cluster", "FailureConfig", "FailureInjector", "Node", "SimNode",
+    "SimEngine", "StepCost", "WorkloadConfig", "SimResult",
+    "ReactiveSimConfig", "SimStageConfig", "DataflowSimResult",
+    "simulate_liquid", "simulate_reactive", "simulate_dataflow",
+    "paper_experiment_grid",
+]
 
 
 # ---------------------------------------------------------------------------
-# Cluster model
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class SimNode:
-    node_id: int
-    cores: int = 2
-    up: bool = True
-    epoch: int = 0  # bumps on every failure; stale events check it
-    resident: int = 0  # runnable components placed here
-    speed: float = 1.0  # heterogeneity: <1 = straggler node
-
-
-class Cluster:
-    def __init__(self, num_nodes: int, cores: int,
-                 speeds: Optional[List[float]] = None) -> None:
-        self.nodes = [
-            SimNode(i, cores=cores,
-                    speed=(speeds[i] if speeds else 1.0))
-            for i in range(num_nodes)
-        ]
-
-    def healthy(self) -> List[SimNode]:
-        return [n for n in self.nodes if n.up]
-
-    def least_loaded(self) -> Optional[SimNode]:
-        live = self.healthy()
-        if not live:
-            return None
-        return min(live, key=lambda n: (n.resident, n.node_id))
-
-
-@dataclass
-class FailureConfig:
-    probability: float = 0.0       # per node, per interval
-    interval: float = 600.0        # every 10 simulated minutes
-    restart_delay: float = 300.0   # node back after 5 minutes
-    seed: int = 0
-
-
-class FailureInjector:
-    """Paper §4.3: every `interval`, each node fails w.p. `probability`."""
-
-    def __init__(
-        self,
-        engine: SimEngine,
-        cluster: Cluster,
-        config: FailureConfig,
-        on_down: Callable[[SimNode], None],
-        on_up: Callable[[SimNode], None],
-    ) -> None:
-        self.engine = engine
-        self.cluster = cluster
-        self.config = config
-        self.on_down = on_down
-        self.on_up = on_up
-        self.rng = random.Random(config.seed)
-        self.failures = 0
-        if config.probability > 0:
-            engine.schedule(config.interval, self._tick)
-
-    def _tick(self) -> None:
-        for node in self.cluster.nodes:
-            if node.up and self.rng.random() < self.config.probability:
-                node.up = False
-                node.epoch += 1
-                self.failures += 1
-                self.on_down(node)
-                self.engine.schedule(
-                    self.config.restart_delay, lambda n=node: self._restart(n)
-                )
-        self.engine.schedule(self.config.interval, self._tick)
-
-    def _restart(self, node: SimNode) -> None:
-        node.up = True
-        self.on_up(node)
-
-
-# ---------------------------------------------------------------------------
-# Workload model
+# Workload + result types
 # ---------------------------------------------------------------------------
 
 
@@ -177,6 +104,9 @@ class WorkloadConfig:
     def t_process(self, processed_so_far: int) -> float:
         return self.t_process0 * (1.0 + self.growth_alpha * math.sqrt(processed_so_far))
 
+    def step_cost(self) -> StepCost:
+        return StepCost(self.t_process0, self.growth_alpha)
+
     def available(self, partition_total: int, now: float) -> int:
         """Messages visible in one partition at simulated time `now`."""
         if self.arrival_rate <= 0:
@@ -192,7 +122,7 @@ class SimResult:
     processed: int
     # (time, cumulative processed) — paper Fig. 8/10.
     timeline: List[Tuple[float, int]]
-    # per-message completion times (consume start -> processing end) — Fig. 11.
+    # per-message completion times (forward -> durably done) — Fig. 11.
     completion_times: List[float]
     failures: int = 0
     restarts: int = 0          # supervisor-driven component relocations
@@ -222,6 +152,15 @@ class SimResult:
         if not self.completion_times:
             return float("nan")
         return sum(self.completion_times) / len(self.completion_times)
+
+
+def _restart_count(pool) -> int:
+    """Supervisor-driven restarts (tasks *and* virtual consumers)."""
+    return sum(1 for e in pool.supervisor.events if e[1] == "restarted")
+
+
+def _clip_tick(dt: float) -> float:
+    return min(max(dt, 0.01), 0.25)
 
 
 # ---------------------------------------------------------------------------
@@ -278,7 +217,7 @@ def simulate_liquid(
     task_node = {m: cluster.nodes[m % num_nodes] for m in range(num_tasks)}
     active_members = sorted(set(owner.values()))
     for m in active_members:
-        task_node[m].resident += 1
+        cluster.assign(task_node[m], f"liquid-task{m}")
 
     def task_loop(member: int, epoch: int) -> None:
         nonlocal processed
@@ -307,8 +246,7 @@ def simulate_liquid(
         if not batch:
             engine.schedule(1.0, lambda: task_loop(member, epoch))  # poll idle
             return
-        consume_start = engine.now
-        dilate = max(1.0, node.resident / node.cores)
+        dilate = node.dilation()
         t_total = len(batch) * workload.t_consume * dilate
         proc_t: List[float] = []
         for i in range(len(batch)):
@@ -329,16 +267,31 @@ def simulate_liquid(
 
         engine.schedule(t_total, finish)
 
-    def on_down(node: SimNode) -> None:
+    def on_down(node: Node) -> None:
         # Member leave triggers a stop-the-world group rebalance.
         pause_until[0] = max(pause_until[0], engine.now + rebalance_pause)
 
-    def on_up(node: SimNode) -> None:
+    def on_up(node: Node) -> None:
         # Member rejoin triggers another rebalance; then its tasks resume.
         pause_until[0] = max(pause_until[0], engine.now + rebalance_pause)
         for m in active_members:
             if task_node[m] is node:
-                task_loop(m, node.epoch)
+                # No state-management service in Liquid (paper §2.2): the
+                # restarted member re-derives its in-memory TCMM state by
+                # re-reading its partitions' committed history before it
+                # can make progress, and a node failure mid-rebuild kills
+                # the rebuild.  At high p this is the Fig. 10 cliff —
+                # rebuilds grow with progress and stop fitting in the
+                # shrinking gaps between failures, so degradation is
+                # super-linear in p.  (Reactive restarts skip this: the
+                # event-sourced offsets/state services make recovery a
+                # fixed restart_cost.)
+                rebuild = workload.t_consume * sum(
+                    parts[p].committed for p, mm in owner.items() if mm == m
+                )
+                engine.schedule(
+                    rebuild, lambda mm=m, e=node.epoch: task_loop(mm, e)
+                )
 
     injector = FailureInjector(
         engine, cluster, failures or FailureConfig(), on_down, on_up
@@ -359,7 +312,7 @@ def simulate_liquid(
 
 
 # ---------------------------------------------------------------------------
-# Reactive Liquid simulation
+# Reactive Liquid: the real ReactiveJob on a Cluster, virtual clock
 # ---------------------------------------------------------------------------
 
 
@@ -374,27 +327,24 @@ class ReactiveSimConfig:
             max_workers=12, cooldown=30.0, step_fraction=0.5,
         )
     )
-    hb_interval: float = 2.0
-    check_interval: float = 5.0
     detect_timeout: float = 10.0     # heartbeat timeout for detection
     restart_cost: float = 5.0        # component re-spawn cost on a new node
     forward_cost: float = 0.0001     # virtual consumer hand-off per message
-    autoscale_interval: float = 10.0
     # 0 = unbounded (paper-faithful; reproduces the Fig. 11 completion-time
     # regression). >0 = bounded mailboxes: the virtual consumer backpressures
     # when the scheduler's pick is full — combined with JSQ/P2C this is our
     # beyond-paper fix for the paper's §5 open problem.
     mailbox_capacity: int = 0
+    # Virtual-clock tick; None = auto (fine enough that per-tick budgets
+    # fit the mailbox bound, coarse enough to keep runs cheap).
+    tick: Optional[float] = None
 
-
-class _SimMailbox:
-    """Depth-tracked queue holding (consume_start_time, work_index)."""
-
-    def __init__(self) -> None:
-        self.q: List[Tuple[float, int]] = []
-
-    def depth(self) -> int:
-        return len(self.q)
+    def auto_tick(self, t_process0: float) -> float:
+        if self.tick is not None:
+            return self.tick
+        if self.mailbox_capacity > 0:
+            return _clip_tick(t_process0 * max(self.mailbox_capacity, 2) / 2.0)
+        return _clip_tick(t_process0 * 2.0)
 
 
 def simulate_reactive(
@@ -407,298 +357,89 @@ def simulate_reactive(
     name: Optional[str] = None,
     node_speeds: Optional[List[float]] = None,
 ) -> SimResult:
-    """Reactive Liquid: virtual consumers decouple tasks from partitions.
-
-    Virtual consumers (one per partition) consume batches of n and forward
-    message-by-message to task mailboxes via the configured scheduler
-    (Eq. 2: completion = n*t_c + t_wi + t_p).  Tasks are an elastic pool,
-    relocatable by the supervisor; virtual consumers resume from committed
-    offsets after Let-It-Crash restarts.
-    """
+    """Reactive Liquid on the live actuator: a real ``ReactiveJob``
+    (virtual consumers → scheduler-routed mailboxes → supervised elastic
+    ``StageWorker`` pool) built on a ``Cluster`` and stepped on the event
+    heap.  Virtual consumers decouple tasks from partitions (Eq. 2:
+    completion = n*t_c + t_wi + t_p); the pool's placement layer supplies
+    node failure, relocation-after-``restart_cost``, and co-residency
+    dilation; the ``FailureInjector`` rides the same heap."""
     cfg = config or ReactiveSimConfig()
-    engine = SimEngine()
     cluster = Cluster(num_nodes, cores, speeds=node_speeds)
-    per_part = workload.total_messages // workload.partitions
-    parts = [_SimPartition(per_part) for _ in range(workload.partitions)]
-
-    processed = 0
-    timeline: List[Tuple[float, int]] = [(0.0, 0)]
-    completions: List[float] = []
-    restarts = 0
-
-    # --- task pool -----------------------------------------------------
-    class SimTask:
-        _ids = itertools.count()
-
-        def __init__(self) -> None:
-            self.task_id = next(SimTask._ids)
-            self.mailbox = _SimMailbox()
-            self.node: Optional[SimNode] = None
-            self.busy = False
-            self.last_beat = 0.0
-            self.alive = True
-
-    tasks: List[SimTask] = []
-    scheduler: Scheduler = make_scheduler(cfg.scheduler)
-
-    # Node load is computed from ground truth (task placements), never
-    # tracked with counters — counter drift across failure/recovery cycles
-    # is exactly the kind of bug that made an earlier version of this sim
-    # exceed physical capacity after heals.
-    def node_load(node: SimNode) -> int:
-        return sum(1 for t in tasks if t.node is node)
-
-    def place() -> Optional[SimNode]:
-        live = cluster.healthy()
-        if not live:
-            return None
-        return min(live, key=lambda n: (node_load(n), n.node_id))
-
-    def dilation(node: SimNode) -> float:
-        return max(1.0, node_load(node) / node.cores) / node.speed
-
-    def spawn_task() -> SimTask:
-        t = SimTask()
-        tasks.append(t)
-        t.node = place()
-        t.last_beat = engine.now
-        return t
-
-    def retire_task() -> None:
-        """Graceful scale-in: drain the victim's mailbox to survivors."""
-        if len(tasks) <= 1:
-            return
-        victim = min(tasks, key=lambda t: t.mailbox.depth())
-        tasks.remove(victim)
-        live = list(tasks)
-        live_boxes = [t.mailbox for t in live]
-        for item in victim.mailbox.q:
-            idx = scheduler.pick(live_boxes)
-            live_boxes[idx].q.append(item)
-            pump_task(live[idx])
-        victim.mailbox.q.clear()
-
-    def pump_task(task: SimTask) -> None:
-        """Start processing the head-of-queue message if idle and healthy."""
-        nonlocal processed
-        if task.busy or not task.alive or task not in tasks:
-            return
-        if task.node is None or not task.node.up:
-            return
-        if not task.mailbox.q:
-            return
-        consume_start, _idx = task.mailbox.q.pop(0)
-        task.busy = True
-        t_p = workload.t_process(processed) * dilation(task.node)
-        node, epoch = task.node, task.node.epoch
-
-        def finish() -> None:
-            nonlocal processed
-            task.busy = False
-            if not node.up or node.epoch != epoch or task not in tasks:
-                return  # message lost with node (commit-on-forward semantics)
-            processed += 1
-            timeline.append((engine.now, processed))
-            completions.append(engine.now + 0.0 - consume_start)
-            pump_task(task)
-
-        engine.schedule(t_p, finish)
-
-    # --- virtual consumers ----------------------------------------------
-    # VCs do not count toward node load: consume-and-forward is "usually
-    # much simpler than processing a message" (paper §3.1); its cost is
-    # modeled in time (t_consume + forward_cost), not in core occupancy.
-    class SimVC:
-        def __init__(self, partition: int) -> None:
-            self.partition = partition
-            self.node: Optional[SimNode] = place()
-            self.alive = True
-            self.last_beat = engine.now
-            self.epoch = 0  # bump on restart to cancel stale loops
-
-        def loop(self, epoch: int) -> None:
-            if not self.alive or epoch != self.epoch:
-                return
-            if self.node is None or not self.node.up:
-                return
-            part = parts[self.partition]
-            n = min(
-                workload.batch_n,
-                workload.available(part.total, engine.now) - part.committed,
-            )
-            if n <= 0:
-                if part.committed >= part.total:
-                    engine.schedule(1.0, lambda: self.loop(epoch))
-                else:  # waiting for arrivals: poll at sub-batch cadence
-                    engine.schedule(0.05, lambda: self.loop(epoch))
-                return
-            consume_start = engine.now
-            t_batch = n * workload.t_consume + n * cfg.forward_cost
-            node, node_epoch = self.node, self.node.epoch
-
-            def deliver() -> None:
-                if not self.alive or epoch != self.epoch:
-                    return
-                if not node.up or node.epoch != node_epoch:
-                    return  # batch lost; offset uncommitted -> re-read
-                base = part.committed
-                live = [t for t in tasks if t.alive]
-                if not live:
-                    engine.schedule(1.0, lambda: self.loop(epoch))
-                    return
-                boxes = [t.mailbox for t in live]
-                delivered = 0
-                cap = cfg.mailbox_capacity
-                for i in range(n):
-                    idx = scheduler.pick(boxes)
-                    if cap > 0 and boxes[idx].depth() >= cap:
-                        # Backpressure: the scheduler's pick is full. Stop,
-                        # commit the delivered prefix, retry shortly. Under
-                        # RR this head-of-line-blocks on one hot mailbox;
-                        # JSQ/P2C only stall when *every* mailbox is full.
-                        break
-                    live[idx].mailbox.q.append((consume_start, base + i))
-                    pump_task(live[idx])
-                    delivered += 1
-                part.committed = base + delivered  # commit-on-forward
-                if delivered < n:
-                    engine.schedule(
-                        workload.t_process0, lambda: self.loop(epoch)
-                    )
-                else:
-                    self.loop(epoch)
-
-            engine.schedule(t_batch, deliver)
-
-    vcs = [SimVC(p) for p in range(workload.partitions)]
-
-    # --- supervision ------------------------------------------------------
-    def beats() -> None:
-        for t in tasks:
-            if t.node is not None and t.node.up:
-                t.last_beat = engine.now
-        for vc in vcs:
-            if vc.node is not None and vc.node.up:
-                vc.last_beat = engine.now
-        engine.schedule(cfg.hb_interval, beats)
-
-    def supervisor_check() -> None:
-        nonlocal restarts
-        now = engine.now
-        for vc in vcs:
-            if now - vc.last_beat > cfg.detect_timeout:
-                # Let-It-Crash: relocate to healthiest node, resume from
-                # committed offset (the event-sourced state).
-                new_node = place()
-                if new_node is not None:
-                    vc.node = new_node
-                    vc.last_beat = now
-                    vc.epoch += 1
-                    restarts += 1
-                    engine.schedule(
-                        cfg.restart_cost, lambda v=vc, e=vc.epoch: v.loop(e)
-                    )
-        for t in list(tasks):
-            if now - t.last_beat > cfg.detect_timeout:
-                # Restart task on a healthy node; its queued messages move
-                # with the restart (state mgmt); in-flight one is lost.
-                new_node = place()
-                if new_node is not None:
-                    t.node = new_node
-                    t.last_beat = now
-                    t.busy = False
-                    restarts += 1
-                    engine.schedule(cfg.restart_cost, lambda tt=t: pump_task(tt))
-        engine.schedule(cfg.check_interval, supervisor_check)
-
-    # --- elasticity -------------------------------------------------------
-    autoscaler = QueueDepthAutoscaler(cfg.autoscaler)
-    scale_events = 0
-
-    def autoscale() -> None:
-        nonlocal scale_events
-        if cfg.elastic:
-            depths = [t.mailbox.depth() for t in tasks] or [0]
-            decision = autoscaler.decide(depths, engine.now)
-            if decision.delta > 0:
-                for _ in range(decision.delta):
-                    t = spawn_task()
-                    pump_task(t)
-                scale_events += 1
-            elif decision.delta < 0:
-                for _ in range(-decision.delta):
-                    retire_task()
-                scale_events += 1
-        engine.schedule(cfg.autoscale_interval, autoscale)
-
-    # --- node failure wiring ------------------------------------------------
-    def on_down(node: SimNode) -> None:
-        pass  # detection happens via missed heartbeats
-
-    def rebalance_onto(node: SimNode) -> None:
-        """Elastic service placement rebalancing: when a node recovers,
-        move tasks off the most-loaded nodes onto it (relocation costs
-        restart_cost each; mailboxes move with the task). Without this,
-        recovered capacity would sit idle forever."""
-        while True:
-            donors = [n for n in cluster.healthy() if n is not node]
-            if not donors:
-                break
-            donor = max(donors, key=node_load)
-            if node_load(donor) <= node_load(node) + 1:
-                break
-            candidates = [t for t in tasks if t.node is donor]
-            if not candidates:
-                break
-            t = max(candidates, key=lambda t: t.mailbox.depth())
-            t.node = node
-            engine.schedule(cfg.restart_cost, lambda tt=t: pump_task(tt))
-
-    def on_up(node: SimNode) -> None:
-        # Tasks stranded on this node while it was down have stale
-        # heartbeats; the supervisor relocate-and-pump path recovers them
-        # (forcing a pump here would double-start tasks that were *moved*
-        # onto this node mid-message and inflate capacity unphysically).
-        rebalance_onto(node)
-
-    injector = FailureInjector(
-        engine, cluster, failures or FailureConfig(), on_down, on_up
+    log = MessageLog()
+    log.create_topic("stream", workload.partitions)
+    job = ReactiveJob(
+        "sim",
+        log,
+        "stream",
+        process=lambda msg: [],
+        initial_tasks=cfg.initial_tasks,
+        scheduler=cfg.scheduler,
+        batch_n=workload.batch_n,
+        mailbox_capacity=cfg.mailbox_capacity,
+        autoscaler=cfg.autoscaler,
+        heartbeat_timeout=cfg.detect_timeout,
+        elastic=cfg.elastic,
+        cluster=cluster,
+        restart_cost=cfg.restart_cost,
+        step_cost=workload.step_cost(),
+        consume_cost=workload.t_consume + cfg.forward_cost,
+        completion_window=None,  # the figures want the full distribution
     )
 
-    # --- go --------------------------------------------------------------
-    for _ in range(cfg.initial_tasks):
-        spawn_task()
-    for vc in vcs:
-        vc.loop(vc.epoch)
-    beats()
-    engine.schedule(cfg.check_interval, supervisor_check)
-    engine.schedule(cfg.autoscale_interval, autoscale)
-    engine.run_until(duration)
+    rt = VirtualRuntime(job, dt=cfg.auto_tick(workload.t_process0))
+    injector = FailureInjector(
+        rt.engine, cluster, failures or FailureConfig()
+    )
+
+    if workload.arrival_rate > 0:
+        published = [0]
+
+        def pump() -> None:
+            target = min(
+                workload.total_messages,
+                int(workload.arrival_rate * rt.engine.now),
+            )
+            for i in range(published[0], target):
+                log.publish("stream", payload=i, created_at=rt.engine.now)
+            published[0] = target
+
+        rt.every(0.1, pump)
+    else:
+        for i in range(workload.total_messages):
+            log.publish("stream", payload=i)
+
+    timeline: List[Tuple[float, int]] = [(0.0, 0)]
+    rt.every(
+        1.0, lambda: timeline.append((rt.engine.now, job.pool.work_done)),
+        start=1.0,
+    )
+    rt.run_until(duration)
 
     return SimResult(
         name=name or f"reactive_{cfg.scheduler}",
         duration=duration,
-        processed=processed,
+        processed=job.pool.work_done,
         timeline=timeline,
-        completion_times=completions,
+        completion_times=list(job.stage.completions),
         failures=injector.failures,
-        restarts=restarts,
-        scale_events=scale_events,
-        final_tasks=len(tasks),
+        restarts=_restart_count(job.pool),
+        scale_events=len(job.pool.controller.scale_events),
+        final_tasks=len(job.pool.active_workers()),
     )
 
 
 # ---------------------------------------------------------------------------
-# Multi-stage dataflow simulation (chained stages over virtual time)
+# Multi-stage dataflow: the real StageGraph on the virtual clock
 # ---------------------------------------------------------------------------
 
 
 @dataclass
 class SimStageConfig:
-    """One stage of a simulated chain — the same per-stage policy
-    objects the live ``core.dataflow.Stage`` uses (queue-depth
-    autoscaler, message-distribution scheduler), with the workload's
-    timing model for processing cost."""
+    """One stage of a simulated chain — exactly the per-stage knobs the
+    live ``core.dataflow.Stage`` takes (queue-depth autoscaler,
+    message-distribution scheduler), plus the stage's base processing
+    cost for the timing model."""
 
     name: str
     t_process0: float = 0.010
@@ -740,215 +481,126 @@ def simulate_dataflow(
     backpressure: bool = True,
     throttle_low: int = 16,
     throttle_high: int = 64,
-    autoscale_interval: float = 5.0,
     kill_stage_at: Optional[Tuple[float, int]] = None,
     restart_cost: float = 5.0,
     name: Optional[str] = None,
+    num_nodes: int = 0,
+    cores: int = 2,
+    tick: Optional[float] = None,
 ) -> DataflowSimResult:
-    """A chain of elastic stages over durable topics, on virtual time.
+    """A chain of real ``Stage``s over durable topics, on virtual time.
 
-    Stage ``i`` consumes topic ``i`` (virtual consumers: ``batch_n``
-    messages cost ``batch_n * t_consume``, forwarded to task mailboxes
-    via the stage's scheduler) and each processed message appends
-    ``outputs_per_msg`` messages to topic ``i+1``.  With ``backpressure``
-    on, a stage's unit target is capped by downstream pressure (topic
-    lag + downstream mailbox depth): freeze above ``throttle_low``,
-    clamp to one task above ``throttle_high`` — the live
-    ``StageGraph`` policy, restated on the event heap.  A mid-chain kill
-    (``kill_stage_at=(t, stage_index)``) stalls every task of that stage
-    for ``restart_cost`` (supervised Let-It-Crash relocation); its
-    mailboxes survive, offsets uncommitted work is re-read — so the
-    chain loses time, never messages."""
-    engine = SimEngine()
-    n_stages = len(stages)
-    # topic[i]: messages available to stage i; topic[n] is terminal output.
-    produced = [0] * (n_stages + 1)
-    consumed = [0] * (n_stages + 1)
-    produced[0] = workload.total_messages
-    lag_timelines: List[List[Tuple[float, int]]] = [[] for _ in range(n_stages + 1)]
+    Stage ``i`` consumes topic ``t{i}`` and publishes ``t{i+1}``; the
+    graph's backpressure wiring (downstream pending caps upstream unit
+    targets through the pool ``throttle`` hook) and the pools' cost
+    metering are the *live* mechanisms, not restatements.  A mid-chain
+    kill (``kill_stage_at=(t, stage_index)``) silences every worker of
+    that stage; the supervisor detects the missed heartbeats and
+    relocates fresh instances after ``restart_cost`` with their mailboxes
+    re-admitted — the chain loses time, never messages.  ``num_nodes > 0``
+    additionally places the stages on a shared ``Cluster`` (co-residency
+    dilation across stages)."""
+    engine_tick = tick if tick is not None else _clip_tick(
+        2.0 * min(c.t_process0 for c in stages)
+    )
+    cluster = Cluster(num_nodes, cores) if num_nodes > 0 else None
+    log = MessageLog()
+    for i in range(len(stages) + 1):
+        log.create_topic(f"t{i}", workload.partitions)
 
-    class _Task:
-        def __init__(self, stage: int) -> None:
-            self.stage = stage
-            self.mailbox: List[float] = []  # consume-start times
-            self.busy = False
-            self.down_until = 0.0
+    graph = StageGraph(
+        log,
+        backpressure=backpressure,
+        throttle_low=throttle_low,
+        throttle_high=throttle_high,
+    )
+    for i, c in enumerate(stages):
+        graph.add(Stage(
+            c.name,
+            log,
+            f"t{i}",
+            f"t{i + 1}",
+            process=(lambda m, k=c.outputs_per_msg: [m.payload] * k),
+            initial_tasks=c.initial_tasks,
+            scheduler=c.scheduler,
+            batch_n=workload.batch_n,
+            autoscaler=c.autoscaler,
+            heartbeat_timeout=restart_cost,  # detection window ~ restart
+            cluster=cluster,
+            restart_cost=restart_cost,
+            step_cost=StepCost(c.t_process0, workload.growth_alpha),
+            consume_cost=workload.t_consume,
+            completion_window=None,  # full distribution for the figures
+        ))
 
-    class _StageState:
-        def __init__(self, idx: int, cfg: SimStageConfig) -> None:
-            self.idx = idx
-            self.cfg = cfg
-            self.tasks = [_Task(idx) for _ in range(cfg.initial_tasks)]
-            self.sched: Scheduler = make_scheduler(cfg.scheduler)
-            self.autoscaler = QueueDepthAutoscaler(cfg.autoscaler)
-            self.processed = 0
-            self.timeline: List[Tuple[float, int]] = [(0.0, 0)]
-            self.completions: List[float] = []
-            self.scale_events = 0
-            self.restarts = 0
+    if workload.arrival_rate > 0:
+        published = [0]
+    else:
+        for i in range(workload.total_messages):
+            log.publish("t0", payload=i)
 
-        def depth(self) -> int:
-            return sum(len(t.mailbox) for t in self.tasks)
+    rt = VirtualRuntime(graph, dt=engine_tick)
 
-    sim_stages = [_StageState(i, c) for i, c in enumerate(stages)]
-    throttles = [0]
-
-    def pressure_on(idx: int) -> int:
-        """Downstream pending work (the live ``Stage.pending`` signal):
-        everything in the next topic the next stage has not processed."""
-        if idx + 1 >= n_stages:
-            return 0
-        return produced[idx + 1] - sim_stages[idx + 1].processed
-
-    def pump(st: _StageState, task: _Task) -> None:
-        if task.busy or not task.mailbox or engine.now < task.down_until:
-            return
-        if task not in st.tasks:
-            return
-        consume_start = task.mailbox.pop(0)
-        task.busy = True
-        t_p = st.cfg.t_process0 * (
-            1.0 + workload.growth_alpha * math.sqrt(st.processed)
-        )
-
-        def finish() -> None:
-            task.busy = False
-            if engine.now < task.down_until:
-                # killed mid-message: uncommitted, re-processed on heal
-                task.mailbox.insert(0, consume_start)
-                engine.schedule(
-                    task.down_until - engine.now, lambda: pump(st, task)
-                )
-                return
-            st.processed += 1
-            st.timeline.append((engine.now, st.processed))
-            st.completions.append(engine.now - consume_start)
-            produced[st.idx + 1] += st.cfg.outputs_per_msg
-            pump(st, task)
-
-        engine.schedule(t_p, finish)
-
-    def available_in(idx: int) -> int:
-        """Messages visible in topic ``idx``: the source topic follows
-        the workload's arrival curve (aggregate, not per-partition — the
-        chain model runs one aggregate vc per stage); intermediate
-        topics expose everything upstream has durably produced."""
-        if idx == 0 and workload.arrival_rate > 0:
-            return min(produced[0], int(workload.arrival_rate * engine.now))
-        return produced[idx]
-
-    def vc_loop(st: _StageState) -> None:
-        """The stage's consume-and-forward loop (one aggregate vc)."""
-        avail = min(
-            available_in(st.idx) - consumed[st.idx],
-            workload.batch_n,
-        )
-        live = [t for t in st.tasks if engine.now >= t.down_until]
-        if avail <= 0 or not live:
-            engine.schedule(0.25, lambda: vc_loop(st))
-            return
-        consume_start = engine.now
-        t_batch = avail * workload.t_consume
-
-        def deliver() -> None:
-            live2 = [t for t in st.tasks if engine.now >= t.down_until] or st.tasks
-            boxes = [t.mailbox for t in live2]
-
-            class _View:
-                def __init__(self, q): self.q = q
-                def depth(self): return len(self.q)
-
-            views = [_View(b) for b in boxes]
-            for _ in range(avail):
-                i = st.sched.pick(views)
-                boxes[i].append(consume_start)
-                consumed[st.idx] += 1
-                pump(st, live2[i])
-            vc_loop(st)
-
-        engine.schedule(t_batch, deliver)
-
-    def autoscale() -> None:
-        for st in sim_stages:
-            lag = produced[st.idx] - consumed[st.idx]
-            depths = [len(t.mailbox) + lag / max(len(st.tasks), 1)
-                      for t in st.tasks] or [lag]
-            decision = st.autoscaler.decide(depths, engine.now)
-            target = len(st.tasks) + decision.delta
-            if backpressure:
-                p = pressure_on(st.idx)
-                if p >= throttle_high:
-                    target = min(target, 1)
-                    throttles[0] += 1
-                elif p >= throttle_low:
-                    target = min(target, len(st.tasks))
-                    throttles[0] += 1
-            cfg = st.cfg.autoscaler
-            target = min(max(target, cfg.min_workers), cfg.max_workers)
-            while len(st.tasks) < target:
-                st.tasks.append(_Task(st.idx))
-                st.scale_events += 1
-            while len(st.tasks) > target:
-                victim = min(st.tasks, key=lambda t: len(t.mailbox))
-                st.tasks.remove(victim)
-                st.scale_events += 1
-                for item in victim.mailbox:  # drain to survivors
-                    views = [t.mailbox for t in st.tasks]
-                    j = min(range(len(views)), key=lambda i: len(views[i]))
-                    st.tasks[j].mailbox.append(item)
-                    pump(st, st.tasks[j])
-        engine.schedule(autoscale_interval, autoscale)
-
-    def sample_lags() -> None:
-        # Topic i's lag = everything produced into it that stage i has
-        # not yet *processed* (parked suffix + forwarded-but-queued) —
-        # the quantity backpressure is supposed to bound.  The terminal
-        # topic reports its cumulative size.
-        for i in range(n_stages):
-            lag_timelines[i].append(
-                (engine.now, produced[i] - sim_stages[i].processed)
+    if workload.arrival_rate > 0:
+        def pump() -> None:
+            target = min(
+                workload.total_messages,
+                int(workload.arrival_rate * rt.engine.now),
             )
-        lag_timelines[n_stages].append((engine.now, produced[n_stages]))
-        engine.schedule(1.0, sample_lags)
+            for i in range(published[0], target):
+                log.publish("t0", payload=i, created_at=rt.engine.now)
+            published[0] = target
+
+        rt.every(0.1, pump)
 
     if kill_stage_at is not None:
         t_kill, idx = kill_stage_at
+        rt.at(t_kill, lambda: graph.kill_stage(stages[idx].name))
 
-        def kill() -> None:
-            st = sim_stages[idx]
-            for task in st.tasks:
-                task.down_until = engine.now + restart_cost
-                st.restarts += 1
-            for task in st.tasks:
-                engine.schedule(restart_cost, lambda t=task: pump(st, t))
-
-        engine.schedule(t_kill, kill)
-
-    for st in sim_stages:
-        vc_loop(st)
-    engine.schedule(autoscale_interval, autoscale)
-    sample_lags()
-    engine.run_until(duration)
-
-    results = [
-        SimResult(
-            name=f"{st.cfg.name}",
-            duration=duration,
-            processed=st.processed,
-            timeline=st.timeline,
-            completion_times=st.completions,
-            restarts=st.restarts,
-            scale_events=st.scale_events,
-            final_tasks=len(st.tasks),
-        )
-        for st in sim_stages
+    n_stages = len(stages)
+    lag_timelines: List[List[Tuple[float, int]]] = [
+        [] for _ in range(n_stages + 1)
     ]
+    stage_timelines: List[List[Tuple[float, int]]] = [
+        [(0.0, 0)] for _ in range(n_stages)
+    ]
+
+    def sample() -> None:
+        now = rt.engine.now
+        for i, c in enumerate(stages):
+            st = graph.stage(c.name)
+            produced = log.get(f"t{i}").total_messages()
+            lag_timelines[i].append((now, produced - st.pool.work_done))
+            stage_timelines[i].append((now, st.pool.work_done))
+        lag_timelines[n_stages].append(
+            (now, log.get(f"t{n_stages}").total_messages())
+        )
+
+    rt.every(1.0, sample, start=1.0)
+    rt.run_until(duration)
+
+    results = []
+    for i, c in enumerate(stages):
+        st = graph.stage(c.name)
+        results.append(SimResult(
+            name=c.name,
+            duration=duration,
+            processed=st.pool.work_done,
+            timeline=stage_timelines[i],
+            completion_times=list(st.completions),
+            restarts=_restart_count(st.pool),
+            scale_events=len(st.pool.controller.scale_events),
+            final_tasks=len(st.pool.active_workers()),
+        ))
     return DataflowSimResult(
         name=name or f"dataflow_{n_stages}stage",
         duration=duration,
         stages=results,
         lag_timelines=lag_timelines,
-        throttle_events=throttles[0],
+        throttle_events=sum(
+            graph.stage(c.name).pool.counter("stage.throttled")
+            for c in stages
+        ),
     )
 
 

@@ -102,7 +102,11 @@ class PhiAccrualDetector(FailureDetector):
 class SupervisedChild:
     name: str
     detector: FailureDetector
-    restart: Callable[[], None]  # Let-It-Crash: restart hook
+    # Let-It-Crash restart hook.  Returning ``False`` (exactly) means the
+    # restart could not be performed yet (e.g. nowhere to relocate to):
+    # the supervisor defers — no "restarted" event, no budget burned —
+    # and retries after the next detection window.
+    restart: Callable[[], "None | bool"]
     max_restarts: int = 1_000_000
     restarts: int = 0
     alive: bool = True
@@ -170,11 +174,18 @@ class Supervisor:
                     continue
                 if now - child.last_restart_at < self.restart_backoff:
                     continue
+                result = child.restart()
+                child.alive = True
+                child.detector.observe(now)  # (re)arm the detector
+                if result is False:
+                    # The hook declined — e.g. no healthy node to
+                    # relocate onto.  Not a heal: don't count it, don't
+                    # burn the restart budget; the re-armed detector
+                    # re-suspects after another window and we retry.
+                    self.events.append((now, "restart_deferred", child.name))
+                    continue
                 child.restarts += 1
                 child.last_restart_at = now
-                child.restart()
-                child.alive = True
-                child.detector.observe(now)  # restart counts as a beat
                 self.events.append((now, "restarted", child.name))
                 restarted.append(child.name)
         return restarted

@@ -177,8 +177,21 @@ class VirtualConsumerGroup:
         self.consumers[partition] = self._make_consumer(partition)
         return self.consumers[partition]
 
-    def step_all(self, task_queues: Sequence[Mailbox], now: float = 0.0) -> int:
-        return sum(c.step(task_queues, now) for c in self.consumers)
+    def step_all(
+        self,
+        task_queues: Sequence[Mailbox],
+        now: float = 0.0,
+        gate: Optional[Callable[[VirtualConsumer], bool]] = None,
+    ) -> int:
+        """Step every consumer; ``gate`` (when given) filters which ones
+        may run this round — the placement-aware ``Stage`` uses it to
+        silence consumers whose node is down or whose relocation warm-up
+        has not elapsed."""
+        return sum(
+            c.step(task_queues, now)
+            for c in self.consumers
+            if gate is None or gate(c)
+        )
 
     def total_lag(self) -> int:
         return sum(c.lag() for c in self.consumers)

@@ -1,0 +1,71 @@
+"""Shared node-level chaos wiring for the launch demos.
+
+Both step-driven drivers (``repro.launch.dataflow``,
+``repro.launch.serve``) take the same ``--nodes/--cores/--fail-prob/
+--straggler`` flags and actuate them through the same cluster layer the
+paper-figure simulations drive: a ``Cluster`` the job's pools place
+workers on, plus a ``FailureInjector`` riding a ``SimEngine`` the driver
+pumps once per tick (``engine.run_until(tick)``) so node failures and
+restores interleave deterministically with the job's steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Tuple
+
+from repro.core.cluster import Cluster, FailureConfig, FailureInjector
+from repro.core.runtime import SimEngine
+
+
+def add_chaos_flags(
+    ap: argparse.ArgumentParser,
+    fail_interval: float = 20.0,
+    fail_restart: float = 10.0,
+) -> None:
+    """Install the node-chaos flags (defaults tuned per driver)."""
+    ap.add_argument("--nodes", type=int, default=0,
+                    help=">0: place the job's workers on a cluster of "
+                         "this many nodes (placement, co-residency "
+                         "dilation, node-level chaos)")
+    ap.add_argument("--cores", type=int, default=2,
+                    help="cores per node (with --nodes)")
+    ap.add_argument("--fail-prob", type=float, default=0.0,
+                    help="per-node failure probability per "
+                         "--fail-interval (with --nodes)")
+    ap.add_argument("--fail-interval", type=float, default=fail_interval)
+    ap.add_argument("--fail-restart", type=float, default=fail_restart,
+                    help="ticks until a failed node restarts")
+    ap.add_argument("--straggler", type=int, default=-1,
+                    help="index of a slow node (with --nodes)")
+    ap.add_argument("--straggler-speed", type=float, default=0.25)
+    ap.add_argument("--restart-cost", type=float, default=2.0,
+                    help="relocation warm-up after a supervised restart")
+
+
+def build_cluster(
+    args,
+) -> Tuple[Optional[Cluster], Optional[SimEngine], Optional[FailureInjector]]:
+    """Cluster + tick-pumped failure injector from the chaos flags
+    ((None, None, None) when ``--nodes`` is 0: the pre-cluster,
+    unplaced behavior)."""
+    if args.nodes <= 0:
+        return None, None, None
+    speeds = None
+    if args.straggler >= 0:
+        speeds = [
+            (args.straggler_speed if i == args.straggler else 1.0)
+            for i in range(args.nodes)
+        ]
+    cluster = Cluster(args.nodes, args.cores, speeds=speeds)
+    engine = SimEngine()
+    injector = FailureInjector(
+        engine, cluster,
+        FailureConfig(
+            probability=args.fail_prob,
+            interval=args.fail_interval,
+            restart_delay=args.fail_restart,
+            seed=args.seed,
+        ),
+    )
+    return cluster, engine, injector

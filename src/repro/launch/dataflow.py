@@ -13,6 +13,16 @@ Usage:
       --kill-stage-at 8:stage1          # chaos: kill stage1's workers at t=8
   PYTHONPATH=src python -m repro.launch.dataflow --slow-stage 1 \
       --no-backpressure                 # let the intermediate topic balloon
+  PYTHONPATH=src python -m repro.launch.dataflow --nodes 3 --cores 2 \
+      --fail-prob 0.5                   # node-level chaos via the cluster
+  PYTHONPATH=src python -m repro.launch.dataflow --nodes 3 --straggler 0
+
+Node-level chaos (``--nodes``/``--fail-prob``/``--straggler``) runs the
+whole graph on a ``core.cluster.Cluster``: stage workers carry nodes, a
+node failure silences every resident worker at once (the supervisor
+relocates them to the healthiest live node after ``--restart-cost``), and
+a straggler node dilates its residents' step budgets — the same actuator
+path the paper-figure simulations drive.
 """
 
 from __future__ import annotations
@@ -23,9 +33,10 @@ import json
 from repro.core.dataflow import Stage, StageGraph
 from repro.core.elastic import AutoscalerConfig
 from repro.data.topics import MessageLog
+from repro.launch.chaos import add_chaos_flags, build_cluster
 
 
-def build_graph(args) -> StageGraph:
+def build_graph(args, cluster=None) -> StageGraph:
     log = MessageLog(spill_dir=args.spill_dir)
     for i in range(args.stages + 1):
         log.create_topic(f"t{i}", args.partitions)
@@ -57,6 +68,8 @@ def build_graph(args) -> StageGraph:
                 max_workers=args.max_tasks, cooldown=0.0,
             ),
             heartbeat_timeout=args.heartbeat_timeout,
+            cluster=cluster,
+            restart_cost=args.restart_cost,
         ))
     return graph
 
@@ -88,11 +101,14 @@ def main(argv=None) -> int:
     ap.add_argument("--throttle-low", type=int, default=16)
     ap.add_argument("--throttle-high", type=int, default=64)
     ap.add_argument("--heartbeat-timeout", type=float, default=3.0)
+    add_chaos_flags(ap, fail_interval=20.0, fail_restart=10.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--spill-dir", default=None)
     ap.add_argument("--max-ticks", type=int, default=100_000)
     args = ap.parse_args(argv)
 
-    graph = build_graph(args)
+    cluster, engine, injector = build_cluster(args)
+    graph = build_graph(args, cluster=cluster)
     head = graph.stage("stage0")
 
     if args.spike:
@@ -126,6 +142,8 @@ def main(argv=None) -> int:
         upcoming = next(arrivals, None)
         if kill_at is not None and tick == kill_at:
             killed = graph.kill_stage(kill_stage)
+        if engine is not None:
+            engine.run_until(float(tick))  # node chaos rides the heap
         graph.step(float(tick))
         tick += 1
         if upcoming is None and graph.pending() == 0 and tick > 2:
@@ -139,6 +157,13 @@ def main(argv=None) -> int:
         "ticks": tick,
         "terminal_outputs": len(terminal.outputs()),
         "killed": killed,
+        "nodes": args.nodes,
+        "node_failures": injector.failures if injector else 0,
+        "node_restores": injector.restores if injector else 0,
+        "relocations": sum(
+            s.pool.counter("stage.task_relocations")
+            for s in graph.stages.values()
+        ) if cluster is not None else 0,
         "per_stage": {
             name: {
                 "processed": s.pool.counter("task.processed"),

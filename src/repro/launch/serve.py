@@ -18,6 +18,16 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --stub --spike  # fast demo
   PYTHONPATH=src python -m repro.launch.serve --stub --log-backed \
       --kill-replica 0                        # chaos over the log
+  PYTHONPATH=src python -m repro.launch.serve --stub --nodes 3 \
+      --fail-prob 0.5                         # node-level chaos
+  PYTHONPATH=src python -m repro.launch.serve --stub --nodes 2 --straggler 0
+
+Node-level chaos (``--nodes``/``--fail-prob``/``--straggler``) places the
+replicas on a ``core.cluster.Cluster``: a node failure silences every
+resident replica at once (generalizing the single-replica
+``--kill-replica`` hook), the pool's supervisor relocates them to the
+healthiest live node, and a straggler node dilates its residents — the
+same placement layer the paper-figure simulations drive.
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ import numpy as np
 
 from repro.config import get_arch
 from repro.core.elastic import AutoscalerConfig
+from repro.launch.chaos import add_chaos_flags, build_cluster
 from repro.models.zoo import build_model
 from repro.serving import ElasticServingPool, Request, ServingJob
 
@@ -76,11 +87,15 @@ def main(argv=None) -> int:
                          "here (survives process death)")
     ap.add_argument("--partitions", type=int, default=2,
                     help="with --log-backed: requests-topic partitions")
+    add_chaos_flags(ap, fail_interval=15.0, fail_restart=8.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    cluster, engine, injector = build_cluster(args)
     model, params, vocab = build(args)
     pool_kwargs = dict(
+        cluster=cluster,
+        restart_cost=(args.restart_cost if cluster is not None else 0.0),
         slots_per_replica=args.slots,
         max_len=args.max_len,
         temperature=args.temperature,
@@ -155,6 +170,8 @@ def main(argv=None) -> int:
         upcoming = next(arrivals, None)
         if args.kill_replica >= 0 and tick == 5 and pool.replicas:
             killed = pool.kill_replica(args.kill_replica)
+        if engine is not None:
+            engine.run_until(float(tick))  # node chaos rides the heap
         if job is not None:
             job.step(float(tick))
             drained = job.pending() == 0
@@ -180,6 +197,13 @@ def main(argv=None) -> int:
         "deferred": pool.metrics.value("serve.deferred"),
         "readmitted": pool.metrics.value("serve.readmitted"),
         "killed_replica": killed,
+        "nodes": args.nodes,
+        "node_failures": injector.failures if injector else 0,
+        "node_restores": injector.restores if injector else 0,
+        "relocations": (
+            pool.metrics.value("serve.replica_relocations")
+            if cluster is not None else 0
+        ),
         "decode_ticks": pool.steps,
         "wall_s": round(wall, 2),
         "p50_latency_ticks": round(float(np.percentile(lat, 50)), 1),

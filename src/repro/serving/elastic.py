@@ -144,6 +144,8 @@ class ElasticServingPool:
         heartbeat_timeout: float = 5.0,
         dispatch_batch: int = 32,
         replica_speeds: Optional[Sequence[float]] = None,
+        cluster: Optional[Any] = None,
+        restart_cost: float = 0.0,
         metrics: Optional[MetricsReplica] = None,
     ) -> None:
         self.model = model
@@ -190,6 +192,8 @@ class ElasticServingPool:
             dispatch_batch=dispatch_batch,
             retire_mode="drain",
             collect=self._collect_completed,
+            cluster=cluster,
+            restart_cost=restart_cost,
             metrics=metrics,
             metric_prefix="serve",
             worker_noun="replica",

@@ -1,0 +1,327 @@
+"""The cluster/placement layer as a live reactive service: placement,
+node-failure silencing, relocation, dilation, rebalancing — and the
+hypothesis-checked invariants (residency conservation, down-node
+quiescence, stale-epoch events never resurrecting anything)."""
+
+import itertools
+
+import pytest
+
+from repro.core.cluster import (
+    Cluster,
+    FailureConfig,
+    FailureInjector,
+    StepCost,
+)
+from repro.core.pool import ElasticPool, WorkerBase
+from repro.core.runtime import SimEngine
+from repro.core.messages import Message
+from tests._hypothesis_support import given, settings, st
+
+
+class CountingWorker(WorkerBase):
+    """Processes one mailbox message per step call."""
+
+    _ids = itertools.count()
+
+    def __init__(self, sink):
+        super().__init__(f"cw{next(CountingWorker._ids)}")
+        self.sink = sink
+
+    def step(self, now: float = 0.0) -> int:
+        msg = self.mailbox.get()
+        if msg is None:
+            return 0
+        self.sink.append(msg.payload)
+        self.metrics.incr("task.processed")
+        return 1
+
+
+def make_pool(cluster, n=4, sink=None, **kw):
+    sink = sink if sink is not None else []
+    pool = ElasticPool(
+        "placed",
+        lambda: CountingWorker(sink),
+        initial_units=n,
+        elastic=False,
+        heartbeat_timeout=2.0,
+        cluster=cluster,
+        restart_cost=kw.pop("restart_cost", 1.0),
+        **kw,
+    )
+    return pool, sink
+
+
+def feed(pool, n, start=0):
+    for i in range(start, start + n):
+        pool.route(Message(topic="t", payload=i))
+
+
+# --- placement basics ---------------------------------------------------------
+
+
+def test_spawn_places_least_loaded_and_registers_residency():
+    cluster = Cluster(3, cores=2)
+    pool, _ = make_pool(cluster, n=6)
+    assert all(w.node is not None for w in pool.workers)
+    counts = sorted(len(n.residents) for n in cluster.nodes)
+    assert counts == [2, 2, 2]
+    assert cluster.total_residents() == 6
+    names = {w.name for w in pool.workers}
+    for node in cluster.nodes:
+        assert node.residents <= names
+
+
+def test_node_down_silences_all_residents_and_supervisor_relocates():
+    cluster = Cluster(3, cores=2)
+    pool, sink = make_pool(cluster, n=6)
+    feed(pool, 60)
+    victim_node = cluster.nodes[0]
+    silenced = set(victim_node.residents)
+    assert len(silenced) == 2
+    cluster.fail(victim_node)
+    now = 0.0
+    for _ in range(8):  # past the 2.0 heartbeat timeout
+        pool.step(now)
+        now += 1.0
+    # every worker that lived on the dead node was relocated to a live one
+    assert all(
+        w.node is not None and w.node.up and w.node is not victim_node
+        for w in pool.workers
+    )
+    assert not victim_node.residents
+    assert cluster.total_residents() == 6
+    # nothing lost: re-admitted messages drain through the survivors
+    for _ in range(80):
+        pool.step(now)
+        now += 1.0
+    assert sorted(sink) == sorted(range(60))
+
+
+def test_restart_cost_delays_relocated_worker():
+    cluster = Cluster(2, cores=4)
+    pool, sink = make_pool(cluster, n=2, restart_cost=5.0)
+    feed(pool, 4)
+    cluster.fail(cluster.nodes[0])
+    now = 0.0
+    for _ in range(4):
+        pool.step(now)
+        now += 1.0
+    # relocation happened (heartbeat timeout 2.0) but the fresh worker is
+    # still warming: it must not have processed anything yet
+    relocated = [w for w in pool.workers if getattr(w, "warm_until", 0) > 0]
+    assert relocated
+    warm_until = max(w.warm_until for w in relocated)
+    assert warm_until > now - 1.0
+    processed_before = len(sink)
+    while now < warm_until + 3.0:
+        pool.step(now)
+        now += 1.0
+    assert len(sink) > processed_before or len(sink) == 4
+    assert sorted(sink) == sorted(range(4))
+
+
+def test_rebalance_moves_workers_onto_recovered_node():
+    cluster = Cluster(2, cores=2)
+    pool, _ = make_pool(cluster, n=4)
+    dead = cluster.nodes[0]
+    cluster.fail(dead)
+    now = 0.0
+    for _ in range(6):
+        pool.step(now)
+        now += 1.0
+    assert len(cluster.nodes[1].residents) == 4  # everyone crowded on node 1
+    cluster.restore(dead)
+    for _ in range(10):
+        pool.step(now)
+        now += 1.0
+    counts = sorted(len(n.residents) for n in cluster.nodes)
+    assert counts == [2, 2], "recovered capacity stayed idle"
+
+
+def test_dilation_is_physical():
+    """N workers on c cores process at most c messages per round."""
+    cluster = Cluster(1, cores=2)
+    pool, sink = make_pool(cluster, n=6, restart_cost=0.0)
+    feed(pool, 120)
+    per_round = []
+    for r in range(40):
+        before = len(sink)
+        pool.step(float(r))
+        per_round.append(len(sink) - before)
+    # dilation = 6 residents / 2 cores = 3 -> each worker steps 1/3 of
+    # rounds -> ~2 messages per round (the 2-core budget), so 40 rounds
+    # drain ~80 of the 120 — never more than the cores allow
+    assert 72 <= len(sink) <= 84
+    # capacity holds over any 6-round window (credit phases align, so a
+    # single round may burst, but the window average is the core budget)
+    for i in range(0, 36, 6):
+        assert sum(per_round[i:i + 6]) <= 2 * 6 + 2
+    # and nothing is lost once given enough rounds
+    for r in range(40, 120):
+        pool.step(float(r))
+    assert sorted(sink) == sorted(range(120))
+    # a straggler node (speed 0.5) halves the rate again: dilation 6
+    slow = Cluster(1, cores=2, speeds=[0.5])
+    pool2, sink2 = make_pool(slow, n=6, restart_cost=0.0)
+    feed(pool2, 120)
+    for r in range(40):
+        pool2.step(float(r))
+    assert 36 <= len(sink2) <= 44  # ~1 msg/round
+
+
+def test_cost_metering_converts_time_to_budget():
+    cluster = Cluster(1, cores=4)
+    pool, sink = make_pool(
+        cluster, n=2, restart_cost=0.0, step_cost=StepCost(t_process0=0.1)
+    )
+    feed(pool, 200)
+    # 10 rounds of dt=0.5 -> 5 s of virtual time -> 2 workers each
+    # process 5.0 / 0.1 = 50 messages: 100 of the 200, not more
+    now = 0.0
+    for _ in range(10):
+        now += 0.5
+        pool.step(now)
+    assert len(sink) == pytest.approx(100, abs=4)
+
+
+def test_failure_injector_epoch_guard_blocks_stale_restore():
+    engine = SimEngine()
+    cluster = Cluster(2, cores=2)
+    node = cluster.nodes[0]
+    e1 = cluster.fail(node)
+    # node fails AGAIN (manual chaos) before the scheduled restore fires
+    cluster.restore(node, e1)
+    e2 = cluster.fail(node)
+    assert not cluster.restore(node, e1), "stale restore resurrected the node"
+    assert not node.up
+    assert cluster.restore(node, e2)
+    assert node.up
+
+
+def test_failure_injector_rides_the_engine():
+    engine = SimEngine()
+    cluster = Cluster(3, cores=2)
+    inj = FailureInjector(
+        engine, cluster,
+        FailureConfig(probability=1.0, interval=10.0, restart_delay=4.0, seed=1),
+    )
+    engine.run_until(11.0)
+    assert inj.failures == 3 and not cluster.healthy()
+    engine.run_until(15.0)
+    assert len(cluster.healthy()) == 3
+    assert inj.restores == 3
+
+
+def test_whole_cluster_down_then_recovery():
+    """With every node down nothing steps, nothing is lost, and the pool
+    adopts the first node that comes back."""
+    cluster = Cluster(2, cores=4)
+    pool, sink = make_pool(cluster, n=3, restart_cost=1.0)
+    feed(pool, 30)
+    for node in cluster.nodes:
+        cluster.fail(node)
+    now = 0.0
+    for _ in range(10):
+        pool.step(now)
+        now += 1.0
+    assert len(sink) == 0
+    cluster.restore(cluster.nodes[1])
+    for _ in range(40):
+        pool.step(now)
+        now += 1.0
+    assert sorted(sink) == sorted(range(30))
+    assert cluster.total_residents() == 3
+
+
+# --- hypothesis property: invariants under arbitrary chaos sequences ----------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("fail"), st.integers(0, 2)),
+            st.tuples(st.just("restore"), st.integers(0, 2)),
+            st.tuples(st.just("kill"), st.integers(0, 5)),
+            st.tuples(st.just("scale"), st.integers(1, 8)),
+            st.tuples(st.just("step"), st.integers(1, 4)),
+        ),
+        min_size=1,
+        max_size=30,
+    )
+)
+def test_cluster_invariants_under_chaos(ops):
+    """Across arbitrary fail/restore/kill/scale/step sequences:
+
+    * residency conservation — every pool worker is resident on exactly
+      one node (or unplaced only while the whole cluster is down);
+    * stale epochs never resurrect — a restore carrying an old epoch is
+      a no-op;
+    * down-node quiescence — after a full detection window with a
+      healthy node available, no *live* worker remains on a down node.
+    """
+    cluster = Cluster(3, cores=2)
+    pool, _ = make_pool(cluster, n=4, restart_cost=1.0)
+    now = 0.0
+    tokens = {}  # node_id -> epoch token of its OLDEST failure (may go stale)
+    for op, arg in ops:
+        if op == "fail":
+            node = cluster.nodes[arg]
+            if node.up:
+                tokens.setdefault(arg, cluster.fail(node))
+        elif op == "restore":
+            node = cluster.nodes[arg]
+            token = tokens.pop(arg, None)
+            if token is not None:
+                was_down, cur_epoch = not node.up, node.epoch
+                ok = cluster.restore(node, token)
+                # a restore succeeds iff the node is down AND the token
+                # is from its *latest* failure; a stale token (the node
+                # failed again since) must resurrect nothing
+                assert ok == (was_down and token == cur_epoch)
+                if not ok and was_down:
+                    assert not node.up
+        elif op == "kill" and pool.workers:
+            pool.kill_worker(arg % len(pool.workers))
+        elif op == "scale":
+            pool.set_target_units(arg)
+        elif op == "step":
+            for _ in range(arg):
+                pool.step(now)
+                now += 1.0
+
+        # Invariant: residency conservation, continuously.
+        placed = [w for w in pool.workers if getattr(w, "node", None) is not None]
+        assert cluster.total_residents() == len(placed)
+        for w in placed:
+            assert w.name in w.node.residents
+            owners = [n for n in cluster.nodes if w.name in n.residents]
+            assert owners == [w.node]
+        # unplaced workers are only possible with zero healthy nodes at
+        # their (re)placement attempt; if any node is healthy the
+        # rebalance pass re-places them within a step, checked below.
+
+    # Quiesce: run past the detection window with everything healthy.
+    for node in cluster.nodes:
+        cluster.restore(node)
+    for _ in range(8):
+        pool.step(now)
+        now += 1.0
+    for w in pool.workers:
+        assert w.node is not None and w.node.up
+    assert cluster.total_residents() == len(pool.workers)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.floats(0.1, 1.0))
+def test_injector_restores_everything_it_fails(seed, p):
+    engine = SimEngine()
+    cluster = Cluster(3, cores=2)
+    inj = FailureInjector(
+        engine, cluster,
+        FailureConfig(probability=p, interval=5.0, restart_delay=2.0, seed=seed),
+    )
+    engine.run_until(103.0)  # past the last restart
+    assert len(cluster.healthy()) == 3
+    assert inj.restores == inj.failures
