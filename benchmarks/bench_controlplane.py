@@ -1,0 +1,157 @@
+"""Control-plane dispatch microbenchmark (ISSUE 6): scalar vs vectorized.
+
+Two tables, both pitting the scalar reference path (per-message
+``pick_msg`` over locked ``depth()`` scans) against the array-backed
+fast path (``LoadView`` + ``pick_batch``; see ``core.scheduler``):
+
+  * ``controlplane_dispatch`` — the pool ingress→mailbox dispatch hot
+    loop (``ElasticPool._dispatch``) at worker counts {8, 64, 512},
+    JSQ and P2C, ``dispatch_batch=256``.  ``msgs_per_s`` is per core
+    (the loop is single-threaded).
+  * ``controlplane_forward`` — the virtual-consumer consume-and-forward
+    loop (``VirtualConsumer.step``) over the same worker counts,
+    round-robin (the paper-faithful default, depth-blind pre-pick) and
+    JSQ (depth-aware, per-step snapshot).
+
+``depth_checksum`` is a deterministic fingerprint of where every message
+landed: the scalar and vectorized rows of a config must agree exactly
+(that is the bitwise-equivalence claim, smoke-diffed in CI), while the
+``msgs_per_s`` of the vectorized rows carries the perf-regression guard
+(fail below 70% of the frozen baseline).  Acceptance: ``speedup`` ≥ 5 on
+the 512-worker dispatch rows.
+
+Frozen to ``BENCH_controlplane.json`` by ``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List
+
+from repro.core.messages import Mailbox, Message
+from repro.core.pool import ElasticPool, WorkerBase
+from repro.core.scheduler import make_scheduler
+from repro.core.virtual_messaging import VirtualConsumer
+from repro.data.topics import MessageLog
+
+WORKER_COUNTS = (8, 64, 512)
+DISPATCH_BATCH = 256
+# Fewer messages at high fan-out: the scalar baseline is O(workers) per
+# message and must still finish in CI time.
+MSGS_FOR = {8: 40_000, 64: 20_000, 512: 8_000}
+
+
+def _make_pool(name: str, workers: int, scheduler: str, vectorize: bool) -> ElasticPool:
+    ids = itertools.count()
+    return ElasticPool(
+        name,
+        lambda: WorkerBase(f"{name}:w{next(ids)}"),
+        scheduler=make_scheduler(scheduler),
+        initial_units=workers,
+        max_workers=workers,
+        elastic=False,
+        ingress_capacity=0,  # unbounded central ingress
+        dispatch_batch=DISPATCH_BATCH,
+        vectorize=vectorize,
+    )
+
+
+def _checksum(depths: List[int]) -> int:
+    out = 0
+    for i, d in enumerate(depths):
+        out = (out * 1_000_003 + (i + 1) * d) % (2**31 - 1)
+    return out
+
+
+def dispatch_rows() -> List[Dict]:
+    rows: List[Dict] = []
+    for workers in WORKER_COUNTS:
+        msgs = MSGS_FOR[workers]
+        for scheduler in ("jsq", "pow2"):
+            scalar_rate = None
+            for path in ("scalar", "vectorized"):
+                pool = _make_pool(
+                    f"cp-{scheduler}-{workers}-{path}",
+                    workers, scheduler, vectorize=(path == "vectorized"),
+                )
+                for i in range(msgs):
+                    pool.ingress.put(
+                        Message(topic="bench", payload=i, created_at=float(i))
+                    )
+                t0 = time.perf_counter()
+                while pool.ingress.depth() > 0:
+                    pool._dispatch()
+                wall = time.perf_counter() - t0
+                rate = msgs / wall if wall > 0 else 0.0
+                row = {
+                    "table": "controlplane_dispatch",
+                    "workers": workers,
+                    "scheduler": scheduler,
+                    "path": path,
+                    "msgs": msgs,
+                    "dispatch_batch": DISPATCH_BATCH,
+                    "depth_checksum": _checksum(
+                        [w.mailbox.depth() for w in pool.workers]
+                    ),
+                    "wall_s": round(wall, 3),
+                    "msgs_per_s": round(rate),
+                }
+                if path == "scalar":
+                    scalar_rate = rate
+                else:
+                    row["speedup"] = round(
+                        rate / scalar_rate if scalar_rate else 0.0, 1
+                    )
+                rows.append(row)
+    return rows
+
+
+def forward_rows() -> List[Dict]:
+    rows: List[Dict] = []
+    for workers in WORKER_COUNTS:
+        msgs = min(MSGS_FOR[workers], 16_000)
+        for scheduler in ("round_robin", "jsq"):
+            scalar_rate = None
+            for path in ("scalar", "vectorized"):
+                log = MessageLog()
+                topic = log.create_topic("bench-fwd", 1)
+                for i in range(msgs):
+                    topic.publish(
+                        Message(topic="bench-fwd", payload=i,
+                                created_at=float(i))
+                    )
+                vc = VirtualConsumer(
+                    f"vc-{scheduler}-{workers}-{path}",
+                    topic, 0, make_scheduler(scheduler),
+                    batch_size=DISPATCH_BATCH,
+                )
+                vc.vectorize = path == "vectorized"
+                boxes = [Mailbox(f"t{i}") for i in range(workers)]
+                t0 = time.perf_counter()
+                while vc.lag() > 0:
+                    vc.step(boxes)
+                wall = time.perf_counter() - t0
+                rate = msgs / wall if wall > 0 else 0.0
+                row = {
+                    "table": "controlplane_forward",
+                    "workers": workers,
+                    "scheduler": scheduler,
+                    "path": path,
+                    "msgs": msgs,
+                    "depth_checksum": _checksum([b.depth() for b in boxes]),
+                    "wall_s": round(wall, 3),
+                    "msgs_per_s": round(rate),
+                }
+                if path == "scalar":
+                    scalar_rate = rate
+                else:
+                    row["speedup"] = round(
+                        rate / scalar_rate if scalar_rate else 0.0, 1
+                    )
+                rows.append(row)
+    return rows
+
+
+def run() -> List[Dict]:
+    return dispatch_rows() + forward_rows()

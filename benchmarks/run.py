@@ -8,6 +8,8 @@
   bench_training    — elastic training: tokens/sec across DP + recovery
   bench_dataflow    — multi-stage chains: 1 vs 3 stages, mid-chain kill,
                       and the backpressure-throttle lag experiment
+  bench_controlplane — scalar vs vectorized dispatch/forward hot loops
+                      (checksums bit-identical; speedup is the claim)
   bench_kernels     — kernel tiling numbers + CPU reference timings
   bench_roofline    — the 40-cell dry-run roofline table
 
@@ -41,13 +43,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench (throughput|failure|completion|"
-                         "scheduler|serving|training|dataflow|kernels|"
-                         "roofline)")
+                         "scheduler|serving|training|dataflow|controlplane|"
+                         "kernels|roofline)")
     ap.add_argument("--json", default=None, help="also dump rows as JSONL")
     args = ap.parse_args()
 
     from benchmarks import (  # deferred: jax import cost
         bench_completion,
+        bench_controlplane,
         bench_dataflow,
         bench_failure,
         bench_kernels,
@@ -66,6 +69,7 @@ def main() -> None:
         "serving": bench_serving.run,
         "training": bench_training.run,
         "dataflow": bench_dataflow.run,
+        "controlplane": bench_controlplane.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }
@@ -82,7 +86,8 @@ def main() -> None:
         all_rows.extend(rows)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", flush=True)
-        if name in ("serving", "training", "dataflow", "failure"):
+        if name in ("serving", "training", "dataflow", "failure",
+                    "controlplane"):
             out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
             with open(out, "w") as fh:
                 json.dump({"bench": name, "wall_s": round(elapsed, 1),

@@ -124,6 +124,7 @@ class StageWorker(WorkerBase):
 
     def step(self, now: float = 0.0) -> int:
         n = 0
+        deduped = emitted = 0
         while n < self.step_budget and self.alive:
             msg = self.mailbox.get()
             if msg is None:
@@ -133,7 +134,7 @@ class StageWorker(WorkerBase):
                 if msg.offset >= 0 else ("id", msg.msg_id)
             )
             if self.dedup.seen(key):
-                self.metrics.incr("task.deduped")
+                deduped += 1
                 memo = self.dedup.lookup(key)
                 if memo is not None:
                     # Redelivered after processing: replay the memoized
@@ -142,11 +143,17 @@ class StageWorker(WorkerBase):
                 continue
             outputs = list(self.process(msg) or [])
             self.dedup.remember(key, outputs)
-            self.metrics.incr("task.processed")
-            if outputs:
-                self.metrics.incr("task.emitted", len(outputs))
+            emitted += len(outputs)
             self._ready.append((msg, outputs))
             n += 1
+        # Counters batched per step (values at every step boundary are
+        # identical to the per-message version).
+        if n:
+            self.metrics.incr("task.processed", n)
+        if emitted:
+            self.metrics.incr("task.emitted", emitted)
+        if deduped:
+            self.metrics.incr("task.deduped", deduped)
         return n
 
     def load(self) -> int:
@@ -273,6 +280,11 @@ class Stage:
         self.source = source
         self.autoscale_lag_cap = autoscale_lag_cap
         self._px = metric_prefix
+        # Hot-path metric names, precomputed once (admission runs per
+        # message; the f-string cost was measurable at bench scale).
+        self._m_published = f"{metric_prefix}.published"
+        self._m_redelivered = f"{metric_prefix}.redelivered"
+        self._m_replay_deduped = f"{metric_prefix}.replay_deduped"
 
         self.consumers = VirtualConsumerGroup(
             name,
@@ -456,11 +468,11 @@ class Stage:
             or o in self._done.get(p, ())
             or (p, o) in self._admitted
         ):
-            self.pool.metrics.incr(f"{self._px}.redelivered")
+            self.pool.metrics.incr(self._m_redelivered)
             return False
         if self._fully_published((p, o)):
             self._mark_done(p, o)
-            self.pool.metrics.incr(f"{self._px}.replay_deduped")
+            self.pool.metrics.incr(self._m_replay_deduped)
             return False
         return True
 
@@ -509,9 +521,14 @@ class Stage:
 
     def _publish_result(
         self, p: int, o: int, outputs: List[Any], now: float
-    ) -> None:
+    ) -> int:
+        """Publish one finished input's outputs downstream (idempotent).
+        Returns the number of messages actually appended; completion
+        bookkeeping is the caller's (``_mark_done`` /
+        ``_mark_done_batch``) — one batched pass per harvest."""
         n = len(outputs)
         from_log = p >= 0
+        published = 0
         if self.out_topic is not None:
             for k, value in enumerate(outputs):
                 if self._pub.seen((p, o, k)):
@@ -542,11 +559,10 @@ class Stage:
                 # the watermark only covers real partitions).
                 if from_log:
                     self._pubcount[(p, o)] = self._pubcount.get((p, o), 0) + 1
-                self.pool.metrics.incr(f"{self._px}.published")
+                published += 1
             if from_log:
                 self._expected[(p, o)] = n
-        if from_log:
-            self._mark_done(p, o, now)
+        return published
 
     def _mark_done(self, partition: int, offset: int, now: float = 0.0) -> None:
         """Contiguous-prefix commit: the offset joins the done set; when
@@ -577,6 +593,37 @@ class Stage:
             lo, _ = self._evict_spans.get(partition, (old, old))
             self._evict_spans[partition] = (min(lo, old), w)
 
+    def _mark_done_batch(
+        self, done: Sequence[Tuple[int, int]], now: float
+    ) -> None:
+        """One harvest's worth of :meth:`_mark_done`, batched: per-result
+        completion bookkeeping stays in result order (the ``completions``
+        trace is order-sensitive), then each partition's done-set joins
+        and watermark advance run once over the whole round instead of
+        per offset.  Final state is identical to sequential
+        ``_mark_done`` calls — the contiguous-prefix watermark is
+        order-independent, and the evict span merges exactly as the
+        per-advance updates would."""
+        by_part: Dict[int, List[int]] = {}
+        for p, o in done:
+            self._admitted.discard((p, o))
+            t0 = self._forward_time.pop((p, o), None)
+            if t0 is not None:
+                self.completions.append(now - t0)
+            by_part.setdefault(p, []).append(o)
+        for p, offsets in by_part.items():
+            done_set = self._done[p]
+            done_set.update(offsets)
+            old = self._watermark[p]
+            w = old
+            while w in done_set:
+                done_set.discard(w)
+                w += 1
+            if w != old:
+                self._watermark[p] = w
+                lo, _ = self._evict_spans.get(p, (old, old))
+                self._evict_spans[p] = (min(lo, old), w)
+
     def _evict_committed(self, spans: Dict[int, Tuple[int, int]]) -> None:
         """Drop every dedup entry for the offsets committed this round
         (the ``DedupWindow`` memory invariant: a key below the committed
@@ -598,8 +645,18 @@ class Stage:
                     window.discard(key)
 
     def _publish_and_commit(self, now: float) -> None:
-        for p, o, outputs in self._take_results():
-            self._publish_result(p, o, outputs, now)
+        results = self._take_results()
+        if results:
+            published = 0
+            done: List[Tuple[int, int]] = []
+            for p, o, outputs in results:
+                published += self._publish_result(p, o, outputs, now)
+                if p >= 0:
+                    done.append((p, o))
+            if published:
+                self.pool.metrics.incr(self._m_published, published)
+            if done:
+                self._mark_done_batch(done, now)
         if self._evict_spans:
             spans, self._evict_spans = self._evict_spans, {}
             for vc in self.consumers.consumers:
@@ -736,11 +793,15 @@ class StageGraph:
         backpressure: bool = True,
         throttle_low: int = 16,
         throttle_high: int = 64,
+        timer: Optional[Any] = None,
     ) -> None:
         self.log = log
         self.backpressure = backpressure
         self.throttle_low = throttle_low
         self.throttle_high = throttle_high
+        # Optional telemetry.StepTimer: per-stage step() wall-time.
+        # Write-only bookkeeping — wiring one in changes no behavior.
+        self.timer = timer
         self.stages: Dict[str, Any] = {}
         self.lag_log: List[Tuple[float, Dict[str, int]]] = []
         self.steps = 0
@@ -830,8 +891,14 @@ class StageGraph:
     # -- main loop -------------------------------------------------------------
     def step(self, now: float = 0.0) -> int:
         worked = 0
-        for s in self.stages.values():
-            worked += s.step(now)
+        timer = self.timer
+        if timer is not None:
+            for name, s in self.stages.items():
+                with timer.time(name):
+                    worked += s.step(now)
+        else:
+            for s in self.stages.values():
+                worked += s.step(now)
         self.lag_log.append(
             (now, {name: s.input_lag() for name, s in self.stages.items()})
         )

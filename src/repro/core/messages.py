@@ -89,6 +89,27 @@ class Mailbox:
         self.enqueued = 0
         self.dequeued = 0
         self.dropped = 0
+        # (LoadView, index) pairs mirroring this queue's depth: every
+        # mutation updates the bound arrays in place (inside the lock),
+        # so schedulers read depths from numpy instead of taking this
+        # lock per queue per message.  Usually empty or a single entry
+        # (the owning pool's view); a virtual consumer forwarding into
+        # the same mailboxes binds a second, short-lived one.
+        self._views: list = []
+
+    def _bind_view(self, view, idx: int) -> None:
+        with self._lock:
+            self._views = [
+                (v, i) for v, i in self._views if v is not view
+            ] + [(view, idx)]
+
+    def _unbind_view(self, view) -> None:
+        with self._lock:
+            self._views = [(v, i) for v, i in self._views if v is not view]
+
+    def _note(self, delta: int) -> None:
+        for view, idx in self._views:
+            view.note(idx, delta)
 
     def put(self, msg: Message) -> None:
         with self._lock:
@@ -99,6 +120,8 @@ class Mailbox:
                 )
             self._q.append(msg)
             self.enqueued += 1
+            if self._views:
+                self._note(1)
 
     def try_put(self, msg: Message) -> bool:
         """Non-raising bounded put: False (and a drop count) when full.
@@ -111,6 +134,8 @@ class Mailbox:
                 return False
             self._q.append(msg)
             self.enqueued += 1
+            if self._views:
+                self._note(1)
             return True
 
     def put_front(self, msg: Message) -> None:
@@ -123,13 +148,30 @@ class Mailbox:
         with self._lock:
             self._q.appendleft(msg)
             self.enqueued += 1
+            if self._views:
+                self._note(1)
 
     def get(self) -> Optional[Message]:
         with self._lock:
             if not self._q:
                 return None
             self.dequeued += 1
+            if self._views:
+                self._note(-1)
             return self._q.popleft()
+
+    def get_many(self, n: int) -> list:
+        """Dequeue up to ``n`` messages under one lock acquisition (the
+        batched dispatch pull — same FIFO order as ``n`` ``get`` calls)."""
+        with self._lock:
+            take = min(n, len(self._q))
+            if take <= 0:
+                return []
+            out = [self._q.popleft() for _ in range(take)]
+            self.dequeued += take
+            if self._views:
+                self._note(-take)
+            return out
 
     def peek(self) -> Optional[Message]:
         with self._lock:
@@ -144,6 +186,8 @@ class Mailbox:
         with self._lock:
             items, self._q = list(self._q), deque()
             self.dequeued += len(items)
+            if self._views and items:
+                self._note(-len(items))
         yield from items
 
     def snapshot(self) -> list:

@@ -50,8 +50,12 @@ can no longer raise ``MailboxOverflow`` mid-drain.
 
 from __future__ import annotations
 
+import heapq
+
 from dataclasses import replace as dc_replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+
+import numpy as np
 
 from repro.core.cluster import Cluster, StepCost
 from repro.core.elastic import (
@@ -60,7 +64,7 @@ from repro.core.elastic import (
     split_units,
 )
 from repro.core.messages import Mailbox, Message
-from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.scheduler import LoadView, Scheduler, make_scheduler
 from repro.core.supervision import HeartbeatDetector, Supervisor
 from repro.telemetry.metrics import MetricsReplica
 
@@ -203,6 +207,64 @@ class DedupWindow:
         return len(self._seen)
 
 
+class ReadyWorkerHeap:
+    """O(log n) least-loaded-queue index over a bound :class:`LoadView`,
+    with lazy invalidation.
+
+    Replaces the overflow-spill path's O(n) ``min(range(n), key=depth)``
+    scan.  Entries are ``(depth, idx)`` pairs; :meth:`least` returns the
+    lexicographic minimum over the *live* depths — identical to the
+    scalar first-occurrence-min scan, by this invariant: every index
+    always has at least one heap entry whose recorded depth is **≤** its
+    live depth.
+
+      * Depth increases keep old entries valid (recorded ≤ live still
+        holds) — corrected lazily when popped.
+      * Depth decreases would break the invariant, so the view's
+        ``on_decrease`` hook queues the index and :meth:`least` pushes a
+        fresh entry before answering (queued, not pushed inline: the
+        hook fires inside the mailbox lock).
+      * A popped entry whose recorded depth disagrees with the live
+        depth is replaced by a corrected entry and the pop retries.
+
+    Given the invariant, the first popped entry that *agrees* with its
+    live depth is ≤ every other index's (live depth, index) pair, i.e.
+    exactly the scalar minimum.  Stale entries are bounded by periodic
+    compaction (rebuild when the heap outgrows 8n)."""
+
+    def __init__(self, view: LoadView) -> None:
+        self.view = view
+        self._pending: List[int] = []  # decrease queue (GIL-atomic appends)
+        self._heap: List[tuple] = [
+            (int(d), i) for i, d in enumerate(view.depths)
+        ]
+        heapq.heapify(self._heap)
+        view.on_decrease = self._pending.append
+
+    def least(self) -> int:
+        """Index of the minimum-depth queue, lowest index on ties."""
+        depths = self.view.depths
+        if self._pending:
+            # Swap-then-rebind: the view holds a bound ``append`` of the
+            # *current* list, so after the swap the hook must be repointed
+            # at the replacement — concurrent appends between the two
+            # statements land in ``drained`` and are still processed.
+            drained, self._pending = self._pending, []
+            self.view.on_decrease = self._pending.append
+            for idx in drained:
+                heapq.heappush(self._heap, (int(depths[idx]), idx))
+        if len(self._heap) > 8 * len(depths) + 64:
+            self._heap = [(int(d), i) for i, d in enumerate(depths)]
+            heapq.heapify(self._heap)
+        heap = self._heap
+        while True:
+            d, i = heap[0]
+            live = int(depths[i])
+            if d == live:
+                return i
+            heapq.heapreplace(heap, (live, i))
+
+
 class ElasticPool:
     """Supervised, autoscaled pool of mailbox-fed workers.
 
@@ -245,6 +307,7 @@ class ElasticPool:
         metrics: Optional[MetricsReplica] = None,
         metric_prefix: str = "pool",
         worker_noun: str = "worker",
+        vectorize: bool = True,
     ) -> None:
         if overflow not in ("shed", "defer"):
             raise ValueError(f"overflow must be 'shed' or 'defer', got {overflow!r}")
@@ -302,6 +365,29 @@ class ElasticPool:
             )
         self._px = metric_prefix
         self._noun = worker_noun
+        # Vectorized dispatch (bitwise-equivalent fast path): a bound
+        # LoadView over the active workers' mailboxes plus a least-loaded
+        # heap, rebuilt whenever the active set changes.  ``vectorize=
+        # False`` pins every dispatch site to the scalar reference path.
+        self.vectorize = vectorize
+        self._view: Optional[LoadView] = None
+        self._view_workers: List[Any] = []
+        self._view_boxes: List[Mailbox] = []
+        self._view_caps = None  # numpy capacity array aligned with boxes
+        self._ready: Optional[ReadyWorkerHeap] = None
+        # Bumped on every worker-set mutation (spawn/retire/reap/restart
+        # swap); queue_depth() trusts the view's coverage only while the
+        # epochs agree.
+        self._members_epoch = 0
+        self._view_epoch = -1
+        # Hot-path metric names, precomputed once: the per-message
+        # f-string cost in offer/route was measurable at bench scale.
+        self._m_admitted = f"{metric_prefix}.admitted"
+        self._m_shed = f"{metric_prefix}.shed"
+        self._m_deferred = f"{metric_prefix}.deferred"
+        self._m_readmitted = f"{metric_prefix}.readmitted"
+        self._m_dispatched = f"{metric_prefix}.dispatched"
+        self._m_dispatch_rounds = f"{metric_prefix}.dispatch_rounds"
         self.metrics = metrics or MetricsReplica(name)
         # Dead/retired workers fold their replicas here — the lossless
         # half of merged_metrics() that survives any chaos kill.
@@ -342,14 +428,14 @@ class ElasticPool:
         means the caller owns the retry."""
         assert self.ingress is not None, "pool has no central ingress"
         if self.ingress.try_put(msg):
-            self.metrics.incr(f"{self._px}.admitted")
+            self.metrics.incr(self._m_admitted)
             return True
         self._rejected_since_observe += 1
         if self.overflow == "shed":
             self.shed.append(msg)
-            self.metrics.incr(f"{self._px}.shed")
+            self.metrics.incr(self._m_shed)
         else:
-            self.metrics.incr(f"{self._px}.deferred")
+            self.metrics.incr(self._m_deferred)
         return False
 
     def route(self, msg: Message) -> None:
@@ -357,11 +443,16 @@ class ElasticPool:
         every worker dead or draining, delivery falls back to *any*
         worker's mailbox — the message waits there for the supervisor's
         restart drain rather than being lost (or crashing the sender)."""
-        workers = self.active_workers() or self.workers
-        boxes = [w.mailbox for w in workers]
-        idx = self.scheduler.pick_msg(msg, boxes) if boxes else 0
-        self._force_deliver(msg, boxes, idx)
-        self.metrics.incr(f"{self._px}.admitted")
+        view = self._sync_view() if self.vectorize else None
+        if view is not None:
+            idx = self.scheduler.pick_view(msg, view)
+            self._force_deliver(msg, self._view_boxes, idx)
+        else:
+            workers = self.active_workers() or self.workers
+            boxes = [w.mailbox for w in workers]
+            idx = self.scheduler.pick_msg(msg, boxes) if boxes else 0
+            self._force_deliver(msg, boxes, idx)
+        self.metrics.incr(self._m_admitted)
 
     def note_rejected(self, n: int = 1) -> None:
         """Report offered demand the pool could not see in its queues
@@ -376,6 +467,24 @@ class ElasticPool:
     # -- introspection ---------------------------------------------------------
     def queue_depth(self) -> int:
         depth = self.ingress.depth() if self.ingress is not None else 0
+        view = self._view
+        if view is not None and self._view_epoch == self._members_epoch:
+            # The worker set is unchanged since the view bound (the
+            # epoch guards spawn/retire/restart swaps), so the view
+            # covers every then-active worker's mailbox exactly; only
+            # workers that were dead/draining at bind time fall back to
+            # a locked depth() read.  This is the aggregate other stages
+            # poll per backpressure check — O(n) lock acquisitions
+            # otherwise.
+            depth += int(view.depths.sum())
+            if len(self._view_workers) != len(self.workers):
+                covered = {id(w) for w in self._view_workers}
+                depth += sum(
+                    w.mailbox.depth()
+                    for w in self.workers
+                    if id(w) not in covered
+                )
+            return depth
         return depth + sum(w.mailbox.depth() for w in self.workers)
 
     def occupancy(self) -> int:
@@ -478,6 +587,7 @@ class ElasticPool:
         if getattr(worker, "metrics", None) is None:
             worker.metrics = MetricsReplica(worker.name)
         self.workers.append(worker)
+        self._members_epoch += 1
         if self.cluster is not None:
             self._place(worker)
         self._cost_prev[worker.name] = self._now
@@ -503,6 +613,36 @@ class ElasticPool:
         if metrics is not None:
             self.graveyard = self.graveyard.merge(metrics)
 
+    def _sync_view(self) -> Optional[LoadView]:
+        """The bound LoadView over the active workers' mailboxes, rebuilt
+        iff the active set changed since the last call (spawn, retire,
+        drain-mark, restart, kill — anything that flips alive/draining).
+
+        The membership check is an O(n) identity scan of cheap attribute
+        reads; what the view removes is the O(n) *lock-taking* ``depth()``
+        scan per message.  Returns None when there are no active workers
+        (callers take the scalar fallback, which also handles the
+        all-dead route case)."""
+        active = self.active_workers()
+        if not active:
+            return None
+        cached = self._view_workers
+        if len(cached) == len(active) and all(
+            a is b for a, b in zip(cached, active)
+        ):
+            return self._view
+        if self._view is not None:
+            self._view.detach()
+        boxes = [w.mailbox for w in active]
+        view = LoadView(boxes)
+        self._view = view
+        self._view_workers = active
+        self._view_boxes = boxes
+        self._view_caps = np.array([b.capacity for b in boxes], dtype=np.int64)
+        self._view_epoch = self._members_epoch
+        self._ready = ReadyWorkerHeap(view)
+        return view
+
     def _force_deliver(
         self, msg: Message, boxes: Sequence[Mailbox], preferred: int
     ) -> None:
@@ -516,7 +656,10 @@ class ElasticPool:
             raise RuntimeError(f"pool {self.name!r} has no workers to deliver to")
         if boxes[preferred].try_put(msg):
             return
-        j = min(range(len(boxes)), key=lambda b: boxes[b].depth())
+        if self._ready is not None and boxes is self._view_boxes:
+            j = self._ready.least()  # O(log n), same lowest-index minimum
+        else:
+            j = min(range(len(boxes)), key=lambda b: boxes[b].depth())
         if j != preferred and boxes[j].try_put(msg):
             return
         boxes[j].put_front(msg)
@@ -558,6 +701,7 @@ class ElasticPool:
         idx = self.workers.index(worker)
         if worker.draining:
             self.workers.pop(idx)
+            self._members_epoch += 1
             self._release(worker)
             if msgs:
                 if self.ingress is not None:
@@ -572,6 +716,7 @@ class ElasticPool:
         if cap is not None:
             fresh.set_capacity(cap)
         self.workers[idx] = fresh
+        self._members_epoch += 1
         self._release(worker)
         if self.cluster is not None:
             self._place(fresh, new_node)
@@ -600,7 +745,19 @@ class ElasticPool:
     def _redistribute(self, msgs: Sequence[Message]) -> None:
         """Scale-in drain: scheduler-route a victim's messages to the
         survivors, overflow-safe (the fix for the bounded-mailbox
-        scale-in crash: try_put, spill to least-loaded, put_front)."""
+        scale-in crash: try_put, spill to least-loaded, put_front).
+
+        Vectorized path: per-message ``pick_view`` against the bound
+        view (not ``pick_batch`` — a spill lands the message off its
+        pick, and the *live* view tracks that where a planned batch
+        would not)."""
+        view = self._sync_view() if self.vectorize else None
+        if view is not None:
+            boxes = self._view_boxes
+            for msg in msgs:
+                idx = self.scheduler.pick_view(msg, view)
+                self._force_deliver(msg, boxes, idx)
+            return
         boxes = [w.mailbox for w in self.active_workers()]
         for msg in msgs:
             idx = self.scheduler.pick_msg(msg, boxes) if boxes else 0
@@ -616,6 +773,7 @@ class ElasticPool:
             self.metrics.incr(f"{self._px}.{self._noun}_draining")
             return
         self.workers.remove(victim)
+        self._members_epoch += 1
         victim.alive = False
         self._fold(victim)
         self._release(victim)
@@ -627,6 +785,7 @@ class ElasticPool:
         for worker in [w for w in self.workers if w.draining]:
             if worker.load() == 0 and worker.inflight() == 0:
                 self.workers.remove(worker)
+                self._members_epoch += 1
                 self._fold(worker)
                 self._release(worker)
                 self.supervisor.unsupervise(worker.name)
@@ -677,6 +836,79 @@ class ElasticPool:
         policy.  Full worker queues push work back into the ingress
         (deferral): the backlog stays where the autoscaler watches it."""
         assert self.ingress is not None
+        view = self._sync_view() if self.vectorize else None
+        if view is not None:
+            moved = self._dispatch_vectorized(view)
+        else:
+            moved = self._dispatch_scalar()
+        if moved:
+            self.metrics.incr(self._m_dispatched, moved)
+            self.metrics.incr(self._m_dispatch_rounds)
+        return moved
+
+    def _dispatch_vectorized(self, view: LoadView) -> int:
+        """Array-backed dispatch round, bitwise-equivalent to
+        :meth:`_dispatch_scalar`:
+
+        * saturation pre-check and min-free headroom come off the
+          view's depth array instead of per-mailbox ``depth()`` locks;
+        * the ingress pull is one ``get_many`` (one lock) instead of
+          ``dispatch_batch`` ``get`` calls;
+        * when every delivery is *guaranteed* to land on its pick
+          (unbounded boxes, or headroom ≥ batch on every box) the whole
+          batch routes through one ``pick_batch`` call over a planned
+          depth copy — the exact index sequence the scalar loop would
+          pick, because under guaranteed delivery each scalar pick sees
+          precisely the planned depths;
+        * otherwise (overflow possible) picks stay per-message via
+          ``pick_view`` — the live bound view mirrors spills and
+          rejections exactly as the scalar ``depth()`` scans would —
+          with the same spill / give-up-and-requeue tail."""
+        boxes = self._view_boxes
+        caps = self._view_caps
+        depths = view.depths
+        bounded = caps > 0
+        if bool(bounded.all()) and bool((depths >= caps).all()):
+            return 0  # saturated: don't churn the ingress for nothing
+        batch = self.ingress.get_many(self.dispatch_batch)
+        if not batch:
+            return 0
+        ordered = self.scheduler.order(batch)
+        scheduler = self.scheduler
+        # Delivery is guaranteed when every *bounded* box can absorb the
+        # whole batch (unbounded boxes always can): no pick can overflow,
+        # so each scalar pick would see exactly the planned depths.
+        guaranteed = (not bool(bounded.any())) or int(
+            (caps - depths)[bounded].min()
+        ) >= len(ordered)
+        if scheduler.supports_batch and guaranteed:
+            picks = scheduler.pick_batch(ordered, view.plan())
+            for msg, i in zip(ordered, picks):
+                boxes[i].put(msg)  # cannot overflow under the guard
+            return len(ordered)
+        moved = 0
+        leftover: List[Message] = []
+        ready = self._ready
+        for pos, msg in enumerate(ordered):
+            i = scheduler.pick_view(msg, view)
+            if boxes[i].try_put(msg):
+                moved += 1
+                continue
+            j = ready.least() if ready is not None else int(depths.argmin())
+            if j != i and boxes[j].try_put(msg):
+                moved += 1
+                continue
+            # The min-depth queue rejected, so every queue is full —
+            # nothing later in the batch can land either.
+            leftover.extend(ordered[pos:])
+            break
+        for msg in reversed(leftover):
+            self.ingress.put_front(msg)
+        return moved
+
+    def _dispatch_scalar(self) -> int:
+        """Reference dispatch round (``vectorize=False``): per-message
+        scheduler picks over live ``depth()`` scans."""
         active = self.active_workers()
         if not active:
             return 0

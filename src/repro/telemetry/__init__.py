@@ -1,1 +1,2 @@
 from repro.telemetry.metrics import MetricsReplica, MetricsHub
+from repro.telemetry.profile import StepTimer

@@ -1,0 +1,472 @@
+"""Vectorized control plane (ISSUE 6 tentpole): the array-backed
+dispatch path must be *bitwise equivalent* to the scalar reference it
+replaced — scheduler picks, pool dispatch, consumer forwarding, and
+per-stage committed offsets — and the ready-worker structure must never
+route to dead or draining workers under chaos."""
+
+import itertools
+
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.dataflow import Stage, StageGraph
+from repro.core.messages import Mailbox, Message
+from repro.core.pool import ElasticPool, ReadyWorkerHeap, WorkerBase
+from repro.core.scheduler import (
+    LoadView,
+    PowerOfTwoScheduler,
+    RoundRobinScheduler,
+    make_scheduler,
+    scheduler_names,
+)
+from repro.core.virtual_messaging import VirtualConsumer
+from repro.data.topics import MessageLog
+from repro.telemetry import StepTimer
+from tests._hypothesis_support import given, settings, st
+
+
+class FakeQueue:
+    """A depth-only stand-in so scalar picks can simulate enqueue."""
+
+    def __init__(self, depth):
+        self._d = depth
+
+    def depth(self):
+        return self._d
+
+
+class Payload:
+    def __init__(self, deadline=None, priority=None):
+        if deadline is not None:
+            self.deadline = deadline
+        if priority is not None:
+            self.priority = priority
+
+
+def msg(i, partition=-1, deadline=None):
+    return Message(topic="t", payload=Payload(deadline=deadline),
+                   partition=partition, created_at=float(i))
+
+
+def scheduler_pair(name):
+    """Two independent same-seed instances (pow2 must draw identically)."""
+    if name == "pow2":
+        return make_scheduler(name, seed=7), make_scheduler(name, seed=7)
+    return make_scheduler(name), make_scheduler(name)
+
+
+# Shared strategy: queue depths (with ties) plus a message batch carrying
+# partitions and deadlines so partition/edf exercise their message hooks.
+depths_st = st.lists(st.integers(min_value=0, max_value=6),
+                     min_size=1, max_size=12)
+batch_st = st.lists(
+    st.tuples(st.integers(min_value=-1, max_value=15),
+              st.one_of(st.none(),
+                        st.floats(min_value=0.0, max_value=9.0,
+                                  allow_nan=False))),
+    min_size=0, max_size=30,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(depths=depths_st, batch=batch_st)
+def test_pick_view_matches_pick_msg_for_every_scheduler(depths, batch):
+    """Property: the array-resolved scalar pick equals the reference
+    pick, message by message, with simulated enqueue after each."""
+    for name in scheduler_names():
+        ref, vec = scheduler_pair(name)
+        queues = [FakeQueue(d) for d in depths]
+        view = LoadView([FakeQueue(d) for d in depths], bind=False)
+        for i, (part, deadline) in enumerate(batch):
+            m = msg(i, partition=part, deadline=deadline)
+            a = ref.pick_msg(m, queues)
+            b = vec.pick_view(m, view)
+            assert a == b, (name, i, depths)
+            queues[a]._d += 1
+            view.note(b, 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(depths=depths_st, batch=batch_st)
+def test_pick_batch_matches_sequential_scalar(depths, batch):
+    """Property: one pick_batch call equals the scalar pick/enqueue loop
+    over the scheduler's own admission order (EDF reorders; sort must be
+    stable so equal deadlines stay FIFO)."""
+    for name in scheduler_names():
+        ref, vec = scheduler_pair(name)
+        msgs = [msg(i, partition=p, deadline=d)
+                for i, (p, d) in enumerate(batch)]
+        ordered_ref = ref.order(list(msgs))
+        ordered_vec = vec.order(list(msgs))
+        assert [id(m) for m in ordered_ref] == [id(m) for m in ordered_vec]
+
+        queues = [FakeQueue(d) for d in depths]
+        scalar = []
+        for m in ordered_ref:
+            i = ref.pick_msg(m, queues)
+            queues[i]._d += 1
+            scalar.append(i)
+
+        view = LoadView([FakeQueue(d) for d in depths], bind=False)
+        assert vec.pick_batch(ordered_vec, view) == scalar, (name, depths)
+        if not vec.msg_pure:
+            # depth-aware pick_batch plans its own enqueues: the planned
+            # depths must match what the real deliveries would produce
+            assert view.depths.tolist() == [q._d for q in queues], name
+
+
+def test_jsq_ties_break_to_lowest_index():
+    jsq = make_scheduler("jsq")
+    view = LoadView([FakeQueue(d) for d in (2, 0, 0, 2, 0)], bind=False)
+    assert jsq.pick_view(msg(0), view) == 1
+    # heap-simulated batch keeps the lowest-index rotation of the scalar loop
+    assert jsq.pick_batch([msg(i) for i in range(4)], view) == [1, 2, 4, 1]
+
+
+def test_pow2_reset_restores_seeded_stream():
+    """Satellite fix: reset() must reseed, so a rebuilt pool routes
+    exactly like a fresh run (replay determinism for P2C)."""
+    s = PowerOfTwoScheduler(seed=42)
+    queues = [FakeQueue(d) for d in (3, 1, 4, 1, 5)]
+    first = [s.pick(queues) for _ in range(20)]
+    s.reset(len(queues))
+    assert [s.pick(queues) for _ in range(20)] == first
+
+
+def test_round_robin_rewind_rolls_back_aborted_picks():
+    rr = RoundRobinScheduler()
+    view = LoadView([FakeQueue(0) for _ in range(3)], bind=False)
+    assert rr.pick_batch([msg(i) for i in range(5)], view) == [0, 1, 2, 0, 1]
+    rr.rewind(2)  # caller delivered only the first 3
+    assert rr.pick(view.queues) == 0
+
+
+# --- LoadView binding ---------------------------------------------------------
+
+
+def test_bound_view_mirrors_mailbox_traffic():
+    boxes = [Mailbox(f"b{i}") for i in range(3)]
+    view = LoadView(boxes)
+    assert view.fully_bound
+    decreases = []
+    view.on_decrease = decreases.append
+
+    boxes[1].put(msg(0))
+    boxes[1].put(msg(1))
+    boxes[2].put(msg(2))
+    assert view.depths.tolist() == [0, 2, 1]
+    assert boxes[1].get() is not None
+    assert decreases == [1]
+    got = boxes[2].get_many(5)
+    assert len(got) == 1 and view.depths.tolist() == [0, 1, 0]
+    assert decreases == [1, 2]
+
+    # plan() is a private copy: mutating it leaves the bound view alone
+    plan = view.plan()
+    plan.note(0, 10)
+    assert view.depths[0] == 0
+
+    view.detach()
+    boxes[0].put(msg(3))
+    assert view.depths[0] == 0  # no longer mirrored
+
+
+def test_ready_heap_always_returns_first_occurrence_minimum():
+    boxes = [Mailbox(f"h{i}") for i in range(5)]
+    view = LoadView(boxes)
+    heap = ReadyWorkerHeap(view)
+    import random
+    rng = random.Random(13)
+    for step in range(400):
+        i = rng.randrange(5)
+        if rng.random() < 0.55:
+            boxes[i].put(msg(step))
+        else:
+            boxes[i].get()
+        depths = view.depths.tolist()
+        expect = depths.index(min(depths))
+        assert heap.least() == expect, (step, depths)
+
+
+# --- pool dispatch equivalence ------------------------------------------------
+
+
+class IdleWorker(WorkerBase):
+    """Never consumes: mailbox contents show exactly where dispatch
+    landed each message."""
+
+    def step(self, now: float = 0.0) -> int:
+        return 0
+
+
+def _pool(name, scheduler, vectorize, n=6, capacity=0, batch=16):
+    ids = itertools.count()
+    return ElasticPool(
+        name,
+        lambda: IdleWorker(f"{name}:w{next(ids)}",
+                           mailbox_capacity=capacity),
+        scheduler=scheduler,
+        initial_units=n,
+        elastic=False,
+        ingress_capacity=0,
+        dispatch_batch=batch,
+        vectorize=vectorize,
+    )
+
+
+def _landing(pool):
+    return [[m.created_at for m in w.mailbox._q] for w in pool.workers]
+
+
+@pytest.mark.parametrize("name", ["round_robin", "jsq", "pow2", "edf",
+                                  "partition"])
+def test_dispatch_vectorized_equals_scalar(name):
+    a_sched, b_sched = scheduler_pair(name)
+    a = _pool(f"sc-{name}", a_sched, vectorize=False)
+    b = _pool(f"ve-{name}", b_sched, vectorize=True)
+    for i in range(150):
+        m = msg(i, partition=i % 4, deadline=float(i % 7))
+        assert a.offer(m) and b.offer(m)
+        if i % 37 == 0:  # interleave dispatch with arrivals
+            a.step(float(i))
+            b.step(float(i))
+    for t in range(10):
+        a.step(200.0 + t)
+        b.step(200.0 + t)
+    assert _landing(a) == _landing(b)
+    assert a.counter("pool.admitted") == b.counter("pool.admitted") == 150
+    assert b.counter("pool.dispatched") == 150
+
+
+@pytest.mark.parametrize("name", ["jsq", "pow2", "round_robin"])
+def test_dispatch_bounded_overflow_equals_scalar(name):
+    """Capacity-2 mailboxes force the non-guaranteed path: per-message
+    pick_view with ready-heap spill, plus put_front leftovers — still
+    landing-for-landing identical to the scalar reference."""
+    a_sched, b_sched = scheduler_pair(name)
+    a = _pool(f"scb-{name}", a_sched, vectorize=False, capacity=2, batch=8)
+    b = _pool(f"veb-{name}", b_sched, vectorize=True, capacity=2, batch=8)
+    for i in range(40):
+        a.offer(msg(i))
+        b.offer(msg(i))
+    for t in range(6):
+        a.step(float(t))
+        b.step(float(t))
+    assert _landing(a) == _landing(b)
+    assert a.ingress.depth() == b.ingress.depth()
+    assert (a.counter("pool.admitted"), a.counter("pool.shed")) == \
+           (b.counter("pool.admitted"), b.counter("pool.shed"))
+
+
+def test_route_vectorized_equals_scalar():
+    a = _pool("ra", make_scheduler("jsq"), vectorize=False, n=4)
+    b = _pool("rb", make_scheduler("jsq"), vectorize=True, n=4)
+    for i in range(60):
+        a.route(msg(i))
+        b.route(msg(i))
+    assert _landing(a) == _landing(b)
+    assert a.queue_depth() == b.queue_depth() == 60
+
+
+# --- chaos: the ready structure vs membership churn ---------------------------
+
+
+def test_route_skips_dead_worker_and_rebound_view_after_restart():
+    pool = _pool("chaos-dead", make_scheduler("jsq"), vectorize=True, n=4)
+    for i in range(8):
+        pool.route(msg(i))
+    dead = pool.workers[0]
+    dead_box = dead.mailbox
+    before = dead_box.depth()
+    pool.kill_worker(0)
+    for i in range(8, 40):
+        pool.route(msg(i))
+    assert dead_box.depth() == before  # nothing new lands on the corpse
+    # supervisor swap (membership epoch bump) must rebuild the view:
+    now = 0.0
+    for _ in range(8):
+        pool.step(now)
+        now += 1.0
+    assert all(w.alive for w in pool.workers)
+    for i in range(40, 60):
+        pool.route(msg(i))
+    assert pool.queue_depth() == sum(w.mailbox.depth() for w in pool.workers)
+
+
+def test_route_skips_draining_worker_mid_scale_in():
+    pool = _pool("chaos-drain", make_scheduler("jsq"), vectorize=True, n=4)
+    for i in range(8):
+        pool.route(msg(i))
+    victim = pool.workers[2]
+    victim.draining = True  # scale-in marks, then reaps once empty
+    held = victim.mailbox.depth()
+    for i in range(8, 48):
+        pool.route(msg(i))
+    assert victim.mailbox.depth() == held
+
+
+def test_node_failure_relocation_loses_nothing_vectorized():
+    sink = []
+
+    class CountingWorker(WorkerBase):
+        _ids = itertools.count()
+
+        def __init__(self):
+            super().__init__(f"cpw{next(CountingWorker._ids)}")
+
+        def step(self, now: float = 0.0) -> int:
+            m = self.mailbox.get()
+            if m is None:
+                return 0
+            sink.append(m.created_at)
+            return 1
+
+    cluster = Cluster(3, cores=2)
+    pool = ElasticPool(
+        "placed-vec", CountingWorker, scheduler=make_scheduler("jsq"),
+        initial_units=6, elastic=False, heartbeat_timeout=2.0,
+        cluster=cluster, vectorize=True,
+    )
+    for i in range(60):
+        pool.route(msg(i))
+    victim = cluster.nodes[0]
+    cluster.fail(victim)
+    now = 0.0
+    for _ in range(90):
+        pool.step(now)
+        now += 1.0
+    assert sorted(sink) == [float(i) for i in range(60)]
+    assert all(w.node is not None and w.node.up for w in pool.workers)
+    # and the rebuilt view still agrees with reality
+    for i in range(60, 80):
+        pool.route(msg(i))
+    assert pool.queue_depth() == sum(w.mailbox.depth() for w in pool.workers)
+
+
+# --- virtual-consumer forwarding ----------------------------------------------
+
+
+def _forward_run(scheduler_name, vectorize, capacity=0, workers=5, n=64):
+    log = MessageLog()
+    topic = log.create_topic("fwd", 1)
+    for i in range(n):
+        topic.publish(Message(topic="fwd", payload=i, created_at=float(i)))
+    vc = VirtualConsumer("vc", topic, 0,
+                         scheduler_pair(scheduler_name)[0], batch_size=7)
+    vc.vectorize = vectorize
+    boxes = [Mailbox(f"q{i}", capacity=capacity) for i in range(workers)]
+    for r in range(200):
+        vc.step(boxes)
+        if capacity and r % 3 == 2:  # drain so bounded runs terminate
+            for b in boxes:
+                b.get()
+        if vc.lag() == 0 and (not capacity or all(b.depth() == 0
+                                                 for b in boxes)):
+            break
+    return [[m.payload for m in b._q] for b in boxes], vc.offset
+
+
+@pytest.mark.parametrize("name", ["round_robin", "partition", "jsq", "pow2"])
+def test_consumer_forward_vectorized_equals_scalar(name):
+    assert _forward_run(name, True) == _forward_run(name, False)
+
+
+@pytest.mark.parametrize("name", ["round_robin", "jsq"])
+def test_consumer_forward_bounded_overflow_equals_scalar(name):
+    """Overflow mid-batch exercises msg_pure rewind (RR) and the
+    depth-aware fallback (JSQ): offsets and landings stay identical."""
+    assert _forward_run(name, True, capacity=2) == \
+        _forward_run(name, False, capacity=2)
+
+
+# --- dataflow replay: committed offsets bitwise-identical ---------------------
+
+
+def _chain(log, n_msgs):
+    for t in ("in", "mid", "out"):
+        if not log.exists(t):
+            log.create_topic(t, 3)
+    for i in range(n_msgs):
+        log.publish("in", payload=i)
+    graph = StageGraph(log)
+    graph.add(Stage("s0", log, "in", "mid",
+                    process=lambda m: [m.payload + 1],
+                    initial_tasks=2, heartbeat_timeout=2.0, batch_n=8))
+    graph.add(Stage("s1", log, "mid", "out",
+                    process=lambda m: [m.payload * 2],
+                    initial_tasks=2, heartbeat_timeout=2.0, batch_n=8))
+    return graph
+
+
+def _run_chain(vectorize, monkeypatch, kill=True, n_msgs=60):
+    monkeypatch.setattr(VirtualConsumer, "vectorize", vectorize)
+    log = MessageLog()
+    graph = _chain(log, n_msgs)
+    if not vectorize:
+        for s in graph.stages.values():
+            s.pool.vectorize = False
+    now = 0.0
+    for _ in range(4):
+        graph.step(now)
+        now += 1.0
+    if kill:
+        graph.kill_stage("s1")  # restart + replay from committed offsets
+    graph.run_to_completion(now=now)
+    return (graph.committed_offsets(),
+            sorted(graph.stage("s1").outputs()),
+            {name: s.pool.counter("stage.published")
+             for name, s in graph.stages.items()})
+
+
+@pytest.mark.parametrize("kill", [False, True])
+def test_dataflow_commits_identical_scalar_vs_vectorized(monkeypatch, kill):
+    """The replay drill: committed offsets, terminal outputs, and publish
+    counters must be bitwise-identical between the vectorized control
+    plane and the scalar reference — including through a chaos kill whose
+    recovery replays from those very offsets."""
+    vec = _run_chain(True, monkeypatch, kill=kill)
+    scal = _run_chain(False, monkeypatch, kill=kill)
+    assert vec == scal
+    assert vec[1] == sorted((i + 1) * 2 for i in range(60))
+
+
+# --- telemetry ----------------------------------------------------------------
+
+
+def test_step_timer_accumulates_per_stage(monkeypatch):
+    clock = iter(x * 0.5 for x in range(100))
+    timer = StepTimer(clock=lambda: next(clock))
+    with timer.time("s0"):
+        pass
+    with timer.time("s0"):
+        pass
+    with timer.time("s1"):
+        pass
+    snap = timer.snapshot()
+    assert snap["s0"]["calls"] == 2 and snap["s1"]["calls"] == 1
+    assert snap["s0"]["total_s"] == pytest.approx(1.0)
+    timer.reset()
+    assert timer.snapshot() == {}
+
+
+def test_stage_graph_feeds_step_timer(monkeypatch):
+    log = MessageLog()
+    timer = StepTimer()
+    graph = _chain(log, 12)
+    graph.timer = timer
+    graph.run_to_completion()
+    snap = timer.snapshot()
+    assert set(snap) == {"s0", "s1"}
+    assert snap["s0"]["calls"] >= 1
+
+
+def test_dispatch_batch_telemetry_counters():
+    pool = _pool("telem", make_scheduler("jsq"), vectorize=True, batch=16)
+    for i in range(48):
+        pool.offer(msg(i))
+    for t in range(6):
+        pool.step(float(t))
+    dispatched = pool.counter("pool.dispatched")
+    rounds = pool.counter("pool.dispatch_rounds")
+    assert dispatched == 48 and rounds >= 3
+    assert dispatched / rounds <= 16  # realized batch size
