@@ -23,6 +23,19 @@ Three tables:
     restart counts per mode — the regression baseline that
     ``BENCH_serving.json`` freezes for future PRs.
 
+A fourth table (its own bench entry, frozen as ``BENCH_decode.json``):
+
+  * ``decode_saturation`` — tokens/sec at saturation (queue always full,
+    one replica, fixed slots) across the batching grid: gang-admission
+    per-request batching (the static baseline), continuous batching, and
+    continuous + paged KV (full pool and a deliberately tight pool that
+    exercises admission stalls and preemption).  The request mix is
+    bimodal (90% short / 10% long) — the regime where static batching
+    idles most of its slots waiting for the long tail.  The summary row
+    carries the CI perf floor: continuous+paged must hold >= 2x the
+    per-request tokens/tick with p99 no worse, and every paged run must
+    end with zero pages in use.
+
 Stub-model decode (arithmetic next-token rule) keeps a full sweep under
 ~30 s on CPU while preserving real queueing dynamics: every request still
 flows mailbox -> dispatch -> prefill -> per-tick decode slots.
@@ -38,6 +51,8 @@ import numpy as np
 from repro.core.elastic import AutoscalerConfig
 from repro.models.stub import StubModel
 from repro.serving import ElasticServingPool, Request, ServingJob
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.kv_cache import PagedSpec
 
 POLICIES = ("fcfs", "jsq", "pow2")
 SEEDS = (0, 1, 2)
@@ -152,6 +167,98 @@ def mode_run(model, params, mode: str, seed: int = 0,
         "readmitted": pool.metrics.value("serve.readmitted"),
         "scale_events": len(pool.controller.scale_events),
     }
+
+
+# ---------------------------------------------------------------------------
+# decode saturation grid (frozen as BENCH_decode.json)
+# ---------------------------------------------------------------------------
+
+SAT_SLOTS = 8
+SAT_MAX_LEN = 64
+SAT_PAGE = 8
+
+
+def saturation_workload(seed: int = 7, n: int = 120):
+    """Bimodal prompts at time zero: 90% short (4 new tokens), 10% long
+    (48) — the mix where gang admission leaves most slots idle."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        plen = int(rng.integers(2, 5))
+        prompt = [int(x) for x in rng.integers(1, 90, plen)]
+        out.append((prompt, 48 if rng.random() < 0.1 else 4))
+    return out
+
+
+def _saturation_run(label: str, *, admission: str,
+                    paged_pages: int = 0) -> Dict:
+    model = StubModel()
+    params = model.init(jax.random.PRNGKey(0))
+    paged = (
+        PagedSpec(num_pages=paged_pages, page_size=SAT_PAGE)
+        if paged_pages else None
+    )
+    bat = ContinuousBatcher(
+        model, params, slots=SAT_SLOTS, max_len=SAT_MAX_LEN,
+        paged=paged, admission=admission,
+    )
+    for prompt, n_tok in saturation_workload():
+        bat.submit(Request(prompt=prompt, max_new_tokens=n_tok), now=0.0)
+    tokens, t = 0, 0
+    while bat.occupancy() > 0 or bat.queue_depth() > 0:
+        tokens += bat.step(float(t))
+        t += 1
+        if t >= 50_000:
+            break
+    lat = np.array([r.completed_at - r.enqueued_at for r in bat.completed])
+    return {
+        "table": "decode_saturation",
+        "mode": label,
+        "completed": len(bat.completed),
+        "tokens": tokens,
+        "ticks": t,
+        "tokens_per_tick": round(tokens / max(t, 1), 3),
+        "p50_ticks": round(float(np.percentile(lat, 50)), 1),
+        "p99_ticks": round(float(np.percentile(lat, 99)), 1),
+        "preemptions": bat.preemptions,
+        "admit_stalls": bat.admit_stalls,
+        "page_high_watermark": (
+            bat.page_pool.high_watermark if bat.page_pool else 0
+        ),
+        "pages_in_use_after": bat.page_pool.in_use if bat.page_pool else 0,
+    }
+
+
+def run_decode() -> List[Dict]:
+    full_pool = 1 + SAT_SLOTS * (SAT_MAX_LEN // SAT_PAGE)
+    tight_pool = 1 + SAT_SLOTS * (SAT_MAX_LEN // SAT_PAGE) // 2
+    grid = [
+        ("per_request", dict(admission="per_request")),
+        ("continuous", dict(admission="continuous")),
+        ("continuous+paged", dict(admission="continuous",
+                                  paged_pages=full_pool)),
+        ("continuous+paged-tight", dict(admission="continuous",
+                                        paged_pages=tight_pool)),
+    ]
+    rows = [_saturation_run(label, **kw) for label, kw in grid]
+    base = rows[0]
+    fused = rows[2]
+    speedup = fused["tokens_per_tick"] / max(base["tokens_per_tick"], 1e-9)
+    rows.append({
+        "table": "decode_saturation",
+        "mode": "summary",
+        "speedup_paged_vs_per_request": round(speedup, 2),
+        "p99_ratio_paged_vs_per_request": round(
+            fused["p99_ticks"] / max(base["p99_ticks"], 1e-9), 3
+        ),
+        "meets_2x_floor": bool(speedup >= 2.0),
+        "p99_no_worse": bool(fused["p99_ticks"] <= base["p99_ticks"]),
+        "zero_leaked_pages": bool(all(
+            r["pages_in_use_after"] == 0 for r in rows
+            if r["mode"].startswith("continuous+paged")
+        )),
+    })
+    return rows
 
 
 def run() -> List[Dict]:

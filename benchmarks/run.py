@@ -5,6 +5,8 @@
   bench_completion  — Fig. 11 / Eq. (1)-(2) (+ beyond-paper fix)
   bench_scheduler   — beyond-paper scheduler x capacity sweep
   bench_serving     — elastic serving: admission-policy tails + occupancy
+  decode (bench_serving.run_decode) — tokens/tick at saturation across
+                      the batching grid (per-request vs continuous+paged)
   bench_training    — elastic training: tokens/sec across DP + recovery
   bench_dataflow    — multi-stage chains: 1 vs 3 stages, mid-chain kill,
                       and the backpressure-throttle lag experiment
@@ -67,6 +69,7 @@ def main() -> None:
         "completion": bench_completion.run,
         "scheduler": bench_scheduler.run,
         "serving": bench_serving.run,
+        "decode": bench_serving.run_decode,
         "training": bench_training.run,
         "dataflow": bench_dataflow.run,
         "controlplane": bench_controlplane.run,
@@ -86,7 +89,7 @@ def main() -> None:
         all_rows.extend(rows)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", flush=True)
-        if name in ("serving", "training", "dataflow", "failure",
+        if name in ("serving", "decode", "training", "dataflow", "failure",
                     "controlplane"):
             out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
             with open(out, "w") as fh:

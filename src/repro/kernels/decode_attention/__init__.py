@@ -1,2 +1,12 @@
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (
+    align_block_k,
+    decode_attention,
+    paged_decode_attention,
+    paged_kv_append,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    gather_pages,
+    paged_decode_attention_ref,
+    paged_kv_append_ref,
+)

@@ -1,4 +1,4 @@
-"""Single-token decode attention kernel (TPU Pallas).
+"""Single-token decode attention kernels (TPU Pallas): dense and paged.
 
 Decode is memory-bound: the whole KV cache streams HBM->VMEM once per
 step while compute is a handful of GEMVs.  The kernel therefore optimizes
@@ -12,6 +12,20 @@ Running softmax stats (m, l) and the (G, d) accumulator sit in VMEM
 scratch across the sequential S-steps, exactly like the flash kernel.
 kv_len masking handles ragged batches (continuous batching feeds
 sequences of different lengths).
+
+The **paged** variants replace the per-sequence dense cache
+``[B, S, Hkv, D]`` with a shared page pool ``[P, page_size, Hkv, D]``
+plus a per-sequence page table ``[B, pages_per_seq]`` — the serving
+layer allocates pages per token tick (continuous batching) instead of
+reserving max_len rows per slot.  The page table and kv_len ride in as
+scalar-prefetch operands (``pltpu.PrefetchScalarGridSpec``) so the
+BlockSpec index maps gather the right K/V page for every grid step —
+the gather happens in the DMA schedule, never as a materialized
+``k_pages[page_table]`` copy.  ``paged_kv_append`` writes one new
+token's K/V into its page in place (``input_output_aliases``), so the
+per-tick cache update is O(1) rows, not an O(S) re-materialization.
+The dense kernel above stays the bitwise reference path (the
+``vectorize=False`` pattern of the vectorized control plane).
 """
 
 from __future__ import annotations
@@ -125,3 +139,201 @@ def decode_attention_fwd(
         interpret=interpret,
     )(kv_len.astype(jnp.int32), qg, k_cache, v_cache)
     return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# paged decode: gather K/V pages through a scalar-prefetched page table
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(
+    pt_ref,      # scalar prefetch [B, n_pages] int32 page table
+    kv_len_ref,  # scalar prefetch [B] int32
+    q_ref,       # [1, 1, G, d]
+    k_ref,       # [1, page, 1, d]  (page selected by the index map)
+    v_ref,       # [1, page, 1, d]
+    o_ref,       # [1, 1, G, d]
+    m_ref,       # scratch [G, 1] f32
+    l_ref,       # scratch [G, 1] f32
+    acc_ref,     # scratch [G, d] f32
+    *,
+    sm_scale: float,
+    window: int,
+    page_size: int,
+    kv_steps: int,
+):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kv_len_ref[ib]
+
+    # Pages at or past the valid length are fully masked; skip their
+    # flash update entirely (the DMA still lands — the index map clamps
+    # unallocated table entries to a valid page id on the host side).
+    @pl.when(ik * page_size < kv_len)
+    def _update():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [page, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T) * sm_scale  # [G, page]
+
+        k_pos = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1
+        )
+        mask = k_pos < kv_len
+        if window > 0:
+            mask = mask & (k_pos > kv_len - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+        m_ref[:, 0] = m_cur
+
+    @pl.when(ik == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(
+    q: jax.Array,           # [B, H, D]
+    k_pages: jax.Array,     # [P, page_size, Hkv, D] shared page pool
+    v_pages: jax.Array,     # [P, page_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] int32 (page id per logical page)
+    kv_len: jax.Array,      # [B] int32
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    page_size, hkv = k_pages.shape[1], k_pages.shape[2]
+    n_pages = page_table.shape[1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        sm_scale=scale,
+        window=window,
+        page_size=page_size,
+        kv_steps=n_pages,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik, pt, kl: (b_, h_, 0, 0)),
+            # The page-table gather: logical page ik of sequence b_ lives
+            # in pool page pt[b_, ik] — resolved at DMA-schedule time.
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda b_, h_, ik, pt, kl: (pt[b_, ik], 0, h_, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda b_, h_, ik, pt, kl: (pt[b_, ik], 0, h_, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda b_, h_, ik, pt, kl: (b_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32), qg,
+      k_pages, v_pages)
+    return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# paged kv-append: write one token's K/V into its page, in place
+# ---------------------------------------------------------------------------
+
+
+def _kv_append_kernel(
+    pt_ref,      # scalar prefetch [B, n_pages] int32
+    pos_ref,     # scalar prefetch [B] int32 (write position per sequence)
+    k_new_ref,   # [1, Hkv, D]
+    v_new_ref,   # [1, Hkv, D]
+    k_page_ref,  # [1, page, Hkv, D] aliased in/out (the target page)
+    v_page_ref,  # [1, page, Hkv, D] aliased in/out
+    ko_ref,
+    vo_ref,
+    *,
+    page_size: int,
+):
+    del pt_ref, k_page_ref, v_page_ref  # pages arrive via aliased outputs
+    ib = pl.program_id(0)
+    off = pos_ref[ib] % page_size
+    ko_ref[0, pl.ds(off, 1), :, :] = k_new_ref[0][None]
+    vo_ref[0, pl.ds(off, 1), :, :] = v_new_ref[0][None]
+
+
+def paged_kv_append_fwd(
+    k_new: jax.Array,       # [B, Hkv, D] this tick's keys
+    v_new: jax.Array,       # [B, Hkv, D]
+    k_pages: jax.Array,     # [P, page_size, Hkv, D]
+    v_pages: jax.Array,     # [P, page_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] int32
+    pos: jax.Array,         # [B] int32 write positions (== kv_len pre-append)
+    interpret: bool = False,
+) -> "tuple[jax.Array, jax.Array]":
+    b, hkv, d = k_new.shape
+    page_size = k_pages.shape[1]
+
+    kernel = functools.partial(_kv_append_kernel, page_size=page_size)
+    # One grid step per sequence; the index map routes both the aliased
+    # input block and the output block to the page owning position
+    # pos[b], so only that page's row ``pos % page_size`` changes.
+    page_idx = lambda b_, pt, ps: (pt[b_, ps[b_] // page_size], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, hkv, d), lambda b_, pt, ps: (b_, 0, 0)),
+            pl.BlockSpec((1, hkv, d), lambda b_, pt, ps: (b_, 0, 0)),
+            pl.BlockSpec((1, page_size, hkv, d), page_idx),
+            pl.BlockSpec((1, page_size, hkv, d), page_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, page_size, hkv, d), page_idx),
+            pl.BlockSpec((1, page_size, hkv, d), page_idx),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # Operand indices count the scalar-prefetch args: 2, 3 are k_new,
+        # v_new; 4, 5 the page pools — aliased so the update is in place.
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32),
+      k_new, v_new, k_pages, v_pages)

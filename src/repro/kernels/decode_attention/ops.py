@@ -1,4 +1,21 @@
-"""Public wrapper for the decode attention kernel."""
+"""Public wrappers for the decode attention kernels (dense and paged).
+
+Validation happens here, eagerly, before anything is traced:
+
+  * ``kv_len`` / ``page_table`` must be integer-typed — a float length
+    silently truncates toward whatever ``astype(int32)`` does, so it is
+    rejected with a ``TypeError`` instead of cast.
+  * Concrete (non-tracer) ``kv_len`` values are range-checked against
+    the cache: ``kv_len > S`` would *silently attend garbage rows* (the
+    kernel masks ``k_pos < kv_len`` — rows in ``[S, kv_len)`` simply do
+    not exist, so nothing masks them out of a bigger cache).  Traced
+    values cannot be inspected; they are clamped defensively instead.
+  * ``block_k`` is aligned to the TPU lane width (128) rather than a
+    bare ``min(block_k, S)``: the largest multiple of 128 that divides
+    ``S`` and fits the request, falling back to the largest divisor of
+    ``S`` when ``S`` itself is not 128-aligned (interpret-mode tests use
+    such shapes; hardware callers should keep ``S % 128 == 0``).
+"""
 
 from __future__ import annotations
 
@@ -6,14 +23,73 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_fwd,
+    paged_decode_attention_fwd,
+    paged_kv_append_fwd,
+)
+
+LANE = 128
+
+
+def _require_int(name: str, arr: jax.Array) -> jax.Array:
+    if not jnp.issubdtype(arr.dtype, jnp.integer):
+        raise TypeError(
+            f"{name} must be integer-typed (got {arr.dtype}); a float "
+            "length would be truncated silently"
+        )
+    return arr.astype(jnp.int32)
+
+
+def _check_concrete_range(name: str, arr: jax.Array, upper: int) -> None:
+    """Range-check eager values; traced values pass (clamped later)."""
+    if isinstance(arr, jax.core.Tracer):
+        return
+    vals = np.asarray(arr)
+    if vals.size == 0:
+        return
+    if vals.min() < 0:
+        raise ValueError(f"{name} has negative entries (min={vals.min()})")
+    if vals.max() > upper:
+        raise ValueError(
+            f"{name} exceeds the cache: max={vals.max()} > {upper}; the "
+            "kernel would silently attend rows that do not exist"
+        )
+
+
+def align_block_k(block_k: int, s: int) -> int:
+    """Largest hardware-aligned KV block that tiles ``S`` exactly.
+
+    Prefers multiples of the 128-lane width; when ``S`` has no 128-
+    aligned divisor ≤ the request, falls back to the largest divisor of
+    ``S`` that fits (never a bare ``min`` that might not divide S)."""
+    if block_k <= 0:
+        raise ValueError(f"block_k must be positive, got {block_k}")
+    cap = min(block_k, s)
+    aligned = [
+        bk for bk in range(LANE, cap + 1, LANE) if s % bk == 0
+    ]
+    if aligned:
+        return aligned[-1]
+    return max(bk for bk in range(1, cap + 1) if s % bk == 0)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("window", "sm_scale", "block_k", "interpret"),
 )
+def _decode_attention_jit(q, k_cache, v_cache, kv_len, window, sm_scale,
+                          block_k, interpret):
+    return decode_attention_fwd(
+        q, k_cache, v_cache, kv_len,
+        window=window, sm_scale=sm_scale, block_k=block_k,
+        interpret=interpret,
+    )
+
+
 def decode_attention(
     q: jax.Array,        # [B, H, D]
     k_cache: jax.Array,  # [B, S, Hkv, D]
@@ -28,8 +104,99 @@ def decode_attention(
         raise ValueError("q must be [B, H, D] (one token per sequence)")
     if q.shape[1] % k_cache.shape[2] != 0:
         raise ValueError("num_heads must be a multiple of num_kv_heads")
-    bk = min(block_k, k_cache.shape[1])
-    return decode_attention_fwd(
+    s = k_cache.shape[1]
+    kv_len = _require_int("kv_len", kv_len)
+    _check_concrete_range("kv_len", kv_len, s)
+    kv_len = jnp.clip(kv_len, 0, s)  # traced values: defensive clamp
+    bk = align_block_k(block_k, s)
+    return _decode_attention_jit(
         q, k_cache, v_cache, kv_len,
         window=window, sm_scale=sm_scale, block_k=bk, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# paged wrappers
+# ---------------------------------------------------------------------------
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    """Paged serving paths run everywhere the suite runs: interpret mode
+    is the CPU fallback, compiled Pallas on TPU."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "sm_scale", "interpret")
+)
+def _paged_decode_jit(q, k_pages, v_pages, page_table, kv_len, window,
+                      sm_scale, interpret):
+    return paged_decode_attention_fwd(
+        q, k_pages, v_pages, page_table, kv_len,
+        window=window, sm_scale=sm_scale, interpret=interpret,
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,           # [B, H, D]
+    k_pages: jax.Array,     # [P, page_size, Hkv, D]
+    v_pages: jax.Array,     # [P, page_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] int32
+    kv_len: jax.Array,      # [B]
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if q.ndim != 3:
+        raise ValueError("q must be [B, H, D] (one token per sequence)")
+    if q.shape[1] % k_pages.shape[2] != 0:
+        raise ValueError("num_heads must be a multiple of num_kv_heads")
+    if page_table.ndim != 2 or page_table.shape[0] != q.shape[0]:
+        raise ValueError(
+            f"page_table must be [B, n_pages], got {page_table.shape} "
+            f"for batch {q.shape[0]}"
+        )
+    n_pages, page_size = page_table.shape[1], k_pages.shape[1]
+    kv_len = _require_int("kv_len", kv_len)
+    page_table = _require_int("page_table", page_table)
+    _check_concrete_range("kv_len", kv_len, n_pages * page_size)
+    _check_concrete_range("page_table", page_table, k_pages.shape[0] - 1)
+    kv_len = jnp.clip(kv_len, 0, n_pages * page_size)
+    return _paged_decode_jit(
+        q, k_pages, v_pages, page_table, kv_len,
+        window=window, sm_scale=sm_scale,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kv_append_jit(k_new, v_new, k_pages, v_pages, page_table, pos,
+                   interpret):
+    return paged_kv_append_fwd(
+        k_new, v_new, k_pages, v_pages, page_table, pos,
+        interpret=interpret,
+    )
+
+
+def paged_kv_append(
+    k_new: jax.Array,       # [B, Hkv, D]
+    v_new: jax.Array,       # [B, Hkv, D]
+    k_pages: jax.Array,     # [P, page_size, Hkv, D]
+    v_pages: jax.Array,     # [P, page_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] int32
+    pos: jax.Array,         # [B] write positions (kv_len before append)
+    interpret: Optional[bool] = None,
+) -> "tuple[jax.Array, jax.Array]":
+    if k_new.ndim != 3:
+        raise ValueError("k_new must be [B, Hkv, D] (one token per sequence)")
+    n_pages, page_size = page_table.shape[1], k_pages.shape[1]
+    pos = _require_int("pos", pos)
+    page_table = _require_int("page_table", page_table)
+    _check_concrete_range("pos", pos, n_pages * page_size - 1)
+    _check_concrete_range("page_table", page_table, k_pages.shape[0] - 1)
+    return _kv_append_jit(
+        k_new, v_new, k_pages, v_pages, page_table, pos,
+        interpret=_auto_interpret(interpret),
     )

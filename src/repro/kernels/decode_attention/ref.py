@@ -30,4 +30,63 @@ def decode_attention_ref(
     logits = jnp.where(mask[:, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    # kv_len == 0 (fresh slot): no valid position exists, so the output
+    # is zero by convention — matching the kernel, whose running softmax
+    # never accumulates anything.  A bare softmax over an all-masked row
+    # would instead return a uniform mixture of garbage.
+    any_valid = mask.any(axis=-1)[:, None, None, None]
+    out = jnp.where(any_valid, out, 0.0)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged reference path: gather pages to a dense cache, reuse the oracle
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize the dense per-sequence cache a page table describes.
+
+    pages [P, page, Hkv, D] + table [B, n] -> [B, n*page, Hkv, D].  This
+    is the *reference* semantics of the paged kernel's DMA gather — the
+    kernel never builds this array."""
+    b, n = page_table.shape
+    page = pages.shape[1]
+    dense = pages[page_table]  # [B, n, page, Hkv, D]
+    return dense.reshape(b, n * page, *pages.shape[2:])
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,           # [B, H, D]
+    k_pages: jax.Array,     # [P, page, Hkv, D]
+    v_pages: jax.Array,     # [P, page, Hkv, D]
+    page_table: jax.Array,  # [B, n] int32
+    kv_len: jax.Array,      # [B]
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    k_dense = gather_pages(k_pages, page_table)
+    v_dense = gather_pages(v_pages, page_table)
+    return decode_attention_ref(
+        q, k_dense, v_dense, kv_len, window=window, sm_scale=sm_scale
+    )
+
+
+def paged_kv_append_ref(
+    k_new: jax.Array,       # [B, Hkv, D]
+    v_new: jax.Array,       # [B, Hkv, D]
+    k_pages: jax.Array,     # [P, page, Hkv, D]
+    v_pages: jax.Array,     # [P, page, Hkv, D]
+    page_table: jax.Array,  # [B, n] int32
+    pos: jax.Array,         # [B] write positions
+) -> "tuple[jax.Array, jax.Array]":
+    """Scatter semantics of the in-place append kernel (functional)."""
+    page = k_pages.shape[1]
+    b = k_new.shape[0]
+    rows = jnp.arange(b)
+    target_page = page_table[rows, pos // page]  # [B]
+    offset = pos % page
+    return (
+        k_pages.at[target_page, offset].set(k_new),
+        v_pages.at[target_page, offset].set(v_new),
+    )

@@ -87,13 +87,38 @@ def main(argv=None) -> int:
                          "here (survives process death)")
     ap.add_argument("--partitions", type=int, default=2,
                     help="with --log-backed: requests-topic partitions")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: slots hold only the pages their "
+                         "request fills (shared pool + page tables)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="with --paged: pool pages per replica incl. the "
+                         "reserved scratch page (0 = enough for all slots)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="with --paged: tokens per KV page")
+    ap.add_argument("--admission", default="continuous",
+                    choices=("continuous", "per_request"),
+                    help="per_request = gang admission (static-batching "
+                         "baseline for the bench grid)")
+    ap.add_argument("--split-prefill", action="store_true",
+                    help="with --log-backed: run prefill as its own "
+                         "elastic stage (prefill/decode disaggregation)")
     add_chaos_flags(ap, fail_interval=15.0, fail_restart=8.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cluster, engine, injector = build_cluster(args)
     model, params, vocab = build(args)
+    paged = None
+    if args.paged:
+        from repro.models.layers import PagedSpec
+
+        pages = args.pages or (
+            1 + args.slots * (-(-args.max_len // args.page_size))
+        )
+        paged = PagedSpec(num_pages=pages, page_size=args.page_size)
     pool_kwargs = dict(
+        paged=paged,
+        admission=args.admission,
         cluster=cluster,
         restart_cost=(args.restart_cost if cluster is not None else 0.0),
         slots_per_replica=args.slots,
@@ -110,7 +135,8 @@ def main(argv=None) -> int:
     )
     if args.log_backed:
         job = ServingJob(model, params, spill_dir=args.spill_dir,
-                         partitions=args.partitions, **pool_kwargs)
+                         partitions=args.partitions,
+                         split_prefill=args.split_prefill, **pool_kwargs)
         pool = job.pool
     else:
         job = None
@@ -216,6 +242,14 @@ def main(argv=None) -> int:
             in pool.controller.scale_events
         ],
     }
+    if paged is not None:
+        summary["paged"] = {
+            "pages": paged.num_pages,
+            "page_size": paged.page_size,
+            "pages_in_use": pool.total_pages_in_use(),
+            "preemptions": sum(r.preemptions for r in pool.replicas),
+            "admit_stalls": sum(r.admit_stalls for r in pool.replicas),
+        }
     if job is not None:
         summary["durable_responses"] = len(job.responses())
         summary["committed_offsets"] = job.committed_offsets()

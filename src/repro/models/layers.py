@@ -21,8 +21,39 @@ import jax.numpy as jnp
 
 from repro.config.base import ArchConfig, AttentionKind, LayerSpec
 from repro.distributed.sharding import shard
+from repro.kernels.decode_attention import (
+    gather_pages,
+    paged_decode_attention,
+    paged_kv_append,
+)
 
 Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Layout of the shared KV page pool (per attention layer).
+
+    ``num_pages`` counts the whole pool including page 0, which is
+    reserved as a scratch page: inactive batcher slots keep an all-zero
+    page table, so their masked-out garbage writes land in page 0 and can
+    never corrupt a live slot's cache.  Real slots are only ever handed
+    pages >= 1 by the serving ``PagePool``.
+    """
+
+    num_pages: int
+    page_size: int = 16
+
+    def __post_init__(self):
+        if self.page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {self.page_size}")
+        if self.num_pages < 2:
+            raise ValueError(
+                "num_pages must be >= 2 (page 0 is the reserved scratch page)"
+            )
+
+    def pages_per_slot(self, max_len: int) -> int:
+        return -(-max_len // self.page_size)
 
 # Attention implementation selector: "dense" materializes the [T, S]
 # score matrix (baseline); "blockwise" runs the flash-attention online-
@@ -159,6 +190,16 @@ def attention(
         k = rope(k, positions, cfg.rope_theta, hd)
 
     new_cache: Optional[Params] = None
+    if cache is not None and not cross and "page_table" in cache:
+        # Paged KV cache (serving hot path): K/V live in a shared page
+        # pool indexed through per-slot page tables; the dense [B, S]
+        # cache is never materialized on the decode fast path.
+        out, new_cache = _paged_attention(
+            q, k, v, positions, cfg, spec, cache, use_pallas
+        )
+        out = out.reshape(b, tq, h, hd)
+        y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+        return shard(y, "batch", "seq_inner", "embed"), new_cache
     if cache is not None and not cross and "slot_pos" in cache:
         # Ring-buffer cache (sliding-window layers): W slots, token at
         # absolute position p lives in slot p % W; slot_pos records each
@@ -323,12 +364,112 @@ def _blockwise_attention(qg, k, v, positions, kv_pos, valid, cfg, window,
     return (acc_f / denom).astype(v.dtype)
 
 
+def _scatter_to_pages(pages: jax.Array, new: jax.Array,
+                      flat_idx: jax.Array) -> jax.Array:
+    """Write token rows into a page pool at flat (page*size+offset) slots.
+
+    pages [P, page, Hkv, hd], new [N, Hkv, hd], flat_idx [N]."""
+    p, page = pages.shape[0], pages.shape[1]
+    flat = pages.reshape((p * page,) + pages.shape[2:])
+    flat = flat.at[flat_idx].set(new)
+    return flat.reshape(pages.shape)
+
+
+def _paged_attention(
+    q: jax.Array,  # [B, Tq, H, hd] (post-rope)
+    k: jax.Array,  # [B, Tq, Hkv, hd] (post-rope)
+    v: jax.Array,  # [B, Tq, Hkv, hd]
+    positions: jax.Array,  # [B, Tq]
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    cache: Params,
+    use_pallas: bool,
+) -> Tuple[jax.Array, Params]:
+    """Attention against a paged KV cache.
+
+    Decode (Tq == 1) with ``use_pallas`` runs the fused Pallas path:
+    in-place kv-append into the page the slot's table points at, then
+    flash-decoding whose KV gather follows the page table inside the
+    kernel's DMA schedule.  Prefill (Tq > 1), and models with a logit
+    softcap (the kernel does not implement it), scatter into the pool
+    and attend over the gathered dense view — the reference semantics.
+    """
+    b, tq, h, hd = q.shape
+    hkv = k.shape[2]
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    page_table, cache_pos = cache["page_table"], cache["pos"]
+    page = k_pages.shape[1]
+    n_slot = page_table.shape[1]
+    s_slot = n_slot * page
+    window = spec.window if spec.attention == AttentionKind.SLIDING else 0
+    kv_len = cache_pos + tq
+
+    if tq == 1 and use_pallas and cfg.logit_softcap == 0:
+        k_pages, v_pages = paged_kv_append(
+            k[:, 0], v[:, 0], k_pages, v_pages, page_table, cache_pos
+        )
+        out = paged_decode_attention(
+            q[:, 0], k_pages, v_pages, page_table, kv_len, window=window
+        )
+        out = out[:, None].astype(v.dtype)  # [B, 1, H, hd]
+    else:
+        # Scatter the chunk through the page tables (prefill, or the
+        # softcap / non-pallas fallback), then attend over the gathered
+        # dense view of each slot's pages.
+        rows = jnp.arange(b)
+        pos_bt = cache_pos[:, None] + jnp.arange(tq, dtype=jnp.int32)[None, :]
+        in_range = pos_bt < s_slot  # overlong chunks: clamp to scratch page 0
+        page_ids = jnp.where(
+            in_range,
+            page_table[rows[:, None], jnp.clip(pos_bt // page, 0, n_slot - 1)],
+            0,
+        )
+        flat_idx = (page_ids * page + pos_bt % page).reshape(-1)
+        k_pages = _scatter_to_pages(
+            k_pages, k.reshape(b * tq, hkv, hd), flat_idx
+        )
+        v_pages = _scatter_to_pages(
+            v_pages, v.reshape(b * tq, hkv, hd), flat_idx
+        )
+        k_dense = gather_pages(k_pages, page_table)
+        v_dense = gather_pages(v_pages, page_table)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(s_slot, dtype=positions.dtype)[None, :], (b, s_slot)
+        )
+        valid = kv_pos < kv_len[:, None]
+        qg = q.reshape(b, tq, hkv, h // hkv, hd)
+        out = _dense_attention(
+            qg, k_dense, v_dense, positions, kv_pos, valid, cfg, window, True
+        )
+
+    new_cache = {
+        "k_pages": k_pages,
+        "v_pages": v_pages,
+        "page_table": page_table,
+        "pos": kv_len,
+    }
+    return out, new_cache
+
+
 def init_attention_cache(
-    cfg: ArchConfig, batch: int, max_len: int, dtype, ring_window: int = 0
+    cfg: ArchConfig, batch: int, max_len: int, dtype, ring_window: int = 0,
+    paged: Optional[PagedSpec] = None,
 ) -> Params:
     """ring_window > 0: W-slot ring buffer for a sliding-window layer
-    (W >= window); otherwise a full-length linear cache."""
+    (W >= window); otherwise a full-length linear cache.  ``paged``
+    overrides both with a shared page pool + per-slot page tables (the
+    table rows start at 0, i.e. pointing at the reserved scratch page —
+    the serving layer assigns real pages at admission)."""
     hd = cfg.resolved_head_dim
+    if paged is not None:
+        n_slot = paged.pages_per_slot(max_len)
+        pool = (paged.num_pages, paged.page_size, cfg.num_kv_heads, hd)
+        return {
+            "k_pages": jnp.zeros(pool, dtype=dtype),
+            "v_pages": jnp.zeros(pool, dtype=dtype),
+            "page_table": jnp.zeros((batch, n_slot), dtype=jnp.int32),
+            "pos": jnp.zeros((batch,), dtype=jnp.int32),
+        }
     size = min(ring_window, max_len) if ring_window > 0 else max_len
     cache = {
         "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype=dtype),

@@ -48,8 +48,13 @@ class StubModel:
         del rng
         return {"w": jnp.zeros((1,), dtype=jnp.float32)}
 
-    def init_cache(self, batch: int, max_len: int, ring: bool = False) -> Params:
-        del ring
+    def init_cache(
+        self, batch: int, max_len: int, ring: bool = False, paged: Any = None
+    ) -> Params:
+        # The stub has no KV cache to page; paged serving still exercises
+        # the PagePool accounting host-side, so the flag is accepted and
+        # ignored (tokens are token-exact either way).
+        del ring, paged
         return {"tokens_seen": jnp.zeros((batch, max_len), dtype=jnp.int32)}
 
     # -- entry points ---------------------------------------------------------

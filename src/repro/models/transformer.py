@@ -55,7 +55,7 @@ def init_block(rng: jax.Array, cfg: ArchConfig, spec: LayerSpec, dtype) -> Param
 
 def init_block_cache(
     cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int, dtype,
-    ring: bool = False,
+    ring: bool = False, paged: Optional[L.PagedSpec] = None,
 ) -> Optional[Params]:
     """Cache entry for one block (None if the block is stateless).
 
@@ -63,10 +63,18 @@ def init_block_cache(
     instead of a max_len linear cache — at 512k context with W=1024 this
     is a 512x cache-memory reduction for every local layer (global
     layers keep the full cache; absolute-position masking makes the two
-    interoperate)."""
+    interoperate).
+
+    ``paged``: every attention layer stores K/V in a shared page pool
+    behind per-slot page tables (serving hot path; overrides ``ring``).
+    The same table values index every layer's pool, so the serving
+    ``PagePool`` does its accounting once per slot, not per layer."""
     if spec.is_mamba:
         return {"mamba": M.init_mamba_cache(cfg, batch, dtype)}
     if spec.attention != AttentionKind.NONE:
+        if paged is not None and spec.attention != AttentionKind.CROSS:
+            return {"attn": L.init_attention_cache(
+                cfg, batch, max_len, dtype, paged=paged)}
         ring_window = 0
         if ring and spec.attention == AttentionKind.SLIDING and spec.window > 0:
             # round up to a multiple of 16 so the seq dim stays shardable
@@ -193,14 +201,15 @@ def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
 
 def init_cache(
     cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
-    ring: bool = False,
+    ring: bool = False, paged: Optional[L.PagedSpec] = None,
 ) -> Params:
     n_periods, remainder = _period_counts(cfg)
     cache: Params = {}
     if n_periods > 0:
         period_caches = []
         for pos, spec in enumerate(cfg.pattern):
-            one = init_block_cache(cfg, spec, batch, max_len, dtype, ring=ring)
+            one = init_block_cache(cfg, spec, batch, max_len, dtype, ring=ring,
+                                   paged=paged)
             if one is None:
                 period_caches.append(None)
             else:
@@ -222,6 +231,7 @@ def init_cache(
                 max_len,
                 dtype,
                 ring=ring,
+                paged=paged,
             )
             for i in range(remainder)
         ]

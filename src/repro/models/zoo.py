@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.config.base import ArchConfig, ShapeSpec
 from repro.models import transformer as T
+from repro.models.layers import PagedSpec
 
 Params = Dict[str, Any]
 
@@ -28,9 +29,12 @@ class Model:
     def init(self, rng: jax.Array) -> Params:
         return T.init_params(rng, self.cfg, dtype=self.param_dtype)
 
-    def init_cache(self, batch: int, max_len: int, ring: bool = False) -> Params:
+    def init_cache(
+        self, batch: int, max_len: int, ring: bool = False,
+        paged: Optional[PagedSpec] = None,
+    ) -> Params:
         return T.init_cache(self.cfg, batch, max_len, dtype=self.compute_dtype,
-                            ring=ring)
+                            ring=ring, paged=paged)
 
     # -- entry points ---------------------------------------------------------
     def train_logits(

@@ -1,4 +1,5 @@
 from repro.serving.serve_step import make_prefill_step, make_decode_step
+from repro.serving.kv_cache import PagePool, PagedSpec
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.elastic import ElasticBatcher, ElasticServingPool
 from repro.serving.job import ServingJob

@@ -11,6 +11,20 @@ Slot state lives in the shared KV cache; admission resets a slot's cache
 rows via the prefill path with the model's cache update at position 0.
 Shapes stay static (slots, max_len) so the decode step never recompiles —
 the elasticity is in *occupancy*, not in tensor shapes (TPU-friendly).
+
+Paged mode (``paged=PagedSpec(...)``) swaps the per-slot ``[max_len]``
+cache rows for a shared page pool behind per-slot page tables: a slot
+holds only the pages its request actually fills, pages are granted one at
+a time as the decode position crosses page boundaries, and a slot that
+cannot get its next page is *preempted* — pages freed, request requeued
+undecoded (Let-It-Crash: recompute beats repair).  Shapes are still
+static (``[P, page, ...]`` pools, ``[slots, n_pages]`` tables), so paging
+changes occupancy economics without ever recompiling the decode step.
+
+``admission="per_request"`` is the measurement baseline: gang admission
+(a batch is admitted only when every slot is empty and runs to
+completion) — classic static batching, what the continuous+paged bench
+grid compares against.
 """
 
 from __future__ import annotations
@@ -25,6 +39,7 @@ import numpy as np
 
 from repro.core.messages import Mailbox, Message
 from repro.models.zoo import Model
+from repro.serving.kv_cache import PagedSpec, PagePool
 from repro.serving.serve_step import make_decode_step, make_prefill_step
 
 _req_ids = itertools.count()
@@ -51,6 +66,12 @@ class Request:
     # deadline is absolute time, priority breaks ties (higher = sooner).
     deadline: Optional[float] = None
     priority: int = 0
+    # Pinned first token, set by the dedicated prefill stage when the
+    # serving job splits prefill from decode (``split_prefill``).  The
+    # decode stage re-materializes the KV state locally at admission but
+    # *trusts* this token — it is durable in the prefilled topic, so a
+    # replayed decode emits the identical stream.
+    first_token: Optional[int] = None
     # filled on completion; enqueued_at is stamped once, on the first
     # successful admission — defer-mode retries and Let-It-Crash
     # re-admissions must not reset the latency clock.
@@ -80,6 +101,8 @@ class ContinuousBatcher:
         prefill_step=None,
         decode_step=None,
         name: str = "serve-requests",
+        paged: Optional[PagedSpec] = None,
+        admission: str = "continuous",  # "continuous" | "per_request"
     ) -> None:
         self.model = model
         self.params = params
@@ -107,7 +130,28 @@ class ContinuousBatcher:
         self.outputs: List[List[int]] = [[] for _ in range(slots)]
         # one shared cache; slot b owns batch row b.  Per-slot prefill uses
         # a single-row cache then writes the rows back.
-        self.cache = model.init_cache(slots, max_len)
+        if admission not in ("continuous", "per_request"):
+            raise ValueError(f"unknown admission mode {admission!r}")
+        self.admission = admission
+        self.paged = paged
+        self.cache = model.init_cache(slots, max_len, paged=paged)
+        self.page_pool: Optional[PagePool] = None
+        if paged is not None:
+            self.page_pool = PagePool(paged)
+            # host mirror of the per-slot page tables; pushed to the
+            # device cache once per dirty tick, not once per mutation.
+            self._page_table = np.zeros(
+                (slots, paged.pages_per_slot(max_len)), dtype=np.int32
+            )
+            self._table_dirty = False
+            self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        # requests that could not be admitted for lack of pages wait here
+        # (ahead of the queue, preserving arrival order) until a finish or
+        # preemption frees pages.
+        self._stalled: List[Message] = []
+        self.preemptions = 0
+        self.admit_stalls = 0
+        self.rejected_oversize = 0
         self.rng = jax.random.PRNGKey(0)
         self.steps = 0
 
@@ -118,7 +162,7 @@ class ContinuousBatcher:
         self.queue.put(Message(topic="serve", payload=req, created_at=now))
 
     def queue_depth(self) -> int:
-        return self.queue.depth()
+        return self.queue.depth() + len(self._stalled)
 
     def occupancy(self) -> int:
         return sum(1 for r in self.active if r is not None)
@@ -131,31 +175,170 @@ class ContinuousBatcher:
         self.target_occupancy = max(0, min(int(n), self.slots))
 
     # -- internals ----------------------------------------------------------
-    def _admit(self, slot: int, req: Request) -> None:
+    def _admit(self, slot: int, req: Request) -> bool:
+        """Prefill ``req`` into slot ``slot``.  Returns False when paged
+        mode cannot grant the prompt's pages (caller stalls the request;
+        slot state is untouched)."""
+        if self.paged is not None:
+            next_tok = self._prefill_paged(slot, req)
+            if next_tok is None:
+                return False
+        else:
+            prompt = jnp.asarray(req.prompt, dtype=jnp.int32)[None, :]
+            row_cache = self.model.init_cache(1, self.max_len)
+            next_tok, row_cache = self.prefill_step(
+                self.params, {"tokens": prompt}, row_cache
+            )
+            # Write the prefilled row into the shared cache at index
+            # `slot`.  Leaves under "periods" are stacked
+            # [n_periods, B, ...] (batch is axis 1); everything else
+            # leads with batch.
+            from jax.tree_util import DictKey, tree_map_with_path
+
+            def write_row(path, full, row):
+                in_periods = any(
+                    isinstance(p, DictKey) and p.key == "periods"
+                    for p in path[:1]
+                )
+                if in_periods:
+                    return full.at[:, slot].set(row[:, 0])
+                return full.at[slot].set(row[0])
+
+            self.cache = tree_map_with_path(write_row, self.cache, row_cache)
+        first = (
+            req.first_token if req.first_token is not None
+            else int(next_tok[0])
+        )
+        self.active[slot] = req
+        self.positions[slot] = len(req.prompt)
+        self.budgets[slot] = req.max_new_tokens - 1
+        self.cur_tokens[slot, 0] = first
+        self.outputs[slot] = [first]
+        return True
+
+    def _prefill_paged(self, slot: int, req: Request) -> Optional[jax.Array]:
+        """Paged admission: allocate the prompt's pages, prefill into a
+        single-row scratch pool, then copy the filled pages into the
+        shared pool at the granted ids.  Returns the first decoded token,
+        or None when the pool cannot grant the pages right now."""
+        assert self.paged is not None and self.page_pool is not None
+        need = self.page_pool.pages_for(len(req.prompt))
+        ids = self.page_pool.alloc(need)
+        if ids is None:
+            return None
         prompt = jnp.asarray(req.prompt, dtype=jnp.int32)[None, :]
-        row_cache = self.model.init_cache(1, self.max_len)
+        # Scratch pool: page 0 reserved + exactly the prompt's pages,
+        # mapped 1:1 onto temp ids 1..need.
+        row_spec = PagedSpec(num_pages=need + 1, page_size=self.paged.page_size)
+        row_cache = self.model.init_cache(1, self.max_len, paged=row_spec)
+        from jax.tree_util import DictKey, tree_map_with_path
+
+        tmp_table = np.zeros((1, row_spec.pages_per_slot(self.max_len)),
+                             dtype=np.int32)
+        tmp_table[0, :need] = np.arange(1, need + 1)
+        tmp_dev = jnp.asarray(tmp_table)
+
+        def leaf_key(path) -> Optional[str]:
+            last = path[-1]
+            return last.key if isinstance(last, DictKey) else None
+
+        def set_tmp_table(path, leaf):
+            if leaf_key(path) == "page_table":
+                return jnp.broadcast_to(tmp_dev, leaf.shape).astype(leaf.dtype)
+            return leaf
+
+        row_cache = tree_map_with_path(set_tmp_table, row_cache)
         next_tok, row_cache = self.prefill_step(
             self.params, {"tokens": prompt}, row_cache
         )
-        # Write the prefilled row into the shared cache at index `slot`.
-        # Leaves under "periods" are stacked [n_periods, B, ...] (batch is
-        # axis 1); everything else leads with batch.
-        from jax.tree_util import DictKey, tree_map_with_path
 
-        def write_row(path, full, row):
+        ids_arr = jnp.asarray(ids, dtype=jnp.int32)
+
+        def merge(path, full, row):
+            key = leaf_key(path)
             in_periods = any(
                 isinstance(p, DictKey) and p.key == "periods" for p in path[:1]
             )
+            if key in ("k_pages", "v_pages"):
+                # copy the scratch pages (temp ids 1..need) onto the
+                # granted shared ids — the gather map, inverted.
+                if in_periods:
+                    return full.at[:, ids_arr].set(row[:, 1:need + 1])
+                return full.at[ids_arr].set(row[1:need + 1])
+            if key == "page_table":
+                return full  # host mirror is authoritative; synced below
             if in_periods:
                 return full.at[:, slot].set(row[:, 0])
             return full.at[slot].set(row[0])
 
-        self.cache = tree_map_with_path(write_row, self.cache, row_cache)
-        self.active[slot] = req
-        self.positions[slot] = len(req.prompt)
-        self.budgets[slot] = req.max_new_tokens - 1
-        self.cur_tokens[slot, 0] = int(next_tok[0])
-        self.outputs[slot] = [int(next_tok[0])]
+        self.cache = tree_map_with_path(merge, self.cache, row_cache)
+        self.slot_pages[slot] = list(ids)
+        self._page_table[slot] = 0
+        self._page_table[slot, :need] = ids
+        self._table_dirty = True
+        return next_tok
+
+    def _release_pages(self, slot: int) -> None:
+        if self.paged is None:
+            return
+        if self.slot_pages[slot]:
+            self.page_pool.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+        self._page_table[slot] = 0  # back to the scratch page
+        self._table_dirty = True
+
+    def _sync_page_table(self) -> None:
+        if self.paged is None or not self._table_dirty:
+            return
+        from jax.tree_util import DictKey, tree_map_with_path
+
+        table = jnp.asarray(self._page_table)
+
+        def set_table(path, leaf):
+            last = path[-1]
+            if isinstance(last, DictKey) and last.key == "page_table":
+                return jnp.broadcast_to(table, leaf.shape).astype(leaf.dtype)
+            return leaf
+
+        self.cache = tree_map_with_path(set_table, self.cache)
+        self._table_dirty = False
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a running slot: free its pages, requeue the request
+        undecoded (ahead of the queue).  The continuous-batching analogue
+        of Let-It-Crash — recompute beats repairing a half-paged slot."""
+        req = self.active[slot]
+        self.active[slot] = None
+        self.outputs[slot] = []
+        self.budgets[slot] = 0
+        self.positions[slot] = 0
+        self._release_pages(slot)
+        self.preemptions += 1
+        if req is not None:
+            req.reset_for_readmission()
+            self._stalled.append(
+                Message(topic="serve", payload=req,
+                        created_at=req.enqueued_at or 0.0)
+            )
+
+    def _ensure_pages(self) -> None:
+        """Grant each active slot the page its next write lands in;
+        preempt slots the pool cannot serve."""
+        if self.paged is None:
+            return
+        for slot in range(self.slots):
+            if self.active[slot] is None:
+                continue
+            idx = int(self.positions[slot]) // self.paged.page_size
+            if idx < len(self.slot_pages[slot]):
+                continue
+            got = self.page_pool.alloc(1)
+            if got is None:
+                self._preempt(slot)
+                continue
+            self._page_table[slot, len(self.slot_pages[slot])] = got[0]
+            self.slot_pages[slot].extend(got)
+            self._table_dirty = True
 
     def _finish(self, slot: int, now: float) -> None:
         req = self.active[slot]
@@ -166,23 +349,60 @@ class ContinuousBatcher:
         self.active[slot] = None
         self.outputs[slot] = []
         self.budgets[slot] = 0
+        self._release_pages(slot)
+
+    def _next_message(self) -> Optional[Message]:
+        """Stalled requests (blocked on pages earlier) go first, keeping
+        arrival order; then the live queue."""
+        if self._stalled:
+            return self._stalled.pop(0)
+        return self.queue.get()
 
     def step(self, now: float = 0.0) -> int:
         """Admit from queue (up to the occupancy target), run one decode
         step for occupied slots."""
         occupied = self.occupancy()
+        # per_request (static batching baseline): gang admission — a new
+        # batch may only form once every slot of the old one has finished.
+        gang_blocked = self.admission == "per_request" and occupied > 0
         for slot in range(self.slots):
-            if occupied >= self.target_occupancy:
+            if gang_blocked or occupied >= self.target_occupancy:
                 break
             if self.active[slot] is None:
-                msg = self.queue.get()
+                msg = self._next_message()
                 if msg is None:
                     break
-                self._admit(slot, msg.payload)
+                req = msg.payload
+                if (
+                    self.paged is not None
+                    and not self.page_pool.fits(
+                        min(len(req.prompt) + req.max_new_tokens, self.max_len)
+                    )
+                ):
+                    # Larger than the whole pool: it could never run even
+                    # with every page to itself — fail it rather than
+                    # livelock through endless preemption.
+                    self.rejected_oversize += 1
+                    req.output = []
+                    req.completed_at = now
+                    self.completed.append(req)
+                    continue
+                if not self._admit(slot, req):
+                    # pool can't grant the prompt's pages right now; wait
+                    # at the head of the line for a finish/preemption.
+                    self.admit_stalls += 1
+                    self._stalled.insert(0, msg)
+                    break
                 occupied += 1
 
         if self.occupancy() == 0:
             return 0
+
+        # Grant each slot the page its next token lands in (may preempt).
+        self._ensure_pages()
+        if self.occupancy() == 0:
+            return 0
+        self._sync_page_table()
 
         tokens = jnp.asarray(self.cur_tokens)
         positions = jnp.asarray(self.positions)
@@ -211,7 +431,7 @@ class ContinuousBatcher:
     def run_until_drained(self, max_steps: int = 10_000, now: float = 0.0) -> int:
         n = 0
         for _ in range(max_steps):
-            if self.occupancy() == 0 and self.queue.depth() == 0:
+            if self.occupancy() == 0 and self.queue_depth() == 0:
                 break
             n += self.step(now)
         return n

@@ -80,9 +80,13 @@ class ElasticBatcher(ContinuousBatcher):
 
     def drain_for_readmission(self) -> List[Message]:
         """Strip every request this replica holds — in-flight slots first
-        (reset to undecoded), then its queue — and clear the slot state.
-        The caller re-admits them; the KV rows are simply abandoned
-        (Let-It-Crash: restart and recompute beats repairing in place)."""
+        (reset to undecoded), then stalled admissions, then its queue —
+        and clear the slot state.  The caller re-admits them; dense KV
+        rows are simply abandoned (Let-It-Crash: restart and recompute
+        beats repairing in place), but paged slots must return their
+        pages to the pool — an abandoned page table would leak the pages
+        for the life of the pool, and the chaos regression asserts
+        ``in_use == 0`` after every drain."""
         out: List[Message] = []
         for slot in range(self.slots):
             req = self.active[slot]
@@ -96,6 +100,9 @@ class ElasticBatcher(ContinuousBatcher):
             self.outputs[slot] = []
             self.budgets[slot] = 0
             self.positions[slot] = 0
+            self._release_pages(slot)
+        out.extend(self._stalled)
+        self._stalled.clear()
         out.extend(self.queue.drain())
         return out
 
@@ -147,6 +154,8 @@ class ElasticServingPool:
         cluster: Optional[Any] = None,
         restart_cost: float = 0.0,
         metrics: Optional[MetricsReplica] = None,
+        paged: Optional[Any] = None,          # models.layers.PagedSpec
+        admission: str = "continuous",
     ) -> None:
         self.model = model
         self.params = params
@@ -155,6 +164,8 @@ class ElasticServingPool:
         self.eos = eos_token
         self.overflow = overflow
         self.policy_name = policy
+        self.paged = paged
+        self.admission = admission
         self.replica_queue_capacity = (
             replica_queue_capacity
             if replica_queue_capacity is not None
@@ -290,6 +301,17 @@ class ElasticServingPool:
             decode_step=self.decode_step,
             name=name,
             speed=speed,
+            paged=self.paged,
+            admission=self.admission,
+        )
+
+    # -- paged-pool accounting (chaos regression hook) ----------------------
+    def total_pages_in_use(self) -> int:
+        """Sum of allocated pages across every live replica's pool — 0
+        once all work has drained (the zero-leak invariant)."""
+        return sum(
+            r.page_pool.in_use for r in self.replicas
+            if r.page_pool is not None
         )
 
     def _collect_completed(self, now: float = 0.0) -> None:

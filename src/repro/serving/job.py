@@ -9,6 +9,19 @@ now as a **two-stage dataflow graph** (``core.dataflow.StageGraph``):
       publish workers → ``responses`` topic (the client-visible wire
       form)
 
+With ``split_prefill=True`` the graph grows a third stage at the front
+(prefill/decode disaggregation):
+
+  ``requests`` → **prefill stage** — elastic function-mode workers run
+      the prompt pass and durably pin ``first_token`` into the wire
+      payload → ``prefilled`` topic → decode stage (as above)
+
+so the autoscaler sizes prefill workers (request lag) and decode
+slot-pools (decode lag) independently.  Decode re-materializes KV
+locally at admission — Let-It-Crash recompute, no KV shipping — but
+trusts the pinned token, so a mid-decode crash + replay produces a
+bitwise-identical response stream at identical committed offsets.
+
 Each stage runs the chained commit-after-publish contract: a requests
 offset commits only once its completion is durably in ``completions``;
 a completions offset commits only once its response is durably in
@@ -47,13 +60,16 @@ from repro.serving.elastic import ElasticServingPool
 
 def request_to_payload(req: Request) -> Dict[str, Any]:
     """JSON-able wire form of a request (what lands in the log)."""
-    return {
+    out = {
         "req_id": req.req_id,
         "prompt": list(req.prompt),
         "max_new_tokens": req.max_new_tokens,
         "deadline": req.deadline,
         "priority": req.priority,
     }
+    if req.first_token is not None:
+        out["first_token"] = req.first_token
+    return out
 
 
 def request_from_payload(d: Dict[str, Any]) -> Request:
@@ -63,6 +79,7 @@ def request_from_payload(d: Dict[str, Any]) -> Request:
         req_id=d["req_id"],
         deadline=d.get("deadline"),
         priority=d.get("priority") or 0,
+        first_token=d.get("first_token"),
     )
 
 
@@ -133,6 +150,9 @@ class ServingJob:
         request_topic: str = "requests",
         response_topic: str = "responses",
         completion_topic: str = "completions",
+        prefill_topic: str = "prefilled",
+        split_prefill: bool = False,
+        prefill_tasks: int = 2,
         partitions: int = 2,
         batch_n: int = 8,
         consumer_scheduler: str = "round_robin",
@@ -149,11 +169,15 @@ class ServingJob:
             else:
                 log = MessageLog(spill_dir=spill_dir)
         self.log = log
-        for topic, n_parts in (
+        self.split_prefill = split_prefill
+        topics = [
             (request_topic, partitions),
             (completion_topic, 1),
             (response_topic, 1),
-        ):
+        ]
+        if split_prefill:
+            topics.insert(1, (prefill_topic, partitions))
+        for topic, n_parts in topics:
             if not log.exists(topic):
                 log.create_topic(topic, n_parts)
         self.requests_topic = log.get(request_topic)
@@ -192,15 +216,42 @@ class ServingJob:
         self._source: Dict[int, tuple] = {}
 
         self.graph = StageGraph(log, backpressure=backpressure)
+        self.prefill_stage = None
+        decode_in = request_topic
+        if split_prefill:
+            # Prefill/decode disaggregation: prompt passes run in their
+            # own elastic stage (the autoscaler grows prefill workers on
+            # request lag, decode slot-pools on decode lag —
+            # independently).  The stage's durable output pins the first
+            # token; the decode stage re-materializes KV pages locally at
+            # admission (Let-It-Crash: recompute beats shipping state)
+            # but emits the pinned token, so a mid-decode replay lands a
+            # bitwise-identical response stream.
+            self.prefill_stage = self.graph.add(Stage(
+                f"prefill:{request_topic}",
+                log,
+                request_topic,
+                prefill_topic,
+                process=self._prefill_payload,
+                key_fn=lambda d: str(d["req_id"]),
+                feed="mailboxes",
+                initial_tasks=prefill_tasks,
+                scheduler=consumer_scheduler,
+                batch_n=batch_n,
+                journal_factory=journal_factory(request_topic),
+                metric_prefix="prefill",
+                worker_noun="prefiller",
+            ))
+            decode_in = prefill_topic
         self.decode_stage = self.graph.add(_DecodeStage(
             self,
-            name=f"serve:{request_topic}",
+            name=f"serve:{decode_in}",
             log=log,
-            in_topic=request_topic,
+            in_topic=decode_in,
             out_topic=completion_topic,
             scheduler=consumer_scheduler,
             batch_n=batch_n,
-            journal_factory=journal_factory(request_topic),
+            journal_factory=journal_factory(decode_in),
         ))
         self.respond_stage = self.graph.add(Stage(
             f"serve:{completion_topic}",
@@ -222,6 +273,24 @@ class ServingJob:
     def _make_response(self, msg: Message) -> List[Dict[str, Any]]:
         self.metrics.incr("serve.responses")
         return [msg.payload]
+
+    def _prefill_payload(self, msg: Message) -> List[Dict[str, Any]]:
+        """Prefill-stage worker body: run the prompt pass, pin the first
+        token into the wire payload.  Deterministic (argmax prefill), so
+        an uncommitted-offset replay recomputes the same token; once the
+        prefilled record is durable, decode never re-derives it."""
+        import jax.numpy as jnp
+
+        d = msg.payload
+        prompt = jnp.asarray(d["prompt"], dtype=jnp.int32)[None, :]
+        row_cache = self.pool.model.init_cache(1, self.pool.max_len)
+        next_tok, _ = self.pool.prefill_step(
+            self.pool.params, {"tokens": prompt}, row_cache
+        )
+        self.metrics.incr("prefill.prompts")
+        out = dict(d)
+        out["first_token"] = int(next_tok[0])
+        return [out]
 
     # -- views ---------------------------------------------------------------
     @property

@@ -8,8 +8,17 @@ import numpy as np
 import pytest
 from _hypothesis_support import given, settings, st
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    paged_decode_attention,
+    paged_kv_append,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    gather_pages,
+    paged_decode_attention_ref,
+    paged_kv_append_ref,
+)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.moe_gating.ops import moe_gating
@@ -146,6 +155,168 @@ def test_decode_attention_matches_flash_with_full_prefix():
     np.testing.assert_allclose(
         np.asarray(dec), np.asarray(flash[:, -1]), rtol=1e-5, atol=1e-5
     )
+
+
+def test_decode_attention_kv_len_zero_emits_zero():
+    """A fresh slot (kv_len == 0) attends to nothing: the defined output
+    is exactly zero — on the kernel AND the reference (a bare softmax
+    over an all-masked row would emit a uniform garbage mixture)."""
+    ks = jax.random.split(K(20), 3)
+    b, s, h, d = 3, 256, 4, 64
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, s, h, d))
+    vc = jax.random.normal(ks[2], (b, s, h, d))
+    kv_len = jnp.asarray([0, 17, 0], dtype=jnp.int32)
+    out = np.asarray(decode_attention(q, kc, vc, kv_len, block_k=128,
+                                      interpret=True))
+    ref = np.asarray(decode_attention_ref(q, kc, vc, kv_len))
+    np.testing.assert_array_equal(out[0], 0.0)
+    np.testing.assert_array_equal(out[2], 0.0)
+    np.testing.assert_array_equal(ref[0], 0.0)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out[1], ref[1], rtol=1e-5, atol=1e-5)
+    assert np.abs(out[1]).max() > 0  # the live row is untouched by the fix
+
+
+def test_decode_attention_kv_len_full_cache():
+    """kv_len == S on every row (a slot that spent its whole budget):
+    no off-by-one at the cache's end."""
+    ks = jax.random.split(K(21), 3)
+    b, s, h, d = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, s, h, d))
+    vc = jax.random.normal(ks[2], (b, s, h, d))
+    kv_len = jnp.full((b,), s, dtype=jnp.int32)
+    out = decode_attention(q, kc, vc, kv_len, block_k=128, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_wrapper_validation():
+    """The wrapper rejects (eagerly, before tracing) the inputs the
+    kernel would otherwise mishandle silently."""
+    ks = jax.random.split(K(22), 3)
+    b, s, h, d = 2, 128, 2, 64
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, s, h, d))
+    vc = jax.random.normal(ks[2], (b, s, h, d))
+    with pytest.raises(TypeError, match="integer-typed"):
+        decode_attention(q, kc, vc, jnp.asarray([4.0, 8.0]), interpret=True)
+    with pytest.raises(ValueError, match="exceeds the cache"):
+        decode_attention(q, kc, vc, jnp.asarray([4, s + 1]), interpret=True)
+    with pytest.raises(ValueError, match="negative"):
+        decode_attention(q, kc, vc, jnp.asarray([-1, 4]), interpret=True)
+    with pytest.raises(ValueError, match="block_k"):
+        decode_attention(q, kc, vc, jnp.asarray([4, 8]), block_k=0,
+                         interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+
+def _random_paged_cache(seed, b, n_slot_pages, page, hkv, d, pool_pages):
+    """Pool tensors + a page table of distinct ids >= 1 (page 0 is the
+    reserved scratch page — real slots never map to it)."""
+    ks = jax.random.split(K(seed), 3)
+    k_pages = jax.random.normal(ks[0], (pool_pages, page, hkv, d))
+    v_pages = jax.random.normal(ks[1], (pool_pages, page, hkv, d))
+    perm = jax.random.permutation(ks[2], jnp.arange(1, pool_pages))
+    table = perm[: b * n_slot_pages].reshape(b, n_slot_pages)
+    return k_pages, v_pages, table.astype(jnp.int32)
+
+
+@pytest.mark.parametrize(
+    "kv_len,window",
+    [
+        ([32, 9, 0], 0),   # full budget / crossing page 1->2 / fresh slot
+        ([32, 17, 8], 6),  # sliding window straddling the 16-boundary
+    ],
+)
+def test_paged_decode_matches_dense_gather(kv_len, window):
+    """Paged kernel == dense kernel == oracle over the gathered cache.
+    The table is a random permutation, so a row's pages are scattered
+    through the pool (the gather really is exercised)."""
+    b, h, hkv, d, page, n = 3, 4, 2, 64, 8, 4  # n*page = 32 tokens/slot
+    kp, vp, table = _random_paged_cache(23, b, n, page, hkv, d, 1 + b * n)
+    q = jax.random.normal(K(24), (b, h, d))
+    kv = jnp.asarray(kv_len, dtype=jnp.int32)
+    out = paged_decode_attention(q, kp, vp, table, kv, window=window,
+                                 interpret=True)
+    k_dense, v_dense = gather_pages(kp, table), gather_pages(vp, table)
+    dense = decode_attention(q, k_dense, v_dense, kv, window=window,
+                             block_k=128, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, table, kv, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_paged_vs_dense_decode_property(seed):
+    """Property: for any page permutation, ragged kv_lens (0..full) and
+    window, the paged kernel equals the dense kernel over the gather."""
+    b, h, hkv, d, page, n = 4, 4, 2, 32, 8, 3
+    kp, vp, table = _random_paged_cache(seed, b, n, page, hkv, d,
+                                        1 + b * n + 2)
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    kv = jnp.asarray(rng.randint(0, n * page + 1, size=b), dtype=jnp.int32)
+    window = int(rng.choice([0, 5, page + 1]))
+    q = jax.random.normal(K(seed % 997), (b, h, d))
+    out = paged_decode_attention(q, kp, vp, table, kv, window=window,
+                                 interpret=True)
+    dense = decode_attention(q, gather_pages(kp, table),
+                             gather_pages(vp, table), kv, window=window,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kv_append_matches_ref_at_page_boundaries():
+    """Append at a page's first row, last row, and mid-page; everything
+    not written stays bitwise identical (in-place aliasing is exact)."""
+    b, hkv, d, page, n = 3, 2, 64, 8, 3
+    kp, vp, table = _random_paged_cache(25, b, n, page, hkv, d, 1 + b * n)
+    ks = jax.random.split(K(26), 2)
+    kn = jax.random.normal(ks[0], (b, hkv, d))
+    vn = jax.random.normal(ks[1], (b, hkv, d))
+    pos = jnp.asarray([0, 7, 8], dtype=jnp.int32)  # start / last-of-0 / first-of-1
+    # ref first: the kernel donates (aliases) the pool buffers.
+    rk, rv = paged_kv_append_ref(kn, vn, kp, vp, table, pos)
+    k2, v2 = paged_kv_append(kn, vn, kp, vp, table, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(rv))
+    k2 = np.asarray(k2)
+    tab = np.asarray(table)
+    for row in range(b):
+        p = int(pos[row])
+        np.testing.assert_array_equal(
+            k2[tab[row, p // page], p % page], np.asarray(kn)[row]
+        )
+
+
+def test_paged_wrapper_validation():
+    b, hkv, d, page, n = 2, 2, 64, 8, 2
+    kp, vp, table = _random_paged_cache(27, b, n, page, hkv, d, 1 + b * n)
+    q = jax.random.normal(K(28), (b, 4, d))
+    kv = jnp.asarray([3, 5], dtype=jnp.int32)
+    with pytest.raises(TypeError, match="integer-typed"):
+        paged_decode_attention(q, kp, vp, table.astype(jnp.float32), kv,
+                               interpret=True)
+    with pytest.raises(ValueError, match="exceeds the cache"):
+        # kv_len beyond what the table can address
+        paged_decode_attention(q, kp, vp, table,
+                               jnp.asarray([n * page + 1, 0]), interpret=True)
+    with pytest.raises(ValueError, match="exceeds the cache"):
+        # page id beyond the pool
+        bad = table.at[0, 0].set(kp.shape[0])
+        paged_decode_attention(q, kp, vp, bad, kv, interpret=True)
+    with pytest.raises(ValueError, match="page_table must be"):
+        paged_decode_attention(q, kp, vp, table[0], kv, interpret=True)
 
 
 # ---------------------------------------------------------------------------
