@@ -284,8 +284,16 @@ def _kv_append_kernel(
     *,
     page_size: int,
 ):
-    del pt_ref, k_page_ref, v_page_ref  # pages arrive via aliased outputs
+    del pt_ref  # consumed by the index maps
     ib = pl.program_id(0)
+    # ``input_output_aliases`` is XLA buffer donation, not window
+    # initialization: on TPU the Mosaic output windows are write-only and
+    # start undefined (interpret mode happens to seed them from the
+    # donated input, which is why tests alone cannot catch this).  The
+    # whole page block must therefore be written — copy the co-mapped
+    # input page first, then overwrite the one row this token owns.
+    ko_ref[...] = k_page_ref[...]
+    vo_ref[...] = v_page_ref[...]
     off = pos_ref[ib] % page_size
     ko_ref[0, pl.ds(off, 1), :, :] = k_new_ref[0][None]
     vo_ref[0, pl.ds(off, 1), :, :] = v_new_ref[0][None]
@@ -302,12 +310,22 @@ def paged_kv_append_fwd(
 ) -> "tuple[jax.Array, jax.Array]":
     b, hkv, d = k_new.shape
     page_size = k_pages.shape[1]
+    n_pages = page_table.shape[1]
 
     kernel = functools.partial(_kv_append_kernel, page_size=page_size)
     # One grid step per sequence; the index map routes both the aliased
     # input block and the output block to the page owning position
-    # pos[b], so only that page's row ``pos % page_size`` changes.
-    page_idx = lambda b_, pt, ps: (pt[b_, ps[b_] // page_size], 0, 0, 0)
+    # pos[b], so only that page's row ``pos % page_size`` changes.  The
+    # table read is clamped: an idle batcher slot's pos keeps advancing
+    # past ``n_pages * page_size`` (empty slots still ride the static-
+    # shape decode step), and an OOB scalar read is undefined on TPU —
+    # it could resolve to an arbitrary page id and route the idle slot's
+    # garbage write into a live request's page.  Clamped, the write
+    # lands in the slot's own last table entry (the scratch page 0 for
+    # an idle, all-zero table row).
+    page_idx = lambda b_, pt, ps: (
+        pt[b_, jnp.minimum(ps[b_] // page_size, n_pages - 1)], 0, 0, 0
+    )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -163,7 +163,9 @@ def paged_decode_attention(
     page_table = _require_int("page_table", page_table)
     _check_concrete_range("kv_len", kv_len, n_pages * page_size)
     _check_concrete_range("page_table", page_table, k_pages.shape[0] - 1)
+    # traced values: defensive clamps (the jitted serving path)
     kv_len = jnp.clip(kv_len, 0, n_pages * page_size)
+    page_table = jnp.clip(page_table, 0, k_pages.shape[0] - 1)
     return _paged_decode_jit(
         q, k_pages, v_pages, page_table, kv_len,
         window=window, sm_scale=sm_scale,
@@ -196,6 +198,14 @@ def paged_kv_append(
     page_table = _require_int("page_table", page_table)
     _check_concrete_range("pos", pos, n_pages * page_size - 1)
     _check_concrete_range("page_table", page_table, k_pages.shape[0] - 1)
+    # Traced values (the jitted serving path) get the same containment
+    # kv_len gets in paged_decode_attention: an idle slot's cache pos
+    # grows without bound, and unclamped it would walk the kernel's
+    # page-table read off the end of the row.  Clamped, the write lands
+    # in the slot's own last table entry — the scratch page for an
+    # idle (all-zero) table row — never in another slot's pages.
+    pos = jnp.clip(pos, 0, n_pages * page_size - 1)
+    page_table = jnp.clip(page_table, 0, k_pages.shape[0] - 1)
     return _kv_append_jit(
         k_new, v_new, k_pages, v_pages, page_table, pos,
         interpret=_auto_interpret(interpret),

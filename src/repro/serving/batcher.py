@@ -145,13 +145,14 @@ class ContinuousBatcher:
             )
             self._table_dirty = False
             self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
-        # requests that could not be admitted for lack of pages wait here
-        # (ahead of the queue, preserving arrival order) until a finish or
-        # preemption frees pages.
+        # requests that could not be admitted for lack of pages — or were
+        # preempted mid-decode — wait here, ahead of the queue and sorted
+        # by arrival, until a finish or preemption frees pages.
         self._stalled: List[Message] = []
         self.preemptions = 0
         self.admit_stalls = 0
         self.rejected_oversize = 0
+        self.rejected_invalid = 0
         self.rng = jax.random.PRNGKey(0)
         self.steps = 0
 
@@ -286,6 +287,32 @@ class ContinuousBatcher:
             self.slot_pages[slot] = []
         self._page_table[slot] = 0  # back to the scratch page
         self._table_dirty = True
+        self._reset_slot_pos(slot)
+
+    def _reset_slot_pos(self, slot: int) -> None:
+        """Zero the device-cache decode position of a freed slot.
+
+        An empty slot still rides the jit'd decode step (shapes are
+        static), so its cache ``pos`` keeps advancing every tick; left
+        alone it runs past ``n_pages * page_size`` and the kv-append
+        page-table lookup goes out of range (the kernel and wrapper
+        clamp that read defensively, but resetting here keeps the slot
+        well inside its table between admissions)."""
+        from jax.tree_util import DictKey, tree_map_with_path
+
+        def zero(path, leaf):
+            last = path[-1]
+            if not (isinstance(last, DictKey) and last.key == "pos"):
+                return leaf
+            in_periods = any(
+                isinstance(p, DictKey) and p.key == "periods"
+                for p in path[:1]
+            )
+            if in_periods:
+                return leaf.at[:, slot].set(0)
+            return leaf.at[slot].set(0)
+
+        self.cache = tree_map_with_path(zero, self.cache)
 
     def _sync_page_table(self) -> None:
         if self.paged is None or not self._table_dirty:
@@ -303,6 +330,27 @@ class ContinuousBatcher:
         self.cache = tree_map_with_path(set_table, self.cache)
         self._table_dirty = False
 
+    def _stall(self, msg: Message) -> None:
+        """Park ``msg`` for retry ahead of the live queue, keeping
+        ``_stalled`` sorted by arrival (enqueued_at, then req_id).  A
+        preempted request is by construction the oldest work in flight —
+        appended at the tail it would requeue behind younger stalled
+        arrivals and become the repeat preemption victim under pressure;
+        sorted insertion preserves the documented arrival-order
+        fairness no matter how entries got here."""
+
+        def key(m: Message):
+            r = m.payload
+            at = r.enqueued_at if r.enqueued_at is not None else m.created_at
+            return (at, r.req_id)
+
+        idx = len(self._stalled)
+        for i, other in enumerate(self._stalled):
+            if key(msg) < key(other):
+                idx = i
+                break
+        self._stalled.insert(idx, msg)
+
     def _preempt(self, slot: int) -> None:
         """Evict a running slot: free its pages, requeue the request
         undecoded (ahead of the queue).  The continuous-batching analogue
@@ -316,7 +364,7 @@ class ContinuousBatcher:
         self.preemptions += 1
         if req is not None:
             req.reset_for_readmission()
-            self._stalled.append(
+            self._stall(
                 Message(topic="serve", payload=req,
                         created_at=req.enqueued_at or 0.0)
             )
@@ -373,6 +421,18 @@ class ContinuousBatcher:
                 if msg is None:
                     break
                 req = msg.payload
+                if not req.prompt or len(req.prompt) > self.max_len - 1:
+                    # Unservable at any pool state: an empty prompt has
+                    # nothing to prefill (and would build a zero-page
+                    # PagedSpec), and a prompt at/over max_len leaves no
+                    # room for even one decoded token (paged mode would
+                    # also overrun the slot's page-table width).  Fail
+                    # fast instead of crashing the tick.
+                    self.rejected_invalid += 1
+                    req.output = []
+                    req.completed_at = now
+                    self.completed.append(req)
+                    continue
                 if (
                     self.paged is not None
                     and not self.page_pool.fits(
@@ -391,7 +451,7 @@ class ContinuousBatcher:
                     # pool can't grant the prompt's pages right now; wait
                     # at the head of the line for a finish/preemption.
                     self.admit_stalls += 1
-                    self._stalled.insert(0, msg)
+                    self._stall(msg)
                     break
                 occupied += 1
 

@@ -282,6 +282,13 @@ class ServingJob:
         import jax.numpy as jnp
 
         d = msg.payload
+        if not d["prompt"]:
+            # Nothing to prefill; forward unpinned so the batcher's
+            # admission guard rejects it cleanly (an empty prompt would
+            # crash the model pass here and wedge the worker in a
+            # Let-It-Crash retry loop).
+            self.metrics.incr("prefill.rejected_empty")
+            return [dict(d)]
         prompt = jnp.asarray(d["prompt"], dtype=jnp.int32)[None, :]
         row_cache = self.pool.model.init_cache(1, self.pool.max_len)
         next_tok, _ = self.pool.prefill_step(

@@ -299,6 +299,37 @@ def test_paged_kv_append_matches_ref_at_page_boundaries():
         )
 
 
+def test_paged_kv_append_traced_oob_pos_lands_in_own_last_page():
+    """Regression: an idle batcher slot's cache pos keeps advancing past
+    ``n_pages * page_size`` (empty slots still ride the static-shape
+    decode step).  Traced (jitted serving path) OOB pos must be clamped
+    so the garbage write lands in the slot's OWN last table entry — the
+    scratch page 0 for an idle, all-zero table row — never via an
+    undefined OOB table read into a live request's pages."""
+    b, hkv, d, page, n = 2, 2, 32, 4, 2
+    kp, vp, table = _random_paged_cache(31, b, n, page, hkv, d, 1 + b * n)
+    table = table.at[1].set(0)  # row 1 idle: back to the scratch page
+    ks = jax.random.split(K(32), 2)
+    kn = jax.random.normal(ks[0], (b, hkv, d))
+    vn = jax.random.normal(ks[1], (b, hkv, d))
+    pos = jnp.asarray([2, n * page + 57], dtype=jnp.int32)
+    before_k = np.asarray(kp)
+    append = jax.jit(
+        lambda *a: paged_kv_append(*a, interpret=True)
+    )  # traced operands: the concrete range-check cannot fire
+    k2, v2 = append(kn, vn, kp, vp, table, pos)
+    k2 = np.asarray(k2)
+    tab = np.asarray(table)
+    # live row 0: written exactly where expected
+    np.testing.assert_array_equal(k2[tab[0, 0], 2], np.asarray(kn)[0])
+    # idle row 1: only the scratch page may have changed — every other
+    # pool page is bitwise identical apart from row 0's single write
+    untouched = [
+        pid for pid in range(1, kp.shape[0]) if pid != tab[0, 0]
+    ]
+    np.testing.assert_array_equal(k2[untouched], before_k[untouched])
+
+
 def test_paged_wrapper_validation():
     b, hkv, d, page, n = 2, 2, 64, 8, 2
     kp, vp, table = _random_paged_cache(27, b, n, page, hkv, d, 1 + b * n)
@@ -317,6 +348,11 @@ def test_paged_wrapper_validation():
         paged_decode_attention(q, kp, vp, bad, kv, interpret=True)
     with pytest.raises(ValueError, match="page_table must be"):
         paged_decode_attention(q, kp, vp, table[0], kv, interpret=True)
+    with pytest.raises(ValueError, match="exceeds the cache"):
+        # concrete append position past the slot's table capacity
+        kn = jax.random.normal(K(29), (b, hkv, d))
+        paged_kv_append(kn, kn, kp, vp, table,
+                        jnp.asarray([0, n * page]), interpret=True)
 
 
 # ---------------------------------------------------------------------------

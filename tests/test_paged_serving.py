@@ -188,6 +188,58 @@ def test_paged_oversize_request_fails_fast(stub):
     assert b.page_pool.in_use == 0 and b.page_pool.leaked() == 0
 
 
+def test_empty_and_overlong_prompts_fail_fast(stub):
+    """Regression: an empty prompt used to build a zero-page PagedSpec
+    (crashing the tick with 'num_pages must be >= 2') and a prompt past
+    max_len overran the scratch page-table width.  Both are unservable
+    at any pool state — they complete empty instead of crashing, and
+    well-formed neighbors are unaffected."""
+    model, params = stub
+    b = make_batcher(stub, num_pages=33, slots=2, max_len=16)
+    ok = Request(prompt=[3, 1], max_new_tokens=4)
+    empty = Request(prompt=[], max_new_tokens=4)
+    long = Request(prompt=[1] * 16, max_new_tokens=4)  # == max_len: no room
+    for r in (empty, ok, long):
+        b.submit(r)
+    b.run_until_drained()
+    assert len(b.completed) == 3
+    by_id = {r.req_id: r for r in b.completed}
+    assert by_id[empty.req_id].output == []
+    assert by_id[long.req_id].output == []
+    assert b.rejected_invalid == 2
+    assert by_id[ok.req_id].output == greedy_reference(
+        model, params, ok.prompt, 4
+    )
+    assert b.page_pool.in_use == 0 and b.page_pool.leaked() == 0
+    # the dense (non-paged) batcher takes the same guard
+    d = ContinuousBatcher(model, params, slots=1, max_len=16)
+    d.submit(Request(prompt=[], max_new_tokens=2))
+    d.run_until_drained()
+    assert d.rejected_invalid == 1 and d.completed[0].output == []
+
+
+def test_stalled_queue_keeps_arrival_order(stub):
+    """Regression: a preempted request used to requeue at the TAIL of
+    the stalled list while failed admissions went to the head — the
+    oldest in-flight request queued behind younger arrivals and became
+    the repeat preemption victim.  Stalling must keep arrival order no
+    matter which path parked the request."""
+    from repro.core.messages import Message
+
+    b = make_batcher(stub, num_pages=9)
+    old = Request(prompt=[1], max_new_tokens=2)
+    young = Request(prompt=[2], max_new_tokens=2)
+    old.enqueued_at, young.enqueued_at = 0.0, 1.0
+    # a failed admission parks the younger request first...
+    b._stall(Message(topic="serve", payload=young, created_at=1.0))
+    # ...then the older running request is preempted: it must go ahead.
+    b._stall(Message(topic="serve", payload=old, created_at=0.0))
+    assert [m.payload.req_id for m in b._stalled] == [
+        old.req_id, young.req_id
+    ]
+    assert b._next_message().payload.req_id == old.req_id
+
+
 # --- chaos regression: Let-It-Crash must return pages -------------------------
 
 
@@ -262,6 +314,25 @@ def test_split_prefill_pins_first_token(stub):
         assert p["first_token"] == greedy_reference(
             model, params, p["prompt"], 1
         )[0]
+
+
+def test_split_prefill_empty_prompt_rejected_not_wedged(stub):
+    """An empty prompt must not crash the prefill-stage worker (which
+    would wedge it in a Let-It-Crash retry loop): it forwards unpinned
+    and the decode batcher rejects it with an empty response, while
+    neighbors decode token-exact."""
+    model, params = stub
+    job = make_job(stub, split_prefill=True)
+    bad = Request(prompt=[], max_new_tokens=3)
+    ok = Request(prompt=[2], max_new_tokens=3)
+    job.submit(bad, now=0.0)
+    job.submit(ok, now=0.0)
+    job.run_until_drained(now=1.0)
+    resp = {r["req_id"]: r for r in job.responses()}
+    assert resp[bad.req_id]["output"] == []
+    assert resp[ok.req_id]["output"] == greedy_reference(
+        model, params, [2], 3
+    )
 
 
 def test_split_prefill_replay_bitwise_identical(stub, tmp_path):

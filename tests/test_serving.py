@@ -111,3 +111,27 @@ def test_paged_batcher_matches_dense_on_real_model(setup):
         assert by_prompt[tuple(p)] == greedy_reference(model, params, p, n_new)
     assert b.page_pool.in_use == 0
     assert b.page_pool.leaked() == 0
+
+
+def test_paged_release_resets_device_cache_pos(setup):
+    """Regression: a freed slot's device-cache ``pos`` used to keep the
+    finished request's length and then grow every tick the slot idled,
+    eventually walking the kv-append page-table lookup off the slot's
+    row.  Releasing a slot must zero its pos across every layer cache."""
+    from jax.tree_util import DictKey, tree_flatten_with_path
+
+    from repro.serving.kv_cache import PagedSpec
+
+    cfg, model, params = setup
+    paged = PagedSpec(num_pages=1 + 4, page_size=8)
+    b = ContinuousBatcher(model, params, slots=1, max_len=32, paged=paged)
+    b.submit(Request(prompt=[5, 9, 2], max_new_tokens=4))
+    b.run_until_drained()
+    assert len(b.completed) == 1
+    pos_leaves = [
+        leaf for path, leaf in tree_flatten_with_path(b.cache)[0]
+        if any(isinstance(p, DictKey) and p.key == "pos" for p in path)
+    ]
+    assert pos_leaves, "paged transformer cache must carry pos leaves"
+    for leaf in pos_leaves:
+        assert int(jnp.max(jnp.abs(leaf))) == 0
