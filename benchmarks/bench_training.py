@@ -1,7 +1,7 @@
 """Elastic training study: tokens/sec across DP degrees and recovery
 time across a mid-run chaos kill, on the ``TrainingJob`` control plane.
 
-Two tables:
+Three tables:
 
   * ``training_throughput`` — the same smoke-arch stream trained at DP
     1/2/4 with one shared jit'd step: tokens/sec wall-clock plus the
@@ -12,6 +12,19 @@ Two tables:
     re-admission counters.  Tick-denominated numbers are deterministic
     in the step-driven tier, so CI can diff them exactly; wall-clock
     tokens/sec is reported but not asserted (hardware varies).
+  * ``training_elastic_ckpt`` — the checkpointing-off-the-critical-path
+    experiment: the same mid-run 2→4 remesh + chaos process kill +
+    resume, once with the legacy synchronous store (mode ``sync``) and
+    once with write-behind sharded snapshots + live handoff (mode
+    ``async_handoff``).  Deterministic columns CI diffs exactly: where
+    each mode resumes (``resume_step``/``resume_source``), how many
+    steps it must replay (``replay_steps``), handoff stream counters,
+    and the sync/async save split (the async mode's claim is
+    ``sync_saves == 0`` — nothing ever blocks the barrier for a disk
+    write).  Wall-clock columns (``ckpt_stall_max_ms``, step-time
+    percentiles) show the jitter the async path removes; CI guards only
+    the within-run stall *ratio*, not absolute times.  Both modes end
+    bitwise-identical (final loss + committed offsets), asserted here.
 
 Frozen to ``BENCH_training.json`` by ``benchmarks/run.py`` — the
 regression baseline future PRs diff against.
@@ -19,12 +32,14 @@ regression baseline future PRs diff against.
 
 from __future__ import annotations
 
+import tempfile
 import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.handoff import StateHandoffChannel
 from repro.config import TrainingConfig, get_arch
 from repro.data.pipeline import build_token_log
 from repro.models.zoo import build_model
@@ -36,6 +51,11 @@ BATCH, SEQ, PARTS = 8, 32, 4
 STEPS = 40
 KILL_AT = 10
 HEARTBEAT = 3.0
+# -- elastic-ckpt scenario constants ----------------------------------
+SCALE_AT = 12        # request the 2→4 remesh once this step has applied
+DIE_AT = 27          # chaos process kill once this step has applied
+CKPT_EVERY = 10
+HANDOFF_EVERY = 5
 
 
 def _rig():
@@ -115,12 +135,104 @@ def recovery_run(rig) -> Dict:
     }
 
 
+def _pct(xs: List[float], q: float) -> float:
+    ys = sorted(xs)
+    return ys[min(int(q * (len(ys) - 1)), len(ys) - 1)] if ys else 0.0
+
+
+def elastic_ckpt_run(rig, mode: str) -> Dict:
+    """One mode of the elastic-ckpt experiment: train at DP 2, remesh
+    to 4 mid-run, chaos-kill the whole process, rebuild with
+    ``resume=True``, finish at exactly ``STEPS``.  ``sync`` is the
+    legacy blocking store; ``async_handoff`` adds write-behind sharded
+    snapshots plus the live state-handoff topic, so the healed process
+    resumes at the last handoff publish (not the last periodic
+    snapshot) and replays only the short delta suffix."""
+    cfg, tcfg, model, step_fn = rig
+    log = build_token_log(
+        cfg.vocab_size, STEPS * BATCH, doc_len=SEQ + 1, partitions=PARTS
+    )
+    is_async = mode == "async_handoff"
+    shards = 2 if is_async else 1
+    ckpt_dir = tempfile.mkdtemp(prefix=f"bench-elastic-{mode}-")
+
+    def make(resume: bool) -> TrainingJob:
+        return TrainingJob(
+            model, cfg, tcfg, log, batch_size=BATCH, seq_len=SEQ,
+            dp=2, max_dp=4, train_step_fn=step_fn,
+            checkpoint_dir=ckpt_dir, checkpoint_every=CKPT_EVERY,
+            async_checkpoint=is_async, ckpt_shards=shards,
+            handoff=StateHandoffChannel(log, shards=shards)
+            if is_async else None,
+            handoff_every=HANDOFF_EVERY if is_async else 0,
+            resume=resume,
+        )
+
+    job = make(resume=False)
+    now, scaled = 0.0, False
+    step_ms: List[float] = []
+    while job.applied_step() < DIE_AT:
+        t0 = time.perf_counter()
+        job.step(now)
+        step_ms.append((time.perf_counter() - t0) * 1e3)
+        if not scaled and job.applied_step() >= SCALE_AT:
+            job.request_scale(4)
+            scaled = True
+        now += 1.0
+        if now > 10_000:
+            break
+    kill_step = job.applied_step()
+    job.kill_process()  # async: queued write-behind work never lands
+    rescales = len(job.scale_log)
+    saves = (job.store.sync_saves, job.store.async_saves)
+    stalls = list(job.ckpt_stalls)
+    hand = job.handoff
+    del job
+
+    healed = make(resume=True)
+    resume_step = healed.applied_step()
+    final = healed.run(STEPS, now=now)
+    return {
+        "table": "training_elastic_ckpt",
+        "dp": 2,
+        "mode": mode,
+        "scale_to": 4,
+        "ckpt_shards": shards,
+        "steps": final,
+        "consumed_docs": sum(healed.committed_offsets().values()),
+        "final_loss": round(healed.losses[-1], 4),
+        "rescales": rescales,
+        "kill_step": kill_step,
+        "resume_step": resume_step,
+        "resume_source": healed.resume_source,
+        "replay_steps": kill_step - resume_step,
+        "handoff_deltas_applied": healed.handoff_deltas_applied,
+        "handoff_states_published": hand.states_published if hand else 0,
+        "handoff_shards_streamed": hand.shards_streamed if hand else 0,
+        "handoff_shards_suppressed": hand.shards_suppressed if hand else 0,
+        "sync_saves": saves[0],
+        "async_saves": saves[1],
+        # wall-clock (informational except the cross-mode ratio CI guards)
+        "ckpt_stall_max_ms": round(max(stalls) * 1e3, 3) if stalls else 0.0,
+        "step_ms_p50": round(_pct(step_ms, 0.50), 2),
+        "step_ms_p99": round(_pct(step_ms, 0.99), 2),
+    }
+
+
 def run() -> List[Dict]:
     rig = _rig()
     rows: List[Dict] = []
     for dp in (1, 2, 4):
         rows.append(throughput_run(rig, dp))
     rows.append(recovery_run(rig))
+    elastic = [elastic_ckpt_run(rig, m) for m in ("sync", "async_handoff")]
+    # The perf claim never trades correctness: both modes must land on
+    # the same step with the same loss and the same committed offsets.
+    a, b = elastic
+    assert (a["steps"], a["final_loss"], a["consumed_docs"]) == (
+        b["steps"], b["final_loss"], b["consumed_docs"]
+    ), f"elastic-ckpt modes diverged: {a} vs {b}"
+    rows.extend(elastic)
     return rows
 
 

@@ -1,1 +1,13 @@
-from repro.checkpoint.store import CheckpointStore, save_pytree, load_pytree
+from repro.checkpoint.store import (
+    CheckpointStore,
+    Ticket,
+    WriteBehind,
+    atomic_write,
+    merge_shards,
+    pack_shard,
+    plan_shards,
+    save_pytree,
+    load_pytree,
+    shard_axes_from_shardings,
+)
+from repro.checkpoint.handoff import StateHandoffChannel, WorkerHandoffChannel

@@ -1,0 +1,256 @@
+"""Live state handoff over a durable topic.
+
+The synchronous elastic move is snapshot → restart → full replay: the
+departing layout writes a disk snapshot on the step barrier and the
+healing layout replays every step since the *last periodic* snapshot.
+Handoff reuses the checkpoint shard machinery to shrink both ends: the
+departing side streams its sharded state through a durable topic at the
+moment of the move, so the healing side does last-delta catch-up — it
+resumes from the exact handoff step instead of a stale snapshot, and
+replays only the (usually empty) suffix published as delta records.
+
+Two channels:
+
+* :class:`StateHandoffChannel` — a whole pytree (train state).  Each
+  publish streams the state as shard records (same ``plan_shards`` /
+  ``pack_shard`` / ``merge_shards`` layout-independence as the store,
+  so publisher and subscriber DP degrees are decoupled) followed by a
+  **commit record, last** — a reader that sees the commit record is
+  guaranteed every shard of that epoch is already in the log, so a
+  publisher killed mid-stream can never hand off a torn state.  Shards
+  whose content digest matches the previous epoch are suppressed (a
+  digest-only reference is published instead): repeated publishes
+  stream only the *deltas*.
+
+* :class:`WorkerHandoffChannel` — a pool worker's in-flight results.
+  A departing worker's processed-but-uncollected work is carried to its
+  replacement instead of being re-admitted and recomputed; carried keys
+  are excluded from readmission so at-least-once redelivery cannot
+  double-apply.
+
+Shard payloads are base64-encoded (topic spill files are JSON lines).
+"""
+
+from __future__ import annotations
+
+import base64
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import (
+    _compress,
+    _decompress,
+    content_digest,
+    merge_shards,
+    pack_shard,
+    plan_shards,
+)
+from repro.core.messages import Message
+from repro.data.topics import MessageLog, Topic
+
+Params = Any
+
+
+class StateHandoffChannel:
+    """Streams whole pytrees (sharded, delta-suppressed, commit-last)
+    through one durable topic partition."""
+
+    def __init__(
+        self,
+        log: MessageLog,
+        topic: str = "state.handoff",
+        *,
+        shards: int = 1,
+        codec: Optional[str] = None,
+    ) -> None:
+        if not log.exists(topic):
+            log.create_topic(topic, 1)
+        self.topic: Topic = log.get(topic)
+        self.topic_name = topic
+        self.shards = max(int(shards), 1)
+        self.codec = codec
+        self._epoch = 0
+        # digest of each shard slot as of the last publish — the delta
+        # suppression table (publisher side only).
+        self._last_digests: Dict[int, str] = {}
+        self.states_published = 0
+        self.shards_streamed = 0
+        self.shards_suppressed = 0
+        self.deltas_published = 0
+
+    def _publish(self, payload: Dict[str, Any]) -> None:
+        self.topic.publish(Message(topic=self.topic_name, payload=payload))
+
+    # -- publisher ----------------------------------------------------------
+    def publish_state(
+        self,
+        state: Params,
+        step: int,
+        meta: Optional[Dict] = None,
+        shard_axes: Optional[Sequence[Optional[int]]] = None,
+    ) -> Dict[str, int]:
+        """Stream one full state: shard records first, commit record
+        last.  Unchanged shards (same content digest as the previous
+        epoch) publish a digest-only reference — the reader resolves
+        them from the earlier epoch's bytes already in the log."""
+        epoch = self._epoch
+        self._epoch += 1
+        leaves, _ = jax.tree.flatten(state)
+        pinned = [np.asarray(x) for x in leaves]
+        plan = plan_shards(pinned, self.shards, shard_axes)
+        streamed = suppressed = 0
+        for k, entries in enumerate(plan):
+            blob = _compress(pack_shard(pinned, entries), self.codec)
+            digest = content_digest(blob)
+            if self._last_digests.get(k) == digest:
+                self._publish({
+                    "kind": "shard", "epoch": epoch, "k": k,
+                    "digest": digest, "data": None,  # delta-suppressed
+                })
+                suppressed += 1
+            else:
+                self._publish({
+                    "kind": "shard", "epoch": epoch, "k": k,
+                    "digest": digest,
+                    "data": base64.b64encode(blob).decode("ascii"),
+                })
+                streamed += 1
+            self._last_digests[k] = digest
+        # Commit record LAST: its presence proves the epoch is complete.
+        self._publish({
+            "kind": "commit", "epoch": epoch, "step": int(step),
+            "num_shards": self.shards, "meta": meta or {},
+            "streamed": streamed, "suppressed": suppressed,
+        })
+        self.states_published += 1
+        self.shards_streamed += streamed
+        self.shards_suppressed += suppressed
+        return {"streamed": streamed, "suppressed": suppressed}
+
+    def publish_delta(self, step: int, data: Optional[Dict] = None) -> None:
+        """A lightweight between-publishes marker (step frontier, stream
+        offsets).  Deltas after the newest commit record measure the
+        catch-up the healing side must replay."""
+        self._publish({"kind": "delta", "step": int(step), "data": data or {}})
+        self.deltas_published += 1
+
+    # -- subscriber ---------------------------------------------------------
+    def _read_all(self) -> List[Dict[str, Any]]:
+        part = self.topic.partitions[0]
+        return [m.payload for m in part.read(0, part.end_offset())]
+
+    def latest_state(
+        self, template: Params
+    ) -> Optional[Tuple[Params, Dict, List[Dict]]]:
+        """Newest *complete* handed-off state: resolve the newest commit
+        record whose every shard's bytes are present (suppressed shards
+        resolve by digest from earlier epochs), newest first.  Returns
+        (state, meta, deltas-after-commit) or None."""
+        records = self._read_all()
+        # (k, digest) -> raw bytes, from every shard record carrying data
+        by_digest: Dict[Tuple[int, str], bytes] = {}
+        shard_digests: Dict[Tuple[int, int], str] = {}  # (epoch, k) -> digest
+        commits: List[Dict[str, Any]] = []
+        for rec in records:
+            if rec["kind"] == "shard":
+                shard_digests[(rec["epoch"], rec["k"])] = rec["digest"]
+                if rec["data"] is not None:
+                    by_digest[(rec["k"], rec["digest"])] = base64.b64decode(
+                        rec["data"]
+                    )
+            elif rec["kind"] == "commit":
+                commits.append(rec)
+        for commit in reversed(commits):
+            epoch, n = commit["epoch"], commit["num_shards"]
+            raws: List[bytes] = []
+            for k in range(n):
+                digest = shard_digests.get((epoch, k))
+                blob = by_digest.get((k, digest)) if digest else None
+                if blob is None:
+                    break  # torn epoch (publisher died mid-stream)
+                raws.append(_decompress(blob))
+            if len(raws) != n:
+                continue
+            try:
+                state = merge_shards(template, raws)
+            except Exception:
+                continue
+            deltas = [
+                r for r in records
+                if r["kind"] == "delta" and r["step"] > commit["step"]
+            ]
+            return state, {"step": commit["step"], **commit["meta"]}, deltas
+        return None
+
+
+class WorkerHandoffChannel:
+    """Carries a departing pool worker's in-flight results to its
+    replacement.  Keys flow through the durable topic (carry / done
+    records — the recovery protocol); the result objects themselves are
+    process-local and ride a side table, as live worker state does.
+    ``key_fn`` maps a message to its handoff key (default: ``msg_id``)
+    so the pool can filter re-admitted messages the carry already
+    covers."""
+
+    def __init__(
+        self,
+        log: MessageLog,
+        topic: str = "worker.handoff",
+        *,
+        key_fn: Optional[Callable[[Message], Any]] = None,
+    ) -> None:
+        if not log.exists(topic):
+            log.create_topic(topic, 1)
+        self.topic: Topic = log.get(topic)
+        self.topic_name = topic
+        self.key_fn = key_fn or (lambda m: m.msg_id)
+        self._live: Dict[Any, Message] = {}
+        self.carried = 0
+        self.recovered = 0
+
+    def _publish(self, payload: Dict[str, Any]) -> None:
+        self.topic.publish(Message(topic=self.topic_name, payload=payload))
+
+    def key_for(self, msg: Message) -> Any:
+        return self.key_fn(msg)
+
+    def stream(self, worker_name: str, msgs: Sequence[Message]) -> List[Any]:
+        """Departing side: carry these in-flight results."""
+        keys = []
+        for msg in msgs:
+            key = self.key_fn(msg)
+            self._live[key] = msg
+            self._publish({
+                "kind": "carry", "worker": worker_name, "key": str(key),
+            })
+            keys.append(key)
+        self.carried += len(keys)
+        return keys
+
+    def recover(self) -> Dict[Any, Message]:
+        """Healing side: every carried-not-done result still available."""
+        part = self.topic.partitions[0]
+        open_keys: Dict[str, None] = {}
+        for m in part.read(0, part.end_offset()):
+            rec = m.payload
+            if rec["kind"] == "carry":
+                open_keys[rec["key"]] = None
+            elif rec["kind"] == "done":
+                for k in rec["keys"]:
+                    open_keys.pop(k, None)
+        out = {
+            key: msg for key, msg in self._live.items()
+            if str(key) in open_keys
+        }
+        self.recovered += len(out)
+        return out
+
+    def mark_done(self, keys: Sequence[Any]) -> None:
+        """Acknowledge carried results the replacement has imported."""
+        if not keys:
+            return
+        self._publish({"kind": "done", "keys": [str(k) for k in keys]})
+        for k in keys:
+            self._live.pop(k, None)

@@ -1,34 +1,57 @@
 """Event-sourced training checkpoints (paper §3.2.2 state management,
-applied to training state).
+applied to training state) — sharded, asynchronous, manifest-committed.
 
 Layout on disk:
-  <dir>/snap-<step>.ckpt      — full pytree snapshot (msgpack + zstd)
-  <dir>/journal.jsonl         — per-step delta events (step, data offsets,
-                                 rng key, metric scalars)
+  <dir>/snap-<step>.ckpt              — legacy single-file snapshot
+  <dir>/shard-<step>-<k>of<n>.ckpt    — one shard of a sharded snapshot
+  <dir>/manifest-<step>.json          — the sharded snapshot's commit
+                                         point (shard list + codec +
+                                         content digests + stream cursor)
+  <dir>/journal.jsonl                 — per-step delta events (step,
+                                         data offsets, metric scalars)
 
-Restore = newest intact snapshot + journal suffix.  The journal carries
-everything needed to resume the *stream* exactly (data offsets are the
-virtual consumers' committed offsets), so a Let-It-Crash restart neither
-skips nor re-trains data.  Snapshot writes are atomic (tmp + rename) and
-the previous snapshot is kept until the new one lands — a crash
-mid-checkpoint can never lose both.
+Restore = newest *intact* snapshot + journal suffix.  A sharded snapshot
+is intact iff its manifest exists and every shard's content digest
+verifies; the manifest is written last (atomic tmp+rename+fsync), so a
+kill at any point mid-write can never produce a torn newest snapshot —
+the reader simply falls back to the previous one.
+
+Sharding: each pytree leaf is split along its partition axis (the first
+dimension the leaf's ``param_shardings`` PartitionSpec shards; axis 0
+when no spec is given) into contiguous slices, and the slices are dealt
+round-robin-by-leaf across shard files.  Every shard entry carries its
+own (leaf index, axis, start, stop) coordinates, so the read-side merge
+reassembles the pytree **bitwise-identically from any shard layout** —
+save at DP=k, load at DP=j, j≠k, through the same manifest.
+
+Asynchrony: with ``async_io=True`` the store owns a single-threaded
+:class:`WriteBehind` worker.  ``save_async`` pins a host copy of the
+state (jax arrays are immutable, so ``np.asarray`` is the pin) and
+returns a :class:`Ticket` immediately — compression, shard writes and
+the manifest land off the caller's critical path, in submission order.
+Journal appends flow through the same worker (``EventJournal`` defers
+its file write), so "journal event for step N is durable" is exactly
+"its ticket is done" — the commit gate ``TrainingJob`` uses to preserve
+commit-after-journal semantics without a synchronous write on the step
+barrier.
 
 Tensor serialization is self-contained (numpy buffers inside msgpack,
-compressed) — no orbax dependency in this container.  Compression prefers
-``zstandard`` when installed and falls back to stdlib ``zlib``; a 4-byte
-codec tag leads every snapshot so either codec can read files written by
-the other (legacy untagged snapshots are recognised by the zstd frame
-magic, anything else is treated as bare zlib).
+compressed) — no orbax dependency in this container.  Compression
+prefers ``zstandard`` when installed and falls back to stdlib ``zlib``;
+a 4-byte codec tag leads every snapshot/shard so either codec can read
+files written by the other.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import queue
 import re
 import threading
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +110,179 @@ def _decompress(blob: bytes) -> bytes:
     return zlib.decompress(blob)
 
 
+def content_digest(blob: bytes) -> str:
+    return "sha256:" + hashlib.sha256(blob).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# atomic durable writes
+# ---------------------------------------------------------------------------
+
+
+def _fsync_dir(directory: str) -> None:
+    """Flush the rename itself (the directory entry) to disk."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform dependent
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - platform dependent
+        pass
+    finally:
+        os.close(fd)
+
+
+def atomic_write(path: str, blob: bytes) -> None:
+    """tmp + fsync + rename + dir-fsync: a kill at any instant leaves
+    either the complete old file or the complete new file, never a torn
+    one.  (Writing in place would let a mid-write kill corrupt the
+    *newest* snapshot — the one restore wants most.)"""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        fh.write(blob)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)  # atomic
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
+# ---------------------------------------------------------------------------
+# the write-behind worker
+# ---------------------------------------------------------------------------
+
+
+class Ticket:
+    """Completion future for one write-behind submission.  ``done()``
+    flips only after the submitted write (journal line, shard file,
+    manifest) is durably on disk — the commit gate the training job
+    polls instead of blocking the step barrier."""
+
+    __slots__ = ("_event", "error", "result")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.result: Any = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def ok(self) -> bool:
+        return self._event.is_set() and self.error is None
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("write-behind ticket not resolved in time")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    def _resolve(self, result: Any = None,
+                 error: Optional[BaseException] = None) -> None:
+        self.result, self.error = result, error
+        self._event.set()
+
+
+_DONE = Ticket()
+_DONE._resolve()
+
+
+class WriteBehind:
+    """Single-threaded FIFO write worker: ``submit`` returns a
+    :class:`Ticket` immediately; the work runs on the worker thread in
+    submission order (so a step's journal line always lands before that
+    step's snapshot manifest).  ``flush`` drains; ``kill`` simulates
+    process death — queued work is discarded, its tickets error out, and
+    nothing further is written."""
+
+    def __init__(self, name: str = "ckpt-write-behind") -> None:
+        self.name = name
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._dead = False
+        # Test/chaos hook: when cleared, the worker stalls before the
+        # next write — lets tests observe "journal not yet durable".
+        self._gate = threading.Event()
+        self._gate.set()
+        self.completed = 0
+
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._run, name=self.name, daemon=True
+            )
+            self._thread.start()
+
+    def submit(self, fn: Callable, *args: Any) -> Ticket:
+        with self._lock:
+            if self._dead:
+                raise RuntimeError(f"write-behind {self.name!r} was killed")
+            ticket = Ticket()
+            self._q.put((fn, args, ticket))
+            self._ensure_thread()
+            return ticket
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            self._gate.wait()
+            fn, args, ticket = item
+            if self._dead:
+                ticket._resolve(error=RuntimeError("write-behind killed"))
+                continue
+            try:
+                ticket._resolve(result=fn(*args))
+                self.completed += 1
+            except BaseException as exc:  # keep the worker alive
+                ticket._resolve(error=exc)
+
+    def pause(self) -> None:
+        """Stall the worker before its next write (test hook)."""
+        self._gate.clear()
+
+    def resume(self) -> None:
+        self._gate.set()
+
+    def flush(self, timeout: float = 60.0) -> None:
+        """Block until everything submitted so far is durably written."""
+        if self._thread is None:
+            return
+        self.submit(lambda: None).wait(timeout)
+
+    def close(self) -> None:
+        if self._thread is None:
+            return
+        self.flush()
+        self._q.put(None)
+        self._thread.join(timeout=10.0)
+        self._thread = None
+
+    def kill(self) -> int:
+        """Simulate process death: discard queued writes (their tickets
+        error), stop the worker.  Returns the number of writes lost."""
+        with self._lock:
+            self._dead = True
+        self._gate.set()
+        lost = 0
+        try:
+            while True:
+                item = self._q.get_nowait()
+                if item is not None:
+                    item[2]._resolve(error=RuntimeError("write-behind killed"))
+                    lost += 1
+        except queue.Empty:
+            pass
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        return lost
+
+
 # ---------------------------------------------------------------------------
 # pytree <-> bytes
 # ---------------------------------------------------------------------------
@@ -116,11 +312,7 @@ def save_pytree(
         "leaves": [_pack_leaf(x) for x in leaves],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = _compress(raw, codec)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as fh:
-        fh.write(comp)
-    os.replace(tmp, path)  # atomic
+    atomic_write(path, _compress(raw, codec))
 
 
 def load_pytree(template: Params, path: str) -> Tuple[Params, Dict]:
@@ -144,31 +336,193 @@ def load_pytree(template: Params, path: str) -> Tuple[Params, Dict]:
 
 
 # ---------------------------------------------------------------------------
+# sharding: plan, pack, merge
+# ---------------------------------------------------------------------------
+
+
+def shard_axes_from_shardings(shardings_tree: Any) -> List[Optional[int]]:
+    """Per-flattened-leaf partition axis derived from the existing
+    ``param_shardings`` assignment: the first dimension the leaf's
+    PartitionSpec shards (None → default axis 0)."""
+    axes: List[Optional[int]] = []
+    for sh in jax.tree.leaves(
+        shardings_tree, is_leaf=lambda x: hasattr(x, "spec")
+    ):
+        spec = getattr(sh, "spec", None)
+        axis = None
+        if spec is not None:
+            for i, entry in enumerate(spec):
+                if entry is not None:
+                    axis = i
+                    break
+        axes.append(axis)
+    return axes
+
+
+def plan_shards(
+    leaves: Sequence[np.ndarray],
+    num_shards: int,
+    shard_axes: Optional[Sequence[Optional[int]]] = None,
+) -> List[List[Dict[str, Any]]]:
+    """Deal every leaf's slices across ``num_shards`` shard files.
+
+    Leaves large enough along their partition axis are split into
+    contiguous ``np.array_split`` slices (one per shard); small or
+    scalar leaves go whole to shard ``leaf_index % num_shards``.  Every
+    entry carries (leaf, axis, start, stop), so the merge is independent
+    of the layout that wrote it."""
+    num_shards = max(int(num_shards), 1)
+    plan: List[List[Dict[str, Any]]] = [[] for _ in range(num_shards)]
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        axis = 0
+        if shard_axes is not None and shard_axes[i] is not None:
+            axis = int(shard_axes[i])
+        if (
+            num_shards > 1
+            and arr.ndim > axis
+            and arr.shape[axis] >= num_shards
+        ):
+            start = 0
+            for k, idx in enumerate(
+                np.array_split(np.arange(arr.shape[axis]), num_shards)
+            ):
+                stop = start + len(idx)
+                plan[k].append(
+                    {"leaf": i, "axis": axis, "start": start, "stop": stop}
+                )
+                start = stop
+        else:
+            plan[i % num_shards].append(
+                {"leaf": i, "axis": -1, "start": 0, "stop": 0}
+            )
+    return plan
+
+
+def pack_shard(
+    leaves: Sequence[np.ndarray], entries: List[Dict[str, Any]]
+) -> bytes:
+    """One shard file's raw payload: the entries plus their buffers."""
+    packed = []
+    for e in entries:
+        arr = np.asarray(leaves[e["leaf"]])
+        if e["axis"] >= 0:
+            sl = [slice(None)] * arr.ndim
+            sl[e["axis"]] = slice(e["start"], e["stop"])
+            arr = np.ascontiguousarray(arr[tuple(sl)])
+        packed.append({
+            **e,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        })
+    return msgpack.packb({"entries": packed}, use_bin_type=True)
+
+
+def merge_shards(
+    template: Params, shard_raws: Sequence[bytes]
+) -> Params:
+    """Read-side merge: reassemble a pytree from any shard layout.
+
+    Entries carry their own coordinates, so shards written at DP=k merge
+    bitwise-identically whether the reader plans for j=k shards or any
+    other j.  Raises on missing coverage or shape mismatch (a torn or
+    incomplete shard set must *fail*, so restore falls back)."""
+    t_leaves, treedef = jax.tree.flatten(template)
+    buffers: List[Optional[np.ndarray]] = [None] * len(t_leaves)
+    covered = [0] * len(t_leaves)
+    for raw in shard_raws:
+        payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+        for e in payload["entries"]:
+            i = e["leaf"]
+            if not 0 <= i < len(t_leaves):
+                raise ValueError(f"shard references unknown leaf {i}")
+            tmpl_shape = list(np.shape(t_leaves[i]))
+            arr = _unpack_leaf(e)
+            if e["axis"] < 0:
+                if list(arr.shape) != tmpl_shape:
+                    raise ValueError(
+                        f"leaf {i} shape mismatch: {arr.shape} vs {tmpl_shape}"
+                    )
+                buffers[i] = arr
+                covered[i] = 1 if not tmpl_shape else tmpl_shape[0] or 1
+            else:
+                axis = e["axis"]
+                if buffers[i] is None:
+                    buffers[i] = np.empty(
+                        tmpl_shape, dtype=np.dtype(e["dtype"])
+                    )
+                sl = [slice(None)] * len(tmpl_shape)
+                sl[axis] = slice(e["start"], e["stop"])
+                buffers[i][tuple(sl)] = arr
+                covered[i] += e["stop"] - e["start"]
+    for i, tmpl in enumerate(t_leaves):
+        shape = list(np.shape(tmpl))
+        want = shape[0] if shape else 1
+        axis_entries = covered[i]
+        if buffers[i] is None or (shape and axis_entries < want):
+            raise ValueError(f"incomplete shard coverage for leaf {i}")
+    return jax.tree.unflatten(
+        treedef, [jnp.asarray(b) for b in buffers]
+    )
+
+
+# ---------------------------------------------------------------------------
 # the store
 # ---------------------------------------------------------------------------
 
 
 class CheckpointStore:
+    """Event-sourced checkpoint store: snapshots (single-file or sharded
+    + manifest) plus a per-step journal.  ``async_io=True`` attaches a
+    write-behind worker: journal appends and ``save_async`` snapshots
+    land off the caller's thread, in order, each with a :class:`Ticket`
+    commit gate.  ``keep_last`` bounds the directory (manifest-aware GC:
+    a GC'd shard is never referenced by a surviving manifest)."""
+
     def __init__(
-        self, directory: str, keep: int = 2, codec: Optional[str] = None
+        self, directory: str, keep: int = 2, codec: Optional[str] = None,
+        *, keep_last: Optional[int] = None, shards: int = 1,
+        async_io: bool = False,
     ) -> None:
         self.directory = directory
-        self.keep = keep
+        self.keep = int(keep_last) if keep_last is not None else keep
         self.codec = codec or default_codec()
+        self.shards = max(int(shards), 1)
         os.makedirs(directory, exist_ok=True)
-        self.journal = EventJournal(os.path.join(directory, "journal.jsonl"))
+        self.writer: Optional[WriteBehind] = (
+            WriteBehind(f"ckpt:{os.path.basename(directory)}")
+            if async_io else None
+        )
+        self.journal = EventJournal(
+            os.path.join(directory, "journal.jsonl"), write_behind=self.writer
+        )
         self._lock = threading.Lock()
+        self.sync_saves = 0
+        self.async_saves = 0
 
     # -- snapshots ------------------------------------------------------------
     def _snap_path(self, step: int) -> str:
         return os.path.join(self.directory, f"snap-{step:010d}.ckpt")
 
+    def _manifest_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"manifest-{step:010d}.json")
+
+    def _shard_path(self, step: int, k: int, n: int) -> str:
+        return os.path.join(
+            self.directory, f"shard-{step:010d}-{k:03d}of{n:03d}.ckpt"
+        )
+
     def snapshots(self) -> List[int]:
-        out = []
+        """All snapshot steps on disk (legacy single-file + manifests)."""
+        out = set()
         for name in os.listdir(self.directory):
             m = re.fullmatch(r"snap-(\d+)\.ckpt", name)
             if m:
-                out.append(int(m.group(1)))
+                out.add(int(m.group(1)))
+            m = re.fullmatch(r"manifest-(\d+)\.json", name)
+            if m:
+                out.add(int(m.group(1)))
         return sorted(out)
 
     def save(
@@ -177,28 +531,108 @@ class CheckpointStore:
         step: int,
         offsets: Optional[Dict[int, int]] = None,
         extra: Optional[Dict] = None,
+        shard_axes: Optional[Sequence[Optional[int]]] = None,
+    ) -> str:
+        """Synchronous snapshot (sharded when ``shards > 1``) — the
+        baseline path that stalls the caller for the full write."""
+        leaves, _ = jax.tree.flatten(state)
+        pinned = [np.asarray(x) for x in leaves]
+        meta = {"step": step, "offsets": offsets or {}, **(extra or {})}
+        self.sync_saves += 1
+        return self._write_snapshot(pinned, state, step, meta, shard_axes)
+
+    def save_async(
+        self,
+        state: Params,
+        step: int,
+        offsets: Optional[Dict[int, int]] = None,
+        extra: Optional[Dict] = None,
+        shard_axes: Optional[Sequence[Optional[int]]] = None,
+    ) -> Ticket:
+        """Write-behind snapshot: pin a host copy now (jax arrays are
+        immutable — ``np.asarray`` is the pin; the jit'd step may race
+        ahead and *replace* the state without disturbing it), hand the
+        write to the worker, return the manifest's commit ticket."""
+        assert self.writer is not None, "store was built with async_io=False"
+        leaves, _ = jax.tree.flatten(state)
+        pinned = [np.asarray(x) for x in leaves]
+        meta = {"step": step, "offsets": offsets or {}, **(extra or {})}
+        # The journal's snapshot marker goes through the same FIFO, so
+        # ordering vs record_step lines is submission order.
+        self.async_saves += 1
+        return self.writer.submit(
+            self._write_snapshot, pinned, state, step, meta, shard_axes
+        )
+
+    def _write_snapshot(
+        self,
+        pinned: List[np.ndarray],
+        template: Params,
+        step: int,
+        meta: Dict,
+        shard_axes: Optional[Sequence[Optional[int]]],
     ) -> str:
         with self._lock:
-            path = self._snap_path(step)
-            meta = {"step": step, "offsets": offsets or {}, **(extra or {})}
-            save_pytree(state, path, meta=meta, codec=self.codec)
+            if self.shards <= 1:
+                path = self._snap_path(step)
+                _, treedef = jax.tree.flatten(template)
+                raw = msgpack.packb(
+                    {
+                        "treedef": str(treedef),
+                        "meta": meta,
+                        "leaves": [_pack_leaf(x) for x in pinned],
+                    },
+                    use_bin_type=True,
+                )
+                atomic_write(path, _compress(raw, self.codec))
+            else:
+                path = self._write_sharded(pinned, step, meta, shard_axes)
             self.journal.append("snapshot", {"step": step})
-            # GC old snapshots, always keeping the newest `keep`.
-            snaps = self.snapshots()
-            for s in snaps[: -self.keep]:
-                try:
-                    os.remove(self._snap_path(s))
-                except OSError:
-                    pass
+            self._gc()
             return path
 
+    def _write_sharded(
+        self,
+        pinned: List[np.ndarray],
+        step: int,
+        meta: Dict,
+        shard_axes: Optional[Sequence[Optional[int]]],
+    ) -> str:
+        n = self.shards
+        plan = plan_shards(pinned, n, shard_axes)
+        shard_records = []
+        for k, entries in enumerate(plan):
+            blob = _compress(pack_shard(pinned, entries), self.codec)
+            spath = self._shard_path(step, k, n)
+            atomic_write(spath, blob)
+            shard_records.append({
+                "file": os.path.basename(spath),
+                "digest": content_digest(blob),
+                "bytes": len(blob),
+                "entries": len(entries),
+            })
+        manifest = {
+            "step": step,
+            "num_shards": n,
+            "codec": self.codec,
+            "leaf_count": len(pinned),
+            "shards": shard_records,
+            "meta": meta,
+        }
+        mpath = self._manifest_path(step)
+        # The manifest is the commit point: it lands last, atomically.
+        atomic_write(mpath, json.dumps(manifest, indent=1).encode())
+        return mpath
+
+    # -- journal --------------------------------------------------------------
     def record_step(
         self,
         step: int,
         offsets: Optional[Dict[int, int]] = None,
         metrics: Optional[Dict[str, float]] = None,
     ) -> Event:
-        """Per-step delta event — cheap, every step."""
+        """Per-step delta event — cheap, every step.  In async mode the
+        file write is deferred; pair with :meth:`last_write_ticket`."""
         return self.journal.append(
             "step",
             {
@@ -208,15 +642,38 @@ class CheckpointStore:
             },
         )
 
+    def last_write_ticket(self) -> Optional[Ticket]:
+        """Ticket of the most recent journal append (None in sync mode,
+        where the append already flushed before returning)."""
+        return self.journal.last_ticket
+
+    # -- restore --------------------------------------------------------------
+    def _load_manifest(self, template: Params, step: int) -> Tuple[Params, Dict]:
+        with open(self._manifest_path(step), "r", encoding="utf-8") as fh:
+            manifest = json.load(fh)
+        raws = []
+        for rec in manifest["shards"]:
+            spath = os.path.join(self.directory, rec["file"])
+            with open(spath, "rb") as fh:
+                blob = fh.read()
+            if content_digest(blob) != rec["digest"]:
+                raise ValueError(f"shard digest mismatch: {rec['file']}")
+            raws.append(_decompress(blob))
+        state = merge_shards(template, raws)
+        return state, manifest["meta"]
+
     def restore_latest(
         self, template: Params
     ) -> Optional[Tuple[Params, Dict, List[Event]]]:
-        """Returns (state, meta, step events after the snapshot) or None."""
-        snaps = self.snapshots()
-        for step in reversed(snaps):  # newest intact snapshot wins
-            path = self._snap_path(step)
+        """Returns (state, meta, step events after the snapshot) or None.
+        Newest intact snapshot wins; torn/corrupt ones (bad digest,
+        missing shard, truncated file) fall back to the previous."""
+        for step in reversed(self.snapshots()):
             try:
-                state, meta = load_pytree(template, path)
+                if os.path.exists(self._manifest_path(step)):
+                    state, meta = self._load_manifest(template, step)
+                else:
+                    state, meta = load_pytree(template, self._snap_path(step))
             except Exception:
                 continue  # truncated/corrupt snapshot: fall back to previous
             events = [
@@ -229,10 +686,79 @@ class CheckpointStore:
 
     def latest_offsets(self) -> Dict[int, int]:
         """Newest stream offsets across snapshot meta + journal suffix."""
-        restore = self.snapshots()
         offsets: Dict[int, int] = {}
         for e in self.journal.all_events():
             if e.kind == "step":
                 for k, v in e.data.get("offsets", {}).items():
                     offsets[int(k)] = v
         return offsets
+
+    # -- retention ------------------------------------------------------------
+    def _gc(self) -> None:
+        """Keep the newest ``keep`` snapshot steps; delete older ones.
+        Manifest-aware: shard files are deleted only when no *surviving*
+        manifest references them (so a live manifest can never point at
+        a GC'd shard), and a doomed step's manifest is removed before
+        its shards (a crash mid-GC leaves dangling shards, never a
+        manifest with missing shards)."""
+        snaps = self.snapshots()
+        doomed = snaps[: -self.keep] if self.keep > 0 else []
+        if not doomed:
+            return
+        survivors = set(snaps) - set(doomed)
+        referenced = set()
+        for step in survivors:
+            mpath = self._manifest_path(step)
+            if os.path.exists(mpath):
+                try:
+                    with open(mpath, "r", encoding="utf-8") as fh:
+                        manifest = json.load(fh)
+                    referenced.update(r["file"] for r in manifest["shards"])
+                except Exception:  # pragma: no cover - defensive
+                    continue
+        for step in doomed:
+            mpath = self._manifest_path(step)
+            shard_files: List[str] = []
+            if os.path.exists(mpath):
+                try:
+                    with open(mpath, "r", encoding="utf-8") as fh:
+                        manifest = json.load(fh)
+                    shard_files = [r["file"] for r in manifest["shards"]]
+                except Exception:
+                    shard_files = []
+                try:
+                    os.remove(mpath)  # manifest first: commit point dies first
+                except OSError:
+                    pass
+            for fname in shard_files:
+                if fname in referenced:
+                    continue
+                try:
+                    os.remove(os.path.join(self.directory, fname))
+                except OSError:
+                    pass
+            try:
+                os.remove(self._snap_path(step))
+            except OSError:
+                pass
+
+    # -- lifecycle ------------------------------------------------------------
+    def flush(self) -> None:
+        """Drain the write-behind worker: every submitted journal line
+        and snapshot is durable when this returns."""
+        if self.writer is not None:
+            self.writer.flush()
+
+    def close(self) -> None:
+        if self.writer is not None:
+            self.writer.close()
+        self.journal.close()
+
+    def kill(self) -> int:
+        """Chaos hook — simulate process death: queued write-behind work
+        is lost (never written), file handles drop.  Returns the number
+        of discarded writes.  A *new* store on the same directory then
+        sees exactly what a crashed process would have left behind."""
+        lost = self.writer.kill() if self.writer is not None else 0
+        self.journal.close()
+        return lost

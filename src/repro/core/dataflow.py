@@ -254,6 +254,7 @@ class Stage:
         heartbeat_timeout: float = 5.0,
         supervisor: Optional[Supervisor] = None,
         journal_factory: Optional[Callable[[int], EventJournal]] = None,
+        journal_write_behind: Optional[Any] = None,
         autoscale_lag_cap: int = 256,
         dedup_window: int = 65536,
         pool: Optional[ElasticPool] = None,
@@ -285,6 +286,24 @@ class Stage:
         self._m_published = f"{metric_prefix}.published"
         self._m_redelivered = f"{metric_prefix}.redelivered"
         self._m_replay_deduped = f"{metric_prefix}.replay_deduped"
+
+        # Write-behind journaling: the commit *decision* stays on the
+        # step (watermark advance, dedup eviction — all in-memory), but
+        # the journal line's file write defers through the shared worker.
+        # ``durable_offsets()`` is the view that gates on the resulting
+        # journal-complete tickets instead of the synchronous write.
+        self._write_behind = journal_write_behind
+        if journal_write_behind is not None and journal_factory is not None:
+            base_factory = journal_factory
+
+            def journal_factory(p, _f=base_factory):  # noqa: F811
+                j = _f(p)
+                j._write_behind = journal_write_behind
+                return j
+
+        # partition -> FIFO of (offset, ticket) awaiting durability
+        self._commit_tickets: Dict[int, deque] = {}
+        self._durable: Dict[int, int] = {}
 
         self.consumers = VirtualConsumerGroup(
             name,
@@ -663,6 +682,13 @@ class Stage:
                 w = self._watermark.get(vc.partition, 0)
                 if w > vc.offset:
                     vc.commit_to(w, now=now)
+                    if self._write_behind is not None:
+                        journal = self.consumers._journals.get(vc.partition)
+                        ticket = getattr(journal, "last_ticket", None)
+                        if ticket is not None:
+                            self._commit_tickets.setdefault(
+                                vc.partition, deque()
+                            ).append((w, ticket))
             self._evict_committed(spans)
 
     # -- views ----------------------------------------------------------------
@@ -675,6 +701,23 @@ class Stage:
 
     def committed_offsets(self) -> Dict[int, int]:
         return {c.partition: c.offset for c in self.consumers.consumers}
+
+    def durable_offsets(self) -> Dict[int, int]:
+        """The commit watermark that is actually on disk.  Without
+        write-behind journaling this equals :meth:`committed_offsets`;
+        with it, each partition's watermark advances only as its
+        journal-complete tickets resolve (FIFO, so the highest done
+        ticket covers everything before it)."""
+        if self._write_behind is None:
+            return self.committed_offsets()
+        for p, dq in self._commit_tickets.items():
+            while dq and dq[0][1].done():
+                offset, ticket = dq.popleft()
+                if ticket.error is None:
+                    self._durable[p] = offset
+        out = {c.partition: self._durable.get(c.partition, 0)
+               for c in self.consumers.consumers}
+        return out
 
     def pending(self) -> int:
         """Work not yet durably downstream: unread input suffix + queued
@@ -725,6 +768,8 @@ class Stage:
         return [self.pool.kill_worker(i) for i in range(len(self.pool.workers))]
 
     def close(self) -> None:
+        if self._write_behind is not None:
+            self._write_behind.flush()
         for journal in self.consumers._journals.values():
             journal.close()
 

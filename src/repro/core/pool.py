@@ -117,6 +117,17 @@ class WorkerBase:
     def drain_for_readmission(self) -> List[Message]:
         return list(self.mailbox.drain())
 
+    def export_carry(self) -> List[Message]:
+        """Processed-but-uncollected results a restart may hand to the
+        replacement instead of re-admitting for recompute.  Exported
+        work must no longer appear in ``drain_for_readmission``."""
+        return []
+
+    def import_carry(self, msgs: Sequence[Message]) -> int:
+        """Adopt carried results from a predecessor.  Returns how many
+        were accepted."""
+        return 0
+
     def set_capacity(self, cap: int) -> None:
         pass
 
@@ -300,6 +311,7 @@ class ElasticPool:
         retire_mode: str = "redistribute",  # or "drain"
         collect: Optional[Callable[[float], None]] = None,
         on_scale: Optional[Callable[[int, int], None]] = None,
+        handoff: Optional[Any] = None,
         throttle: Optional[Callable[[], Optional[int]]] = None,
         cluster: Optional[Cluster] = None,
         restart_cost: float = 0.0,
@@ -332,6 +344,12 @@ class ElasticPool:
         # (``distributed.elastic_mesh``), and reshapes its DP degree here.
         # The hook may clamp by writing ``controller.target_size``.
         self.on_scale = on_scale
+        # Live worker handoff (``checkpoint.handoff.WorkerHandoffChannel``):
+        # a restarted worker's processed-but-uncollected results are
+        # streamed to its replacement instead of re-admitted for
+        # recompute, and messages the carry covers are filtered from
+        # readmission (at-least-once redelivery cannot double-apply).
+        self.handoff = handoff
         # Upstream-throttle hook (the on_scale counterpart for *demand*):
         # called once per step, may return a unit cap.  A dataflow
         # ``StageGraph`` wires this to downstream pressure — a slow
@@ -694,6 +712,13 @@ class ElasticPool:
                 # detection window, or the worker simply resumes when
                 # its own node comes back.
                 return False
+        # Live handoff: carry the victim's processed-but-uncollected
+        # results through the channel before draining, so the drain only
+        # re-admits work that genuinely needs recompute.
+        if self.handoff is not None and not worker.draining:
+            carried = worker.export_carry()
+            if carried:
+                self.handoff.stream(worker.name, carried)
         msgs = list(worker.drain_for_readmission())
         worker.alive = False
         self._fold(worker)
@@ -724,6 +749,17 @@ class ElasticPool:
         if self.restart_cost > 0:
             fresh.warm_until = self._now + self.restart_cost
         self._supervise(fresh)
+        if self.handoff is not None:
+            recovered = self.handoff.recover()
+            if recovered:
+                n = fresh.import_carry(list(recovered.values()))
+                self.handoff.mark_done(list(recovered.keys()))
+                keys = set(recovered)
+                msgs = [
+                    m for m in msgs if self.handoff.key_for(m) not in keys
+                ]
+                self.metrics.incr(f"{self._px}.{self._noun}_handoffs")
+                self.metrics.incr(f"{self._px}.handoff_carried", n)
         if self.ingress is not None:
             self._readmit(msgs)
         else:

@@ -65,10 +65,18 @@ class EventJournal:
     a crashed component) recovers by re-reading the file.
     """
 
-    def __init__(self, path: Optional[str] = None) -> None:
+    def __init__(
+        self, path: Optional[str] = None, write_behind: Any = None
+    ) -> None:
         self._events: List[Event] = []
         self._path = path
         self._fh = None
+        # Optional write-behind worker (duck-typed: .submit(fn, *args) ->
+        # ticket).  Sequence numbers are still assigned in the caller's
+        # thread — only the file write is deferred, so in-memory order
+        # (the replay order) never depends on writer timing.
+        self._write_behind = write_behind
+        self.last_ticket: Any = None
         if path is not None:
             if os.path.exists(path):
                 with open(path, "r", encoding="utf-8") as fh:
@@ -82,12 +90,24 @@ class EventJournal:
     def last_seq(self) -> int:
         return self._events[-1].seq if self._events else -1
 
+    def _write_line(self, line: str) -> None:
+        if self._fh is not None:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
     def append(self, kind: str, data: Any, timestamp: float = 0.0) -> Event:
         ev = Event(seq=self.last_seq + 1, kind=kind, data=data, timestamp=timestamp)
         self._events.append(ev)
         if self._fh is not None:
-            self._fh.write(ev.to_json() + "\n")
-            self._fh.flush()
+            if self._write_behind is not None:
+                # Durability is deferred: the returned ticket resolves
+                # when the line is on disk.  Callers that need
+                # commit-after-journal gate on it instead of blocking.
+                self.last_ticket = self._write_behind.submit(
+                    self._write_line, ev.to_json()
+                )
+            else:
+                self._write_line(ev.to_json())
         return ev
 
     def events_after(self, seq: int) -> List[Event]:

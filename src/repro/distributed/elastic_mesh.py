@@ -91,3 +91,40 @@ def elastic_resize(
     state, meta, events = restored
     state = reshard_state(state, cfg, new_mesh, **rule_kwargs)
     return state, meta, events
+
+
+def state_shard_axes(
+    state_shape: Params, cfg: ArchConfig, mesh: Mesh, **rule_kwargs
+):
+    """Per-flattened-leaf checkpoint shard axes from the live sharding
+    assignment: each leaf splits along the first dimension its
+    PartitionSpec shards, so a snapshot shard boundary coincides with a
+    device shard boundary (the per-shard write is a local gather, not a
+    global one)."""
+    from repro.checkpoint.store import shard_axes_from_shardings
+
+    rules = make_rules(cfg, mesh, **rule_kwargs)
+    shardings = train_state_shardings(state_shape, cfg, mesh, rules)
+    return shard_axes_from_shardings(shardings)
+
+
+def resize_from_handoff(
+    channel,            # checkpoint.handoff.StateHandoffChannel
+    template: Params,
+    cfg: ArchConfig,
+    new_mesh: Optional[Mesh],
+    **rule_kwargs,
+):
+    """The live elastic move: take the newest complete handed-off state
+    from the channel and lay it out on the new mesh.  Returns (state,
+    meta, deltas) or None.  Unlike :func:`elastic_resize` there is no
+    disk round-trip and no snapshot-age replay — the healing side
+    resumes from the exact handoff step and catches up only the delta
+    suffix the channel reports."""
+    got = channel.latest_state(template)
+    if got is None:
+        return None
+    state, meta, deltas = got
+    if new_mesh is not None:
+        state = reshard_state(state, cfg, new_mesh, **rule_kwargs)
+    return state, meta, deltas

@@ -68,6 +68,21 @@ def main(argv=None) -> int:
     ap.add_argument("--grad-compression", default="none")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="write-behind checkpointing: snapshots + journal "
+                         "lines land off the step barrier; offsets commit "
+                         "as each step's journal ticket resolves")
+    ap.add_argument("--ckpt-shards", type=int, default=1,
+                    help="snapshot shard files per checkpoint (manifest-"
+                         "committed; restore merges any shard layout)")
+    ap.add_argument("--handoff", action="store_true",
+                    help="live state handoff: stream the sharded state "
+                         "through a durable topic at remesh points so a "
+                         "healing process resumes at the exact handoff "
+                         "step instead of replaying from the last snapshot")
+    ap.add_argument("--handoff-every", type=int, default=0,
+                    help="also publish a full handoff every N steps "
+                         "(0: only at remesh points)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--heartbeat-file", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -117,6 +132,23 @@ def main(argv=None) -> int:
     )
 
     scale_at = parse_scale_at(args.scale_at)
+    handoff = None
+    if args.handoff:
+        from repro.checkpoint.handoff import StateHandoffChannel
+        from repro.data.topics import MessageLog
+
+        # The handoff topic must survive process death, but the
+        # launcher's token log is regenerated per process — so the
+        # channel rides its own spilled broker under the checkpoint dir
+        # (JSONL spill + manifest; ``reopen`` replays it on resume).
+        hdir = os.path.join(
+            args.checkpoint_dir or "/tmp/reactive-liquid", "handoff-log"
+        )
+        try:
+            hlog = MessageLog.reopen(hdir)
+        except FileNotFoundError:
+            hlog = MessageLog(spill_dir=hdir)
+        handoff = StateHandoffChannel(hlog, shards=max(args.ckpt_shards, 1))
     hub = MetricsHub()
     t0 = time.time()
 
@@ -158,6 +190,10 @@ def main(argv=None) -> int:
         heartbeat_timeout=args.heartbeat_timeout,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
+        async_checkpoint=args.async_ckpt,
+        ckpt_shards=args.ckpt_shards,
+        handoff=handoff,
+        handoff_every=args.handoff_every,
         resume=args.resume,
         use_mesh=args.mesh,
         model_parallel=args.model_parallel,
@@ -166,6 +202,7 @@ def main(argv=None) -> int:
     )
     if args.resume:
         print(f"[resume] restored step={job.applied_step()} "
+              f"source={job.resume_source} "
               f"offsets={job.committed_offsets()}", flush=True)
 
     final_step = job.run(args.steps)

@@ -46,12 +46,15 @@ the repo's standing split (DESIGN.md assumption notes).
 from __future__ import annotations
 
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.handoff import StateHandoffChannel, WorkerHandoffChannel
 from repro.checkpoint.store import CheckpointStore
 from repro.config.base import ArchConfig, TrainingConfig
 from repro.core.elastic import AutoscalerConfig
@@ -60,7 +63,11 @@ from repro.core.pool import ElasticPool, WorkerBase
 from repro.core.supervision import Supervisor
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.data.topics import MessageLog
-from repro.distributed.elastic_mesh import mesh_for_devices, reshard_state
+from repro.distributed.elastic_mesh import (
+    mesh_for_devices,
+    reshard_state,
+    state_shard_axes,
+)
 from repro.distributed.param_shardings import make_rules
 from repro.distributed.sharding import axis_rules
 from repro.training.train_step import init_train_state, make_train_step
@@ -113,6 +120,7 @@ class TokenIngestStage:
         complete barrier.  Returns optimizer steps applied."""
         job = self.job
         job._now = max(job._now, now)
+        job._drain_commit_gate(now)  # land any newly durable commits
         job._assemble(now)
         if job.pool.elastic:
             lag_batches = job.pipeline.lag() // job.batch_size
@@ -163,6 +171,20 @@ class TrainerWorker(WorkerBase):
         out.extend(self.mailbox.drain())
         return out
 
+    def export_carry(self) -> List[Message]:
+        """Processed shards awaiting the barrier harvest: handoff-able
+        results, not work to recompute.  Exported shards leave
+        ``_ready`` so the subsequent drain re-admits only the mailbox."""
+        out, self._ready = self._ready, []
+        return out
+
+    def import_carry(self, msgs: Sequence[Message]) -> int:
+        """Adopt a predecessor's processed shards directly into the
+        ready set — the barrier harvests them without a recompute step
+        (the healing worker's last-delta catch-up)."""
+        self._ready.extend(msgs)
+        return len(msgs)
+
 
 class TrainingJob:
     """DP training as a reactive job over the durable ``tokens`` topic.
@@ -196,6 +218,11 @@ class TrainingJob:
         consume_batch: int = 16,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 20,
+        async_checkpoint: bool = False,
+        ckpt_shards: int = 1,
+        commit_gate_cap: int = 8,
+        handoff: Optional[StateHandoffChannel] = None,
+        handoff_every: int = 0,
         resume: bool = False,
         use_mesh: bool = False,
         model_parallel: int = 1,
@@ -217,6 +244,24 @@ class TrainingJob:
         self.on_step = on_step
         self.seed = seed
         self._now = 0.0
+        # Async checkpointing: snapshots and journal lines flow through
+        # the store's write-behind worker; token offsets commit only as
+        # each step's journal-complete ticket resolves (the commit gate
+        # that preserves commit-after-journal off the barrier).
+        self._async = bool(async_checkpoint)
+        self.commit_gate_cap = max(int(commit_gate_cap), 1)
+        self._pending_commits: deque = deque()  # (step, offsets, rr, ticket)
+        # Live state handoff: full sharded state streamed through a
+        # durable topic at remesh points (and every ``handoff_every``
+        # steps), so a healing process resumes from the handoff step
+        # instead of replaying from the last periodic snapshot.
+        self.handoff = handoff
+        self.handoff_every = max(int(handoff_every), 0)
+        self.resume_source: Optional[str] = None
+        self.handoff_deltas_applied = 0
+        # Wall-clock the caller's thread spends blocked inside snapshot
+        # writes — the stall the async path takes off the barrier.
+        self.ckpt_stalls: List[float] = []
 
         self.pipeline = TokenPipeline(
             log,
@@ -253,10 +298,16 @@ class TrainingJob:
             self._feasible = list(range(1, self.max_dp + 1))
 
         # -- train state (init or event-sourced restore) ---------------------
-        self.store = CheckpointStore(checkpoint_dir) if checkpoint_dir else None
+        self.store = (
+            CheckpointStore(
+                checkpoint_dir, shards=max(int(ckpt_shards), 1),
+                async_io=self._async,
+            )
+            if checkpoint_dir else None
+        )
         self._raw_step = make_train_step(model, tcfg)
         state, start = None, 0
-        if resume and self.store is not None:
+        if resume and (self.store is not None or self.handoff is not None):
             template = jax.eval_shape(
                 lambda r: init_train_state(model, tcfg, r),
                 jax.random.PRNGKey(seed),
@@ -264,9 +315,31 @@ class TrainingJob:
             template = jax.tree.map(
                 lambda s: jnp.zeros(s.shape, s.dtype), template
             )
-            restored = self.store.restore_latest(template)
-            if restored is not None:
-                state, meta, _events = restored
+            # Newest durable position wins between the disk snapshot and
+            # the live handoff channel; ties go to the handoff (same
+            # state, no disk read).  Resuming from the handoff is the
+            # last-delta catch-up: replay starts at the handoff step, not
+            # the last periodic snapshot.
+            snap = (
+                self.store.restore_latest(template)
+                if self.store is not None else None
+            )
+            hand = (
+                self.handoff.latest_state(template)
+                if self.handoff is not None else None
+            )
+            best = None
+            if snap is not None:
+                best = ("snapshot", snap[0], snap[1])
+            if hand is not None and (
+                best is None
+                or int(hand[1]["step"]) >= int(best[2]["step"])
+            ):
+                best = ("handoff", hand[0], hand[1])
+            if best is not None:
+                self.resume_source, state, meta = best
+                if self.resume_source == "handoff":
+                    self.handoff_deltas_applied = len(hand[2])
                 start = int(meta["step"])
                 stream = meta.get("stream")
                 if stream:
@@ -278,16 +351,30 @@ class TrainingJob:
                     # (Pre-TrainingJob checkpoints carry a carry-mode
                     # "pipeline" dict that cannot map onto ordered mode.)
                     raise RuntimeError(
-                        f"checkpoint at step {start} in "
-                        f"{self.store.directory!r} has no 'stream' resume "
-                        "point (written by an incompatible driver?) — "
-                        "refusing to resume with a rewound token stream"
+                        f"checkpoint at step {start} has no 'stream' "
+                        "resume point (written by an incompatible "
+                        "driver?) — refusing to resume with a rewound "
+                        "token stream"
                     )
         if state is None:
             state = init_train_state(model, tcfg, jax.random.PRNGKey(seed))
         if self.mesh is not None:
             state = reshard_state(state, arch_cfg, self.mesh)
         self.state = state
+        # Checkpoint shard axes follow the live sharding assignment, so
+        # per-shard writes cut along device-shard boundaries; without a
+        # mesh the planner's axis-0 default applies.
+        self._shard_axes = (
+            state_shard_axes(self.state, arch_cfg, self.mesh)
+            if self.mesh is not None else None
+        )
+        # Stream cursor as of the last *applied* step.  In async mode
+        # committed offsets lag the applied step (commits wait on the
+        # journal gate), so snapshots/handoffs pair the state with this
+        # tracked cursor, never the lagging committed one.
+        st0 = self.pipeline.stream_state()
+        self._cursor_offsets: Dict[str, int] = dict(st0["offsets"])
+        self._cursor_rr = st0["rr"]
         if train_step_fn is not None and self.mesh is None:
             self._jit = train_step_fn
         else:
@@ -299,10 +386,21 @@ class TrainingJob:
         self._batch_meta: Dict[int, Dict] = {}   # step -> offsets/shards
         self._arrived: Dict[tuple, Dict] = {}    # (step, shard) -> payload
         self.step_offsets: Dict[int, Dict[int, int]] = {}  # audit trail
+        self._stop_at: Optional[int] = None  # run()'s exact-stop bound
         self.losses: List[float] = []
         self.scale_log: List[tuple] = []  # (now, old_dp, new_dp, mesh_shape)
 
         # -- the control plane -------------------------------------------------
+        # With handoff enabled, a restarted trainer's processed-but-
+        # unharvested shards are carried to its replacement (keyed by
+        # (step, shard)) instead of re-admitted for recompute.
+        self.worker_handoff = (
+            WorkerHandoffChannel(
+                log, topic=f"{topic}.worker-handoff",
+                key_fn=lambda m: (m.payload["step"], m.payload["shard"]),
+            )
+            if handoff is not None else None
+        )
         self.pool = ElasticPool(
             "train",
             lambda: TrainerWorker(
@@ -328,6 +426,7 @@ class TrainingJob:
             retire_mode="redistribute",
             collect=self._harvest,
             on_scale=self._actuate_scale,
+            handoff=self.worker_handoff,
             metric_prefix="train",
             worker_noun="trainer",
         )
@@ -370,26 +469,93 @@ class TrainingJob:
     def kill_worker(self, index: int = 0) -> str:
         return self.pool.kill_worker(index)
 
+    def kill_process(self) -> int:
+        """Chaos: whole-process death.  Queued write-behind work is lost
+        (never reaches disk) — a rebuilt job sees exactly the directory
+        a crashed process would leave.  Returns discarded writes."""
+        return self.store.kill() if self.store is not None else 0
+
     def request_scale(self, units: int) -> None:
         """Manual DP scaling through the same actuation path as the
         autoscaler (``on_scale``: snapshot → remesh → reshard)."""
         self.pool.set_target_units(units)
 
     # -- checkpointing -------------------------------------------------------------
-    def save_checkpoint(self) -> Optional[str]:
+    def _stream_cursor(self) -> Dict:
+        """Stream resume point as of the last applied step (equals
+        ``pipeline.stream_state()`` whenever the commit gate is empty)."""
+        return {"offsets": dict(self._cursor_offsets), "rr": self._cursor_rr}
+
+    def save_checkpoint(self):
+        """Snapshot at the applied step.  Sync store: blocks for the
+        full write and returns the path.  Async store: pins a host copy,
+        submits to the write-behind worker, returns the manifest's
+        commit ticket — the caller's stall is the pin, not the write."""
         if self.store is None:
             return None
-        return self.store.save(
+        t0 = time.perf_counter()
+        kwargs = dict(
+            step=self._applied,
+            extra={"stream": self._stream_cursor()},
+            shard_axes=self._shard_axes,
+        )
+        if self.store.writer is not None:
+            out = self.store.save_async(self.state, **kwargs)
+        else:
+            out = self.store.save(self.state, **kwargs)
+        self.ckpt_stalls.append(time.perf_counter() - t0)
+        return out
+
+    def _publish_handoff(self) -> None:
+        if self.handoff is None:
+            return
+        self.handoff.publish_state(
             self.state,
             step=self._applied,
-            extra={"stream": self.pipeline.stream_state()},
+            meta={"stream": self._stream_cursor()},
+            shard_axes=self._shard_axes,
         )
+
+    def _drain_commit_gate(self, now: float, wait: bool = False) -> int:
+        """Commit-after-journal, asynchronously: pop pending commits in
+        step order, committing each only once its journal-complete
+        ticket resolved.  A failed write blocks every later commit (the
+        replay window stays open — exactly the sync contract)."""
+        n = 0
+        while self._pending_commits:
+            step, offsets, rr, ticket = self._pending_commits[0]
+            if ticket is not None and not ticket.done():
+                if not wait:
+                    break
+                ticket.wait(60.0)
+            if ticket is not None and ticket.error is not None:
+                break  # journal line lost: never commit past it
+            self._pending_commits.popleft()
+            self.pipeline.commit(offsets, now=now, rr=rr)
+            self.step_offsets[step] = dict(offsets)
+            n += 1
+        return n
+
+    def flush_durability(self, now: Optional[float] = None) -> None:
+        """Drain the write-behind worker and the commit gate: when this
+        returns, every journaled step is on disk and committed."""
+        if self.store is not None:
+            self.store.flush()
+        self._drain_commit_gate(self._now if now is None else now, wait=True)
 
     # -- internals ------------------------------------------------------------------
     def _assemble(self, now: float) -> None:
         """Cut global batches from the ordered stream into per-replica
-        shard messages, bounded by ``max_inflight_steps``."""
-        while (self._assembled - self._applied) < self.max_inflight_steps:
+        shard messages, bounded by ``max_inflight_steps`` and by the
+        commit gate (a stalled write-behind worker backpressures intake
+        instead of growing the uncommitted suffix unboundedly).  The
+        batch sequence itself is a pure function of the prefetch cursor,
+        so gating *when* batches are cut never changes *which* documents
+        each step consumes."""
+        while (
+            (self._assembled - self._applied) < self.max_inflight_steps
+            and len(self._pending_commits) <= self.commit_gate_cap
+        ):
             docs = self.pipeline.next_docs(self.batch_size)
             if docs is None:
                 return
@@ -462,6 +628,8 @@ class TrainingJob:
         offsets second — the manual-commit contract."""
         fired = 0
         while True:
+            if self._stop_at is not None and self._applied >= self._stop_at:
+                break  # run(N) means exactly N, whatever the resume parity
             nxt = self._applied + 1
             meta = self._batch_meta.get(nxt)
             if meta is None:
@@ -484,20 +652,51 @@ class TrainingJob:
             self.losses.append(loss)
             self.pool.metrics.incr("train.steps")
             self.pool.metrics.gauge("train.loss", loss, timestamp=now)
+            # Advance the applied-step stream cursor (what snapshots and
+            # handoffs pair with the state).
+            for p, o in meta["offsets"].items():
+                self._cursor_offsets[str(p)] = o
+            self._cursor_rr = meta["rr"]
             # Durable journal FIRST...
             if self.store is not None:
                 self.store.record_step(
                     nxt, offsets=meta["offsets"], metrics={"loss": loss}
                 )
-            # ...then the token offsets may commit.
-            self.pipeline.commit(meta["offsets"], now=now, rr=meta["rr"])
-            self.step_offsets[nxt] = dict(meta["offsets"])
-            if (
+            do_snap = (
                 self.store is not None
                 and self.checkpoint_every
                 and nxt % self.checkpoint_every == 0
-            ):
-                self.save_checkpoint()
+            )
+            if self._async:
+                # ...then the offsets commit when the journal line (and,
+                # on snapshot steps, the manifest — same FIFO, so later)
+                # lands durably: the gate replaces the synchronous write.
+                ticket = (
+                    self.store.last_write_ticket()
+                    if self.store is not None else None
+                )
+                if do_snap:
+                    ticket = self.save_checkpoint() or ticket
+                self._pending_commits.append(
+                    (nxt, meta["offsets"], meta["rr"], ticket)
+                )
+                self._drain_commit_gate(now)
+            else:
+                # ...then the token offsets may commit.
+                self.pipeline.commit(meta["offsets"], now=now, rr=meta["rr"])
+                self.step_offsets[nxt] = dict(meta["offsets"])
+                if do_snap:
+                    self.save_checkpoint()
+            if self.handoff is not None and self.handoff_every:
+                if nxt % self.handoff_every == 0:
+                    self._publish_handoff()
+                else:
+                    self.handoff.publish_delta(
+                        nxt,
+                        {"offsets": {str(p): o
+                                     for p, o in meta["offsets"].items()},
+                         "rr": meta["rr"]},
+                    )
             if self.on_step is not None:
                 self.on_step(nxt, m)
             fired += 1
@@ -513,6 +712,13 @@ class TrainingJob:
         if new_dp == self.dp:
             return
         self._fire_barriers(self._now)
+        # Departing layout streams its state through the handoff topic —
+        # the healing layout (or a healing process) resumes from this
+        # exact step.  With an async store the safety snapshot is a
+        # write-behind submit; only the legacy sync store still stalls
+        # the remesh barrier for a full disk write.
+        if self.handoff is not None:
+            self._publish_handoff()
         if self.store is not None:
             self.save_checkpoint()
         mesh_shape = None
@@ -523,6 +729,9 @@ class TrainingJob:
             self.rules = make_rules(self.arch_cfg, self.mesh)
             self.state = reshard_state(self.state, self.arch_cfg, self.mesh)
             self._jit = jax.jit(self._raw_step)  # re-trace under the new mesh
+            self._shard_axes = state_shard_axes(
+                self.state, self.arch_cfg, self.mesh
+            )
             mesh_shape = dict(self.mesh.shape)
         self.scale_log.append((self._now, self.dp, new_dp, mesh_shape))
         self.pool.metrics.incr("train.rescales")
@@ -560,15 +769,24 @@ class TrainingJob:
         dt: float = 1.0,
         max_rounds: int = 100_000,
     ) -> int:
-        """Step until ``steps`` optimizer steps applied or the stream is
-        exhausted.  Returns the final applied step."""
-        for _ in range(max_rounds):
-            if self._applied >= steps:
-                break
-            fired = self.step(now)
-            now += dt
-            if fired == 0 and self.backlog() == 0:
-                break  # stream exhausted below one global batch
+        """Step until exactly ``steps`` optimizer steps applied or the
+        stream is exhausted.  Returns the final applied step.  The bound
+        is exact whatever step the run resumed from: a round that could
+        fire several barriers stops at ``steps`` instead of overshooting
+        (resume parity must not change where a run lands)."""
+        self._stop_at = steps
+        try:
+            for _ in range(max_rounds):
+                if self._applied >= steps:
+                    break
+                fired = self.step(now)
+                now += dt
+                if fired == 0 and self.backlog() == 0:
+                    break  # stream exhausted below one global batch
+        finally:
+            self._stop_at = None
         if self.store is not None:
             self.save_checkpoint()
+        if self._async or self._pending_commits:
+            self.flush_durability(now)
         return self._applied

@@ -1,5 +1,6 @@
 """Event-sourced checkpoint store: atomicity, restore, journal replay,
-corruption fallback, GC."""
+corruption fallback, GC — plus sharded manifests, the async write-behind
+worker, and the live state-handoff channel."""
 
 import os
 
@@ -8,7 +9,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CheckpointStore, load_pytree, save_pytree
+from repro.checkpoint.handoff import StateHandoffChannel
+from repro.checkpoint.store import (
+    CheckpointStore,
+    _compress,
+    load_pytree,
+    merge_shards,
+    pack_shard,
+    plan_shards,
+    save_pytree,
+    shard_axes_from_shardings,
+)
+from repro.data.topics import MessageLog
 
 
 def tree(seed=0):
@@ -114,3 +126,251 @@ def test_process_crash_recovery(tmp_path):
     assert meta["step"] == 7
     assert [e.data["step"] for e in events] == [8]
     assert s2.latest_offsets() == {0: 80}
+
+
+# ---------------------------------------------------------------------------
+# sharded manifests
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_latest_snapshot_falls_back(tmp_path):
+    """A kill mid-write can only tear the tmp file (atomic rename), but
+    disk faults can still truncate the newest snapshot after the fact —
+    restore must fall back, not crash or half-load."""
+    store = CheckpointStore(str(tmp_path))
+    t0, t1 = tree(0), tree(1)
+    store.save(t0, step=1)
+    p2 = store.save(t1, step=2)
+    with open(p2, "r+b") as fh:
+        fh.truncate(os.path.getsize(p2) // 2)
+    state, meta, _ = store.restore_latest(t0)
+    assert meta["step"] == 1
+    assert_tree_equal(state, t0)
+
+
+def test_truncated_shard_falls_back(tmp_path):
+    """Sharded form of the same fault: a truncated shard breaks its
+    manifest digest, so the whole sharded snapshot is rejected."""
+    store = CheckpointStore(str(tmp_path), shards=2)
+    t0, t1 = tree(0), tree(1)
+    store.save(t0, step=1)
+    store.save(t1, step=2)
+    spath = store._shard_path(2, 0, 2)
+    with open(spath, "r+b") as fh:
+        fh.truncate(os.path.getsize(spath) // 2)
+    state, meta, _ = store.restore_latest(t0)
+    assert meta["step"] == 1
+    assert_tree_equal(state, t0)
+
+
+def test_missing_shard_falls_back(tmp_path):
+    store = CheckpointStore(str(tmp_path), shards=3)
+    t0, t1 = tree(0), tree(1)
+    store.save(t0, step=1)
+    store.save(t1, step=2)
+    os.remove(store._shard_path(2, 1, 3))
+    state, meta, _ = store.restore_latest(t0)
+    assert meta["step"] == 1
+    assert_tree_equal(state, t0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 5])
+def test_shard_layout_independent_merge(k):
+    """plan/pack at any shard count k; merge reassembles bitwise — the
+    primitive behind save-at-DP-k / load-at-DP-j."""
+    t = tree(3)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(t)]
+    plan = plan_shards(leaves, k)
+    raws = [pack_shard(leaves, entries) for entries in plan]
+    merged = merge_shards(t, raws)
+    assert_tree_equal(t, merged)
+
+
+def test_save_at_k_load_at_j_via_store(tmp_path):
+    """A store built with a different shard count reads any manifest —
+    the shard layout is a property of the *file set*, not the reader."""
+    t = tree(4)
+    w = CheckpointStore(str(tmp_path), shards=3)
+    w.save(t, step=9)
+    w.journal.close()
+    for j in (1, 2, 4):
+        r = CheckpointStore(str(tmp_path), shards=j)
+        state, meta, _ = r.restore_latest(tree(0))
+        assert meta["step"] == 9
+        assert_tree_equal(t, state)
+        r.journal.close()
+
+
+def test_zoo_sharded_config_save_load_bitwise(tmp_path):
+    """Satellite property: a zoo arch's real train state, shard axes
+    derived from its live ``param_shardings`` assignment, saved sharded
+    and restored bitwise (the shard boundary follows the PartitionSpec's
+    first sharded dim, not a blanket axis 0)."""
+    from repro.config import TrainingConfig, get_arch
+    from repro.distributed.elastic_mesh import mesh_for_devices
+    from repro.distributed.param_shardings import (
+        make_rules,
+        train_state_shardings,
+    )
+    from repro.models.zoo import build_model
+    from repro.training.train_step import init_train_state
+
+    cfg = get_arch("llama3.2-1b", smoke=True)
+    tcfg = TrainingConfig(
+        learning_rate=1e-3, warmup_steps=0, schedule="constant"
+    )
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    mesh = mesh_for_devices(jax.device_count())
+    rules = make_rules(cfg, mesh)
+    shardings = train_state_shardings(state, cfg, mesh, rules)
+    axes = shard_axes_from_shardings(shardings)
+    assert len(axes) == len(jax.tree.leaves(state))
+
+    w = CheckpointStore(str(tmp_path), shards=4)
+    w.save(state, step=1, shard_axes=axes)
+    w.journal.close()
+    r = CheckpointStore(str(tmp_path), shards=2)  # "load at DP=j, j != k"
+    template = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), state)
+    restored, meta, _ = r.restore_latest(template)
+    assert meta["step"] == 1
+    assert_tree_equal(state, restored)
+    r.journal.close()
+
+
+def test_keep_last_gc_is_manifest_aware(tmp_path):
+    """GC on a sharded store removes whole snapshot *sets* (manifest
+    first, then its shards) and never strands a manifest whose shards
+    were deleted."""
+    store = CheckpointStore(str(tmp_path), keep_last=2, shards=2)
+    for s in range(5):
+        store.save(tree(s), step=s)
+    assert store.snapshots() == [3, 4]
+    names = set(os.listdir(str(tmp_path)))
+    for s in (0, 1, 2):
+        assert f"manifest-{s:010d}.json" not in names
+        assert f"shard-{s:010d}-000of002.ckpt" not in names
+    # every surviving manifest is fully backed by its shard files
+    import json as _json
+    for s in (3, 4):
+        with open(store._manifest_path(s)) as fh:
+            manifest = _json.load(fh)
+        for rec in manifest["shards"]:
+            assert rec["file"] in names
+    state, meta, _ = store.restore_latest(tree(0))
+    assert meta["step"] == 4
+    assert_tree_equal(state, tree(4))
+
+
+# ---------------------------------------------------------------------------
+# async write-behind
+# ---------------------------------------------------------------------------
+
+
+def test_async_save_ticket_then_restore(tmp_path):
+    store = CheckpointStore(str(tmp_path), shards=2, async_io=True)
+    t = tree(6)
+    ticket = store.save_async(t, step=5, extra={"stream": {"rr": 0}})
+    ticket.wait(30.0)
+    assert store.async_saves == 1 and store.sync_saves == 0
+    state, meta, _ = store.restore_latest(tree(0))
+    assert meta["step"] == 5 and meta["stream"] == {"rr": 0}
+    assert_tree_equal(t, state)
+    store.close()
+
+
+def test_async_journal_gate_and_flush(tmp_path):
+    """While the write-behind worker is paused the journal line is
+    *submitted but not durable* (ticket pending); a fresh store sees
+    nothing.  After resume+flush the line is durable everywhere."""
+    store = CheckpointStore(str(tmp_path), async_io=True)
+    store.writer.pause()
+    store.record_step(1, offsets={0: 10})
+    ticket = store.last_write_ticket()
+    assert ticket is not None and not ticket.done()
+    probe = CheckpointStore(str(tmp_path))
+    assert probe.latest_offsets() == {}
+    probe.journal.close()
+    store.writer.resume()
+    store.flush()
+    assert ticket.done() and ticket.error is None
+    probe2 = CheckpointStore(str(tmp_path))
+    assert probe2.latest_offsets() == {0: 10}
+    probe2.journal.close()
+    store.close()
+
+
+def test_write_behind_kill_discards_queued_writes(tmp_path):
+    """Process death with writes still queued: tickets error, nothing
+    lands, and a rebuilt store sees exactly the pre-crash directory."""
+    store = CheckpointStore(str(tmp_path), async_io=True)
+    store.save_async(tree(0), step=1).wait(30.0)  # durable baseline
+    store.writer.pause()
+    store.record_step(2, offsets={0: 20})
+    t_snap = store.save_async(tree(1), step=2)
+    lost = store.kill()
+    assert lost >= 1
+    assert t_snap.done() and t_snap.error is not None
+    rebuilt = CheckpointStore(str(tmp_path))
+    state, meta, _ = rebuilt.restore_latest(tree(9))
+    assert meta["step"] == 1          # the queued step-2 snapshot never landed
+    assert_tree_equal(state, tree(0))
+    assert rebuilt.latest_offsets() == {}  # nor did its journal line
+    rebuilt.journal.close()
+
+
+# ---------------------------------------------------------------------------
+# live state handoff
+# ---------------------------------------------------------------------------
+
+
+def test_state_handoff_roundtrip_and_delta_suppression():
+    log = MessageLog()
+    ch = StateHandoffChannel(log, shards=2, codec="zlib")
+    t0 = tree(0)
+    ch.publish_state(t0, step=3, meta={"stream": {"rr": 1}})
+    got = StateHandoffChannel(log, shards=2).latest_state(tree(9))
+    assert got is not None
+    state, meta, deltas = got
+    assert meta["step"] == 3 and meta["stream"] == {"rr": 1}
+    assert_tree_equal(t0, state)
+    assert deltas == []
+    # identical republish: every shard digest matches -> all suppressed,
+    # and a reader resolves the suppressed shards from the earlier epoch
+    out = ch.publish_state(t0, step=4)
+    assert out == {"streamed": 0, "suppressed": 2}
+    state2, meta2, _ = StateHandoffChannel(log, shards=2).latest_state(tree(9))
+    assert meta2["step"] == 4
+    assert_tree_equal(t0, state2)
+
+
+def test_state_handoff_torn_epoch_ignored():
+    """A publisher killed between its shard records and the commit
+    record must not poison the channel: the reader resolves the newest
+    *complete* epoch."""
+    log = MessageLog()
+    ch = StateHandoffChannel(log, shards=2, codec="zlib")
+    t0 = tree(0)
+    ch.publish_state(t0, step=3)
+    # epoch 1 dies mid-stream: one shard record, no commit
+    leaves = [np.asarray(x) for x in jax.tree.leaves(tree(1))]
+    blob = _compress(pack_shard(leaves, plan_shards(leaves, 2)[0]), "zlib")
+    import base64
+    from repro.checkpoint.store import content_digest
+    ch._publish({"kind": "shard", "epoch": 1, "k": 0,
+                 "digest": content_digest(blob),
+                 "data": base64.b64encode(blob).decode("ascii")})
+    state, meta, _ = StateHandoffChannel(log, shards=2).latest_state(tree(9))
+    assert meta["step"] == 3
+    assert_tree_equal(t0, state)
+
+
+def test_state_handoff_deltas_measure_catchup():
+    log = MessageLog()
+    ch = StateHandoffChannel(log, shards=1, codec="zlib")
+    ch.publish_state(tree(0), step=5)
+    ch.publish_delta(6, {"offsets": {"0": 48}})
+    ch.publish_delta(7, {"offsets": {"0": 56}})
+    _, meta, deltas = ch.latest_state(tree(9))
+    assert meta["step"] == 5
+    assert [d["step"] for d in deltas] == [6, 7]

@@ -653,3 +653,56 @@ def test_source_saturation_feeds_stage_autoscaler():
         if graph.pending() == 0 and pg.pending() == 0:
             break
     assert sorted(stage.outputs()) == sorted(range(24))
+
+
+# --- write-behind journal durability (ISSUE 8) --------------------------------
+
+
+def test_durable_offsets_gate_on_write_behind_journal(tmp_path):
+    """With write-behind journaling the commit *decision* stays on the
+    step, but ``durable_offsets()`` — the view a commit gate should use
+    — advances only as journal lines actually land on disk: it lags
+    ``committed_offsets()`` while the worker is stalled and converges
+    after a flush."""
+    from repro.checkpoint.store import WriteBehind
+
+    log = MessageLog()
+    fill(log, "in", 24)
+    log.create_topic("out", 3)
+    jd = str(tmp_path / "j")
+    os.makedirs(jd, exist_ok=True)
+    wb = WriteBehind("test-journal")
+    wb.pause()
+    stage = Stage("s", log, "in", "out", process=lambda m: [m.payload],
+                  initial_tasks=2, heartbeat_timeout=2.0, batch_n=8,
+                  elastic=False,
+                  journal_factory=lambda p: EventJournal(
+                      os.path.join(jd, f"p{p}.journal")),
+                  journal_write_behind=wb)
+    for t in range(40):
+        stage.step(float(t))
+    committed = stage.committed_offsets()
+    assert sum(committed.values()) == 24, committed
+    # in-memory watermark moved; nothing is durable yet
+    assert sum(stage.durable_offsets().values()) == 0
+    wb.resume()
+    wb.flush()
+    assert stage.durable_offsets() == committed
+    # the journal files really carry the lines the tickets gated on
+    for p in committed:
+        assert os.path.getsize(os.path.join(jd, f"p{p}.journal")) > 0
+    stage.close()
+
+
+def test_durable_offsets_equals_committed_without_write_behind():
+    log = MessageLog()
+    fill(log, "in", 12)
+    log.create_topic("out", 3)
+    stage = Stage("s", log, "in", "out", process=lambda m: [m.payload],
+                  initial_tasks=2, heartbeat_timeout=2.0, batch_n=8,
+                  elastic=False)
+    for t in range(20):
+        stage.step(float(t))
+    assert stage.durable_offsets() == stage.committed_offsets()
+    assert sum(stage.committed_offsets().values()) == 12
+    stage.close()

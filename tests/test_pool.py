@@ -279,3 +279,108 @@ def test_serving_pool_metrics_merge_losslessly_across_chaos_kill(tmp_path):
     assert hub.counter("serve.readmitted") > 0
     # scale counters flow through the same replica set
     assert hub.counter("serve.scale_in") + hub.counter("serve.scale_out") >= 1
+
+
+# --- live worker handoff (ISSUE 8) --------------------------------------------
+
+
+class CarryWorker(WorkerBase):
+    """Worker that holds processed results in-worker until an external
+    collector takes them — the pattern where a kill between process and
+    collect would otherwise force a recompute.  ``sink`` records every
+    *compute* event, so recomputation is observable."""
+
+    _ids = itertools.count()
+
+    def __init__(self, sink, budget=8):
+        super().__init__(f"carry{next(CarryWorker._ids)}")
+        self.sink = sink
+        self.budget = budget
+        self.results = []
+
+    def step(self, now: float = 0.0) -> int:
+        n = 0
+        while n < self.budget and self.alive:
+            msg = self.mailbox.get()
+            if msg is None:
+                break
+            self.sink.append(msg.payload)
+            self.results.append(Message(topic="r", payload=msg.payload))
+            n += 1
+        return n
+
+    def export_carry(self):
+        out, self.results = self.results, []
+        return out
+
+    def import_carry(self, msgs):
+        self.results.extend(msgs)
+        return len(msgs)
+
+
+def test_worker_handoff_carries_results_and_filters_readmission():
+    """A chaos-killed worker's processed-but-uncollected results ride
+    the handoff channel to its replacement instead of being recomputed,
+    and an at-least-once redelivery of a carried key is filtered out of
+    readmission (no double-apply)."""
+    from repro.checkpoint.handoff import WorkerHandoffChannel
+
+    log = MessageLog()
+    channel = WorkerHandoffChannel(log, key_fn=lambda m: m.payload)
+    sink = []
+    pool = ElasticPool("p", lambda: CarryWorker(sink, budget=5),
+                       initial_units=1, ingress_capacity=0, elastic=False,
+                       heartbeat_timeout=2.0, handoff=channel)
+    # 5 distinct payloads + a duplicate delivery of payload 2
+    for payload in (0, 1, 2, 3, 4, 2):
+        pool.offer(Message(topic="t", payload=payload))
+    pool.step(0.0)  # budget 5: results 0-4 held in-worker, dup 2 queued
+    assert sink == [0, 1, 2, 3, 4]
+    killed = pool.kill_worker(0)
+    now = 1.0
+    for _ in range(10):
+        pool.step(now)
+        now += 1.0
+    assert any(e[1] == "restarted" and e[2] == killed
+               for e in pool.supervisor.events)
+    # carried, not recomputed: the 5 results live in the fresh worker
+    # and the compute log shows no second pass
+    fresh = pool.workers[0]
+    assert sorted(m.payload for m in fresh.results) == [0, 1, 2, 3, 4]
+    assert sink == [0, 1, 2, 3, 4]
+    # the redelivered payload-2 message was filtered from readmission
+    assert fresh.mailbox.depth() == 0
+    assert channel.carried == 5 and channel.recovered == 5
+    assert pool.counter("pool.worker_handoffs") == 1
+    assert pool.counter("pool.handoff_carried") == 5
+
+
+def test_worker_handoff_marks_done_exactly_once():
+    """Recovered keys are acknowledged: a second restart cannot re-adopt
+    results the previous replacement already imported."""
+    from repro.checkpoint.handoff import WorkerHandoffChannel
+
+    log = MessageLog()
+    channel = WorkerHandoffChannel(log, key_fn=lambda m: m.payload)
+    sink = []
+    pool = ElasticPool("p", lambda: CarryWorker(sink, budget=4),
+                       initial_units=1, ingress_capacity=0, elastic=False,
+                       heartbeat_timeout=2.0, handoff=channel)
+    for payload in range(4):
+        pool.offer(Message(topic="t", payload=payload))
+    pool.step(0.0)
+    pool.kill_worker(0)
+    now = 1.0
+    for _ in range(10):
+        pool.step(now)
+        now += 1.0
+    assert channel.recovered == 4
+    assert channel.recover() == {}  # all carried keys are marked done
+    # kill the replacement too: it carries the same 4 results forward
+    pool.kill_worker(0)
+    for _ in range(10):
+        pool.step(now)
+        now += 1.0
+    assert channel.carried == 8 and channel.recovered == 8
+    assert sorted(m.payload for m in pool.workers[0].results) == [0, 1, 2, 3]
+    assert sink == [0, 1, 2, 3]  # still exactly one compute per payload

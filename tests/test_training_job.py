@@ -356,3 +356,161 @@ def test_training_as_terminal_stage_of_a_dataflow_graph(rig):
     tk = graph_a.stage("tokenize")
     for c in tk.consumers.consumers:
         assert c.offset == tk.in_topic.partitions[c.partition].end_offset()
+
+
+# --- async checkpointing + live handoff (ISSUE 8 tentpole) --------------------
+
+
+def test_async_checkpoint_matches_sync_bitwise(rig, tmp_path):
+    """The write-behind path is a pure latency optimization: an
+    uninterrupted async+sharded run lands on the same params, losses,
+    committed offsets, and per-step consumption as a plain run — and
+    never takes a synchronous save."""
+    golden = make_job(rig)
+    golden.run(12)
+
+    job = make_job(rig, checkpoint_dir=str(tmp_path / "a"),
+                   checkpoint_every=3, async_checkpoint=True, ckpt_shards=2)
+    job.run(12)
+    assert job.store.sync_saves == 0 and job.store.async_saves > 0
+    assert_bitwise_equal(golden, job)
+    assert job.committed_offsets() == golden.committed_offsets()
+    assert job.step_offsets == golden.step_offsets
+    assert_exact_consumption(job, 12)
+
+
+def test_async_process_death_resumes_bitwise(rig, tmp_path):
+    """Process death with snapshots and journal lines still queued in
+    the write-behind worker: the rebuilt job resumes from whatever
+    actually landed and replays the rest to bitwise-identical params.
+    The commit gate guarantees no offset ever committed ahead of its
+    journal line, so the replay window always covers the loss."""
+    cfg = rig[0]
+    golden = make_job(rig)
+    golden.run(12)
+
+    d = str(tmp_path / "ckpt")
+    j1 = make_job(rig, checkpoint_dir=d, checkpoint_every=3,
+                  async_checkpoint=True, ckpt_shards=2)
+    now = 0.0
+    while j1.applied_step() < 7:
+        j1.step(now)
+        now += 1.0
+    died_at = j1.applied_step()
+    j1.kill_process()  # queued write-behind work is discarded, not flushed
+    del j1
+
+    j2 = make_job(rig, log=make_log(cfg), checkpoint_dir=d,
+                  checkpoint_every=3, async_checkpoint=True, ckpt_shards=2,
+                  resume=True)
+    assert j2.resume_source == "snapshot"
+    assert j2.applied_step() <= died_at
+    j2.run(12)
+    assert j2.applied_step() == 12
+    assert_bitwise_equal(golden, j2)
+    assert j2.committed_offsets() == golden.committed_offsets()
+    for step, offs in j2.step_offsets.items():
+        assert golden.step_offsets[step] == offs
+    assert_exact_consumption(j2, 12, journaled_step_offsets(j2))
+
+
+def test_commit_gate_holds_offsets_until_journal_durable(rig, tmp_path):
+    """Commit-after-journal, asynchronously: while the write-behind
+    worker is stalled, applied steps accumulate in the commit gate and
+    their offsets do NOT commit; the gate also backpressures assembly
+    instead of growing the uncommitted suffix unboundedly.  Resuming the
+    worker drains the gate and commits exactly the applied prefix."""
+    job = make_job(rig, checkpoint_dir=str(tmp_path / "g"),
+                   checkpoint_every=100, async_checkpoint=True,
+                   commit_gate_cap=2)
+    now = 0.0
+    while job.applied_step() < 2:
+        job.step(now)
+        now += 1.0
+    job.flush_durability(now)
+    committed_before = dict(job.committed_offsets())
+    job.store.writer.pause()
+    for _ in range(20):
+        job.step(now)
+        now += 1.0
+    assert job.applied_step() > 2
+    # nothing committed past the durable prefix...
+    assert job.committed_offsets() == committed_before
+    assert len(job._pending_commits) > 0
+    # ...and the gate bounded how far the job ran ahead of durability
+    assert len(job._pending_commits) <= job.commit_gate_cap + \
+        job.max_inflight_steps + 1
+    job.store.writer.resume()
+    job.flush_durability(now)
+    assert not job._pending_commits
+    assert sum(job.committed_offsets().values()) == job.applied_step() * BATCH
+    job.run(12, now=now)
+    assert_exact_consumption(job, 12)
+
+
+def test_remesh_with_handoff_takes_no_sync_save(rig, tmp_path):
+    """The elastic move off the critical path: a 2->4 remesh with the
+    async store publishes the state through the handoff topic and
+    submits the safety snapshot to the write-behind worker — zero
+    synchronous saves anywhere — and stays bitwise-identical to a
+    fixed-degree run."""
+    from repro.checkpoint.handoff import StateHandoffChannel
+
+    cfg = rig[0]
+    golden = make_job(rig)
+    golden.run(12)
+
+    log = make_log(cfg)
+    job = make_job(rig, log=log, checkpoint_dir=str(tmp_path / "h"),
+                   checkpoint_every=5, async_checkpoint=True, ckpt_shards=2,
+                   handoff=StateHandoffChannel(log, shards=2))
+    now = 0.0
+    while job.applied_step() < 4:
+        job.step(now)
+        now += 1.0
+    job.request_scale(4)
+    job.run(12, now=now)
+    assert job.store.sync_saves == 0
+    assert job.handoff.states_published >= 1  # the remesh publish
+    assert [(o, n) for (_, o, n, _) in job.scale_log] == [(2, 4)]
+    assert_bitwise_equal(golden, job)
+    assert job.committed_offsets() == golden.committed_offsets()
+    assert_exact_consumption(job, 12)
+
+
+def test_handoff_resume_is_last_delta_catchup(rig, tmp_path):
+    """With per-step handoff publishes, a killed process's replacement
+    resumes from the exact handoff step (not the last periodic
+    snapshot): resume_source == 'handoff' and zero-or-tiny replay."""
+    from repro.checkpoint.handoff import StateHandoffChannel
+
+    cfg = rig[0]
+    golden = make_job(rig)
+    golden.run(12)
+
+    log = make_log(cfg)  # the durable broker survives the process
+    d = str(tmp_path / "hh")
+    j1 = make_job(rig, log=log, checkpoint_dir=d, checkpoint_every=5,
+                  async_checkpoint=True, ckpt_shards=2,
+                  handoff=StateHandoffChannel(log, shards=2),
+                  handoff_every=1)
+    now = 0.0
+    while j1.applied_step() < 8:
+        j1.step(now)
+        now += 1.0
+    died_at = j1.applied_step()
+    j1.kill_process()
+    del j1
+
+    j2 = make_job(rig, log=log, checkpoint_dir=d, checkpoint_every=5,
+                  async_checkpoint=True, ckpt_shards=2,
+                  handoff=StateHandoffChannel(log, shards=2),
+                  handoff_every=1, resume=True)
+    assert j2.resume_source == "handoff"
+    assert j2.applied_step() == died_at  # no replay gap at all
+    assert j2.handoff_deltas_applied == 0
+    j2.run(12, now=now)
+    assert_bitwise_equal(golden, j2)
+    assert j2.committed_offsets() == golden.committed_offsets()
+    for step, offs in j2.step_offsets.items():
+        assert golden.step_offsets[step] == offs
