@@ -1,0 +1,338 @@
+"""Fleet-scale capacity-planning grid (ISSUE 9) — beyond paper Fig. 10.
+
+Three tables, all virtual-time deterministic given the seed and frozen
+to ``BENCH_fleet.json``:
+
+  * ``fleet_microbench`` — the 1000-node placement/failure event loop,
+    scalar reference (``vectorize=False``: O(N)-scan ``least_loaded``)
+    vs the vectorized path (residency index + O(log n) lazy-invalidation
+    placement heap).  ``op_checksum`` fingerprints every placement
+    decision plus the failure/epoch bookkeeping — the two paths must
+    agree exactly; ``speedup`` on the vectorized row carries the ≥10x
+    acceptance guard.
+  * ``fleet_equivalence`` — a small-scale end-to-end chaos run
+    (``simulate_reactive`` with independent + rack-burst + gray
+    injection) on both paths: processed counts, failure/restart
+    counters, and the full throughput timeline must match bitwise.
+  * ``fleet_grid`` — loss% vs p_failure vs fleet size vs correlation
+    mode.  The 1000-node rows (independent + rack-correlated + diurnal,
+    ≥10^6 messages between them) extend Fig. 10 to a fleet the paper
+    never measured; the 100-node rows give the capacity curve's small
+    end, and the gray-failure pair shows symptom-based straggler
+    detection (``core.pool``) cutting the loss a speed-ramped node
+    causes.  Failure cadence is the paper's 2:1 interval:restart ratio
+    at CI scale.
+
+A ``fleet_profile`` row (non-deterministic wall times; CI ignores it)
+reports where the bench's seconds went via ``telemetry.profile.StepTimer``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.core.cluster import (
+    Cluster,
+    FailureConfig,
+    FailureInjector,
+    Topology,
+    stream_uniform,
+)
+from repro.core.elastic import AutoscalerConfig
+from repro.core.runtime import SimEngine
+from repro.core.simulation import (
+    ReactiveSimConfig,
+    SimResult,
+    WorkloadConfig,
+    simulate_reactive,
+)
+from repro.telemetry.profile import StepTimer
+
+SEED = 0
+
+# -- microbench ---------------------------------------------------------------
+
+MICRO_NODES = 1000
+MICRO_COMPONENTS = 3000
+MICRO_EVENTS = 20_000
+
+
+def _micro_events(cluster: Cluster) -> int:
+    """A deterministic fleet-churn event mix: relocations (place +
+    assign), node failures, and restores.  Returns the op checksum —
+    every placement choice and every epoch folds in, so a single
+    divergent decision between the scalar and vectorized paths shows."""
+    names = [f"c{i}" for i in range(MICRO_COMPONENTS)]
+    cs = 0
+
+    def fold(x: int) -> None:
+        nonlocal cs
+        cs = (cs * 1_000_003 + x + 1) % (2**31 - 1)
+
+    for name in names:
+        node = cluster.place()
+        cluster.assign(node, name)
+        fold(node.node_id)
+    for k in range(MICRO_EVENTS):
+        u = stream_uniform(SEED, 7_000_000 + k, 0)
+        pick = stream_uniform(SEED, 8_000_000 + k, 0)
+        if u < 0.6:
+            # relocate a component to the current least-loaded node
+            name = names[int(pick * MICRO_COMPONENTS)]
+            node = cluster.place()
+            if node is not None:
+                cluster.assign(node, name)
+                fold(node.node_id)
+        elif u < 0.8:
+            node = cluster.nodes[int(pick * MICRO_NODES)]
+            fold(cluster.fail(node))
+        else:
+            node = cluster.nodes[int(pick * MICRO_NODES)]
+            cluster.restore(node)
+            fold(node.epoch)
+    fold(cluster.failures)
+    fold(cluster.total_residents())
+    return cs
+
+
+def microbench_rows() -> List[Dict]:
+    rows: List[Dict] = []
+    scalar_rate: Optional[float] = None
+    for path in ("scalar", "vectorized"):
+        cluster = Cluster(MICRO_NODES, cores=2, vectorize=(path == "vectorized"))
+        t0 = time.perf_counter()
+        checksum = _micro_events(cluster)
+        wall = time.perf_counter() - t0
+        events = MICRO_COMPONENTS + MICRO_EVENTS
+        rate = events / wall if wall > 0 else 0.0
+        row = {
+            "table": "fleet_microbench",
+            "path": path,
+            "nodes": MICRO_NODES,
+            "events": events,
+            "op_checksum": checksum,
+            "wall_s": round(wall, 3),
+            "events_per_s": round(rate),
+        }
+        if path == "scalar":
+            scalar_rate = rate
+        else:
+            row["speedup"] = round(rate / scalar_rate if scalar_rate else 0.0, 1)
+        rows.append(row)
+    return rows
+
+
+# -- small-scale bitwise equivalence -----------------------------------------
+
+
+def _timeline_checksum(result: SimResult) -> int:
+    cs = 0
+    for t, n in result.timeline:
+        cs = (cs * 1_000_003 + int(t * 1000) + n) % (2**31 - 1)
+    return cs
+
+
+def equivalence_rows() -> List[Dict]:
+    # Arrival-paced so the system is busy across the whole chaos window
+    # (a preloaded workload would drain before the first injector tick).
+    wl = WorkloadConfig(
+        total_messages=12_000, partitions=4, growth_alpha=0.0,
+        arrival_rate=12_000 / 75.0,
+    )
+    fc = FailureConfig(
+        probability=0.25, interval=15.0, restart_delay=8.0, seed=3,
+        burst_probability=0.15, burst_scope="rack",
+        gray_probability=0.1, gray_speed=0.3, gray_duration=20.0,
+    )
+    results = {}
+    for path in ("scalar", "vectorized"):
+        results[path] = simulate_reactive(
+            wl, duration=90.0, num_nodes=24, cores=2,
+            failures=fc,
+            topology=Topology(24, nodes_per_rack=4, racks_per_zone=3),
+            # Depth-blind RR + a tight detection window: queues build on
+            # gray nodes (straggler path fires) and node-down windows
+            # outlast detection (supervised relocations fire), so the
+            # equivalence claim covers the whole chaos surface.
+            config=ReactiveSimConfig(
+                initial_tasks=12, scheduler="round_robin",
+                detect_timeout=3.0, restart_cost=2.0,
+            ),
+            vectorize=(path == "vectorized"),
+            straggler_threshold=2.5,
+            name=f"fleet-eq-{path}",
+        )
+    s, v = results["scalar"], results["vectorized"]
+    return [{
+        "table": "fleet_equivalence",
+        "nodes": 24,
+        "processed_scalar": s.processed,
+        "processed_vectorized": v.processed,
+        "failures": v.failures,
+        "restarts_scalar": s.restarts,
+        "restarts_vectorized": v.restarts,
+        "straggler_relocations": v.straggler_relocations,
+        "timeline_checksum_scalar": _timeline_checksum(s),
+        "timeline_checksum_vectorized": _timeline_checksum(v),
+        "bitwise_equal": bool(
+            s.processed == v.processed
+            and s.failures == v.failures
+            and s.restarts == v.restarts
+            and s.straggler_relocations == v.straggler_relocations
+            and _timeline_checksum(s) == _timeline_checksum(v)
+        ),
+    }]
+
+
+# -- the capacity-planning grid ----------------------------------------------
+
+GRID_DURATION = 120.0
+GRID_INTERVAL = 20.0    # paper's 2:1 interval:restart ratio at CI scale
+GRID_RESTART = 10.0
+GRID_TICK = 0.5
+GRID_UTILIZATION = 0.98  # sized near capacity: downtime becomes loss
+GRID_ARRIVAL_WINDOW = 0.97  # arrivals span ~all of it; small drain tail
+MSGS_FOR_FLEET = {100: 120_000, 1000: 350_000}
+
+
+def _fleet_workload(fleet: int, profile: str) -> WorkloadConfig:
+    total = MSGS_FOR_FLEET[fleet]
+    rate = total / (GRID_DURATION * GRID_ARRIVAL_WINDOW)
+    wl = WorkloadConfig(
+        total_messages=total,
+        partitions=64 if fleet >= 1000 else 16,
+        growth_alpha=0.0,               # flat cost: loss, not Fig. 8 slope
+        arrival_rate=rate,
+        arrival_profile=profile,
+        diurnal_period=GRID_DURATION / 2.0,
+        diurnal_amplitude=0.8,
+        # Per-message cost sized so the fixed gang runs at
+        # GRID_UTILIZATION of capacity: a p=0 row clears the workload,
+        # but chaos-induced downtime can't be made up — it shows as
+        # loss.  (The diurnal peak, 1.8x rate, deliberately exceeds
+        # capacity; the trough pays some of it back.)
+        t_process0=GRID_UTILIZATION * fleet / rate,
+    )
+    return wl
+
+
+def _fleet_config(fleet: int, scheduler: str = "jsq") -> ReactiveSimConfig:
+    return ReactiveSimConfig(
+        initial_tasks=fleet,
+        scheduler=scheduler,
+        elastic=False,                  # fixed gang: loss isolates chaos
+        autoscaler=AutoscalerConfig(
+            min_workers=fleet, max_workers=fleet, cooldown=1e9,
+        ),
+        detect_timeout=5.0,
+        restart_cost=2.0,
+        tick=GRID_TICK,
+    )
+
+
+def _grid_row(
+    fleet: int,
+    mode: str,
+    p: float,
+    straggler_threshold: float = 0.0,
+) -> Dict:
+    profile = "diurnal" if mode == "diurnal" else "constant"
+    wl = _fleet_workload(fleet, profile)
+    topo = Topology(fleet, nodes_per_rack=10, racks_per_zone=5)
+    fc = FailureConfig(
+        interval=GRID_INTERVAL, restart_delay=GRID_RESTART, seed=SEED,
+        # A rack burst downs all `nodes_per_rack` members, and there are
+        # fleet/nodes_per_rack racks, so a per-rack draw at the same `p`
+        # carries the identical expected per-node failure mass as the
+        # independent rows — concentrated into correlated waves.
+        probability=p if mode in ("independent", "diurnal") else 0.0,
+        burst_probability=p if mode == "rack" else 0.0,
+        burst_scope="rack",
+        gray_probability=p if mode == "gray" else 0.0,
+        gray_speed=0.2,
+        gray_duration=40.0,
+    )
+    # Gray failures are invisible to depth-aware dispatch (jsq simply
+    # routes around the deep queues), so those rows use depth-blind RR:
+    # the symptom builds and only straggler detection can relieve it.
+    scheduler = "round_robin" if mode == "gray" else "jsq"
+    r = simulate_reactive(
+        wl, duration=GRID_DURATION, num_nodes=fleet, cores=2,
+        failures=fc, topology=topo,
+        config=_fleet_config(fleet, scheduler),
+        straggler_threshold=straggler_threshold,
+        name=f"fleet{fleet}-{mode}-p{p}",
+    )
+    return {
+        "table": "fleet_grid",
+        "fleet": fleet,
+        "mode": mode,
+        "p_failure": p,
+        "messages": wl.total_messages,
+        "processed": r.processed,
+        "loss_pct": round(100.0 * (1.0 - r.processed / wl.total_messages), 2),
+        "failures": r.failures,
+        "restarts": r.restarts,
+        "straggler_detection": bool(straggler_threshold > 0),
+        "straggler_relocations": r.straggler_relocations,
+    }
+
+
+def grid_rows() -> List[Dict]:
+    rows: List[Dict] = []
+    # Capacity curve: loss vs p vs fleet size, independent failures.
+    for fleet in (100, 1000):
+        for p in (0.0, 0.3):
+            rows.append(_grid_row(fleet, "independent", p))
+    # Correlated: rack bursts at matched per-node failure mass (see
+    # _grid_row), concentrated into whole-rack waves.
+    for fleet in (100, 1000):
+        rows.append(_grid_row(fleet, "rack", 0.3))
+    # Diurnal arrivals over the 1000-node fleet under failures.
+    rows.append(_grid_row(1000, "diurnal", 0.3))
+    # Gray failures: detection on vs off (100 nodes keeps it cheap).
+    rows.append(_grid_row(100, "gray", 0.3))
+    rows.append(_grid_row(100, "gray", 0.3, straggler_threshold=4.0))
+    big = [r for r in rows if r["fleet"] == 1000]
+    gray_off = next(
+        r for r in rows if r["mode"] == "gray" and not r["straggler_detection"]
+    )
+    gray_on = next(
+        r for r in rows if r["mode"] == "gray" and r["straggler_detection"]
+    )
+    rows.append({
+        "table": "fleet_summary",
+        "thousand_node_rows": len(big),
+        "thousand_node_messages": sum(r["messages"] for r in big),
+        "grid_meets_message_floor": bool(
+            sum(r["messages"] for r in big) >= 1_000_000
+        ),
+        "straggler_detection_helps": bool(
+            gray_on["loss_pct"] <= gray_off["loss_pct"]
+            and gray_on["straggler_relocations"] > 0
+        ),
+    })
+    return rows
+
+
+def run(seed: int = 0) -> List[Dict]:
+    del seed  # the grid is seeded per-stream (see core.cluster)
+    timer = StepTimer()
+    rows: List[Dict] = []
+    with timer.time("microbench"):
+        rows.extend(microbench_rows())
+    with timer.time("equivalence"):
+        rows.extend(equivalence_rows())
+    with timer.time("grid"):
+        rows.extend(grid_rows())
+    profile = {"table": "fleet_profile"}
+    for name, stats in timer.snapshot().items():
+        profile[f"{name}_s"] = round(stats["total_s"], 1)
+    rows.append(profile)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -46,7 +46,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench (throughput|failure|completion|"
                          "scheduler|serving|training|dataflow|controlplane|"
-                         "kernels|roofline)")
+                         "fleet|kernels|roofline)")
     ap.add_argument("--json", default=None, help="also dump rows as JSONL")
     args = ap.parse_args()
 
@@ -55,6 +55,7 @@ def main() -> None:
         bench_controlplane,
         bench_dataflow,
         bench_failure,
+        bench_fleet,
         bench_kernels,
         bench_roofline,
         bench_scheduler,
@@ -73,29 +74,43 @@ def main() -> None:
         "training": bench_training.run,
         "dataflow": bench_dataflow.run,
         "controlplane": bench_controlplane.run,
+        "fleet": bench_fleet.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }
     if args.only:
         benches = {args.only: benches[args.only]}
 
+    from repro.telemetry.profile import StepTimer
+
+    timer = StepTimer()
     all_rows = []
     for name, fn in benches.items():
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
-        rows = fn()
+        with timer.time(name):
+            rows = fn()
         for row in rows:
             print(_fmt(row), flush=True)
         all_rows.extend(rows)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", flush=True)
         if name in ("serving", "decode", "training", "dataflow", "failure",
-                    "controlplane"):
+                    "controlplane", "fleet"):
             out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
             with open(out, "w") as fh:
                 json.dump({"bench": name, "wall_s": round(elapsed, 1),
                            "rows": rows}, fh, indent=1)
             print(f"# {name} baseline written to {out}", flush=True)
+
+    # Where the wall-clock went, one line per bench (StepTimer profile).
+    print("# --- profile ---", flush=True)
+    for name, stats in timer.snapshot().items():
+        print(
+            f"# profile,{name},total_s={stats['total_s']:.1f},"
+            f"calls={stats['calls']}",
+            flush=True,
+        )
 
     if args.json:
         with open(args.json, "w") as fh:

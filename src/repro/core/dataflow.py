@@ -262,6 +262,7 @@ class Stage:
         cluster: Optional[Cluster] = None,
         restart_cost: float = 0.0,
         step_cost: Optional[StepCost] = None,
+        straggler_threshold: float = 0.0,
         consume_cost: Optional[float] = None,
         completion_window: Optional[int] = 65536,
         metric_prefix: str = "stage",
@@ -342,6 +343,7 @@ class Stage:
                 cluster=cluster,
                 restart_cost=restart_cost,
                 step_cost=step_cost,
+                straggler_threshold=straggler_threshold,
                 metric_prefix=metric_prefix,
                 worker_noun=worker_noun,
             )

@@ -316,6 +316,10 @@ class ElasticPool:
         cluster: Optional[Cluster] = None,
         restart_cost: float = 0.0,
         step_cost: Optional[StepCost] = None,
+        straggler_threshold: float = 0.0,
+        straggler_patience: int = 3,
+        straggler_check_every: int = 5,
+        straggler_quarantine: float = 30.0,
         metrics: Optional[MetricsReplica] = None,
         metric_prefix: str = "pool",
         worker_noun: str = "worker",
@@ -367,6 +371,22 @@ class ElasticPool:
         self.cluster = cluster
         self.restart_cost = restart_cost
         self.step_cost = step_cost
+        # Gray-failure (slow node) detection — symptom-based, because a
+        # gray node is *up*: heartbeats flow, ``node.up`` holds, only
+        # throughput sags.  A worker whose queue stays above
+        # ``straggler_threshold × median peer load`` for
+        # ``straggler_patience`` consecutive checks (one check every
+        # ``straggler_check_every`` steps) is relocated off its node,
+        # and that node is excluded from the relocation's placement.
+        # ``straggler_threshold <= 0`` disables the path entirely.
+        self.straggler_threshold = straggler_threshold
+        self.straggler_patience = max(int(straggler_patience), 1)
+        self.straggler_check_every = max(int(straggler_check_every), 1)
+        self.straggler_quarantine = straggler_quarantine
+        self._straggle_counts: Dict[str, int] = {}
+        self._straggler_suspects: Dict[int, float] = {}  # node_id -> expiry
+        self._straggle_cooldown: Dict[str, float] = {}   # worker -> until
+        self._steps_since_straggle = 0
         # Messages processed over the pool's lifetime — the ``k`` of the
         # cost model's t_p(k) and the cheap progress counter harnesses
         # sample (merged_metrics() would cost a CRDT merge per sample).
@@ -598,6 +618,66 @@ class ElasticPool:
             self._place(worker, target)
             worker.warm_until = now + self.restart_cost
             self.metrics.incr(f"{self._px}.{self._noun}_relocations")
+
+    def _detect_stragglers(self, now: float) -> None:
+        """Relocate workers stuck on gray (slow-but-up) nodes.
+
+        A gray node passes every liveness check, so detection has to be
+        symptom-based: dilation slows its workers' drain rate, their
+        queues grow relative to healthy peers, and a queue sustained
+        above ``threshold × median`` for ``patience`` checks marks the
+        worker a straggler.  The relocation excludes the suspect node
+        from placement — otherwise a freshly-drained gray node is the
+        least-loaded node and immediately re-attracts the move — and
+        quarantines it for ``straggler_quarantine`` seconds, because a
+        node that just shed its residents is *exactly* the node
+        least-loaded placement would pick for everyone else's
+        relocations while it is still slow."""
+        suspects = self._straggler_suspects
+        if suspects:
+            for nid in [n for n, exp in suspects.items() if now >= exp]:
+                del suspects[nid]
+        placed = [
+            w for w in self.workers
+            if w.alive
+            and getattr(w, "node", None) is not None
+            and w.node.up
+            and now >= getattr(w, "warm_until", 0.0)
+        ]
+        if len(placed) < 2:
+            return
+        loads = sorted(w.load() for w in placed)
+        median = loads[len(loads) // 2]
+        bar = self.straggler_threshold * (median + 1.0)
+        counts = self._straggle_counts
+        cooldown = self._straggle_cooldown
+        for w in placed:
+            if w.load() <= bar:
+                counts.pop(w.name, None)
+                cooldown.pop(w.name, None)
+                continue
+            # A just-relocated worker still *shows* the symptom (its
+            # backlog came along) though the cause is gone — give it the
+            # quarantine window to drain before it can be flagged again,
+            # or it relocates in a loop, paying warm-up each hop.
+            if now < cooldown.get(w.name, 0.0):
+                continue
+            seen = counts.get(w.name, 0) + 1
+            if seen < self.straggler_patience:
+                counts[w.name] = seen
+                continue
+            counts.pop(w.name, None)
+            exclude = set(suspects)
+            exclude.add(w.node.node_id)
+            target = self.cluster.place(exclude=exclude)
+            if target is None or target is w.node:
+                continue
+            if self.straggler_quarantine > 0:
+                suspects[w.node.node_id] = now + self.straggler_quarantine
+                cooldown[w.name] = now + self.straggler_quarantine
+            self._place(w, target)
+            w.warm_until = now + self.restart_cost
+            self.metrics.incr(f"{self._px}.straggler_relocations")
 
     # -- internals -------------------------------------------------------------
     def _spawn(self) -> Any:
@@ -1060,6 +1140,11 @@ class ElasticPool:
             for worker in self.workers:
                 if worker.alive:
                     worked += self._metered_step(worker, now, t_p)
+            if self.cluster is not None and self.straggler_threshold > 0.0:
+                self._steps_since_straggle += 1
+                if self._steps_since_straggle >= self.straggler_check_every:
+                    self._steps_since_straggle = 0
+                    self._detect_stragglers(now)
         self.work_done += worked
         if self.collect is not None:
             # Harvest finished outputs BEFORE supervision: the restart

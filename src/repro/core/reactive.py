@@ -71,6 +71,7 @@ class ReactiveJob:
         cluster: Optional[Cluster] = None,
         restart_cost: float = 0.0,
         step_cost: Optional[StepCost] = None,
+        straggler_threshold: float = 0.0,
         consume_cost: Optional[float] = None,
         completion_window: Optional[int] = 65536,
     ) -> None:
@@ -99,6 +100,7 @@ class ReactiveJob:
             cluster=cluster,
             restart_cost=restart_cost,
             step_cost=step_cost,
+            straggler_threshold=straggler_threshold,
             consume_cost=consume_cost,
             completion_window=completion_window,
             metric_prefix="job",

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import threading
 import time
 from dataclasses import dataclass
@@ -202,6 +203,10 @@ class VirtualRuntime:
         self.engine = engine or SimEngine()
         self.stats = RuntimeStats()
         self._ticking = False
+        # (interval, next_fire_time) -> handler group: periodic handlers
+        # sharing a cadence coalesce into ONE heap event per firing (a
+        # 1000-sampler fleet sim schedules 1 event/tick, not 1000).
+        self._periodic: dict = {}
 
     # -- scheduling -----------------------------------------------------------
     def at(self, t: float, fn: Callable[[], None]) -> None:
@@ -210,11 +215,34 @@ class VirtualRuntime:
 
     def every(self, interval: float, fn: Callable[[], None],
               start: Optional[float] = None) -> None:
-        """Recurring event each ``interval`` (first at ``start`` or now)."""
-        def fire() -> None:
-            fn()
-            self.engine.schedule(interval, fire)
-        self.at(start if start is not None else self.engine.now, fire)
+        """Recurring event each ``interval`` (first at ``start`` or now).
+
+        Handlers registered with the same ``(interval, first-fire time)``
+        coalesce into a single heap event that fires them in registration
+        order — event-heap cost is per *cadence*, not per handler."""
+        t0 = start if start is not None else self.engine.now
+        key = (interval, t0)
+        group = self._periodic.get(key)
+        if group is not None:
+            group.append(fn)
+            return
+        group = [fn]
+        self._periodic[key] = group
+
+        def fire(t: float = t0) -> None:
+            for handler in group:
+                handler()
+            # Registry maintenance is best-effort: two groups with the
+            # same interval but different phases may collide on a future
+            # key — the registry is only the entry point for *new*
+            # registrations to coalesce, so first-writer wins is fine.
+            if self._periodic.get((interval, t)) is group:
+                del self._periodic[(interval, t)]
+            t_next = t + interval
+            self._periodic.setdefault((interval, t_next), group)
+            self.engine.schedule(interval, lambda: fire(t_next))
+
+        self.at(t0, fire)
 
     # -- chaos hooks ----------------------------------------------------------
     def _pool(self) -> ElasticPool:
@@ -244,14 +272,16 @@ class VirtualRuntime:
         """Advance virtual time to ``t_end`` (resumable: successive calls
         continue the same tick chain).
 
-        Fast-forward: while the heap holds *nothing but* the tick chain
-        itself, no other event can interleave, so the tick is applied
-        inline (one ``heapreplace`` instead of a pop + a ``_tick`` call
-        + a ``schedule`` push per tick).  High-fan-out sims spend 10^5+
-        ticks in exactly this state; the heap path is taken the moment
-        an injector, sampler, or one-shot shares the clock — or when
-        the job itself schedules mid-step (the heap length check runs
-        against the live heap) — so interleaving stays exact."""
+        Fast-forward: whenever the tick chain is at the heap root, the
+        ticks up to the next *foreign* event (injector, sampler,
+        one-shot — or anything the job schedules mid-step: the barrier
+        is re-read from the live heap every iteration) are applied
+        inline — one pop + one push per uninterrupted stretch instead of
+        per tick.  High-fan-out sims spend 10^5+ ticks in such
+        stretches even with samplers on the clock; interleaving stays
+        exact because a tick never runs past the barrier (at an equal
+        timestamp, heap order — insertion order — decides, exactly as
+        the slow path would)."""
         engine = self.engine
         if not self._ticking:
             self._ticking = True
@@ -260,18 +290,30 @@ class VirtualRuntime:
         tick = self._tick
         step = self.job.step
         stats = self.stats
+        dt = self.dt
         while heap and heap[0][0] <= t_end:
-            if len(heap) == 1 and heap[0][2] == tick:
-                t = heap[0][0]
+            t, _, fn = heap[0]
+            if fn != tick:
+                heapq.heappop(heap)
+                engine.now = t
+                fn()
+                continue
+            # Tick chain at the root: it precedes everything else
+            # currently queued at time t (it won the heap), so inline
+            # ticks until one would land at-or-after a foreign event
+            # (any rescheduled tick carries a fresh seq and would lose
+            # an equal-time race) or past t_end.
+            heapq.heappop(heap)
+            first = True
+            while t <= t_end:
+                barrier = heap[0][0] if heap else math.inf
+                if t > barrier or (t == barrier and not first):
+                    break
                 engine.now = t
                 stats.processed += step(t)
                 stats.rounds += 1
-                heapq.heapreplace(
-                    heap, (t + self.dt, next(engine._seq), tick)
-                )
-            else:
-                t, _, fn = heapq.heappop(heap)
-                engine.now = t
-                fn()
+                t += dt
+                first = False
+            heapq.heappush(heap, (t, next(engine._seq), tick))
         engine.now = t_end
         return stats

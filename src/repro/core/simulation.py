@@ -58,6 +58,7 @@ from repro.core.cluster import (  # re-exported for back-compat
     FailureInjector,
     Node,
     StepCost,
+    Topology,
 )
 from repro.core.dataflow import Stage, StageGraph
 from repro.core.elastic import AutoscalerConfig
@@ -91,6 +92,16 @@ class WorkloadConfig:
     ``arrival_rate > 0``: messages/second arrive over time, uniformly
     across partitions — the non-saturated regime where scheduling policy
     governs latency tails.
+
+    ``arrival_profile`` shapes the rate over time (closed-form integrated
+    counts, so arrivals are exact and tick-size independent):
+
+      * ``"constant"`` — the flat paper regime, ``rate(t) = r``;
+      * ``"diurnal"``  — ``rate(t) = r·(1 + A·sin(2πt/T))``: the daily
+        load wave every elastic deployment actually sees (A < 1 keeps
+        the rate positive);
+      * ``"flash"``    — constant plus a flash crowd: rate multiplies by
+        ``flash_multiplier`` inside ``[flash_at, flash_at + flash_duration)``.
     """
 
     total_messages: int = 60_000
@@ -100,6 +111,12 @@ class WorkloadConfig:
     growth_alpha: float = 0.0015  # t_p(k) = t_p0 * (1 + alpha * sqrt(k))
     batch_n: int = 10             # the paper's n (consume n, then hand off)
     arrival_rate: float = 0.0     # messages/s into the topic (0 = preloaded)
+    arrival_profile: str = "constant"   # "constant" | "diurnal" | "flash"
+    diurnal_period: float = 240.0       # T: one simulated "day"
+    diurnal_amplitude: float = 0.8      # A in [0, 1)
+    flash_at: float = 0.0               # flash-crowd window start
+    flash_duration: float = 0.0         # window length (0 = no flash)
+    flash_multiplier: float = 5.0       # rate multiplier inside the window
 
     def t_process(self, processed_so_far: int) -> float:
         return self.t_process0 * (1.0 + self.growth_alpha * math.sqrt(processed_so_far))
@@ -107,11 +124,38 @@ class WorkloadConfig:
     def step_cost(self) -> StepCost:
         return StepCost(self.t_process0, self.growth_alpha)
 
+    def arrived(self, now: float) -> int:
+        """Total messages arrived across all partitions by ``now`` —
+        the exact integral of the arrival-rate profile."""
+        if self.arrival_rate <= 0:
+            return self.total_messages
+        r = self.arrival_rate
+        if self.arrival_profile == "constant":
+            x = r * now
+        elif self.arrival_profile == "diurnal":
+            # ∫ r(1 + A sin(2πt/T)) dt = r(t + A·T/2π·(1 − cos(2πt/T)))
+            w = 2.0 * math.pi / self.diurnal_period
+            x = r * (now + self.diurnal_amplitude / w * (1.0 - math.cos(w * now)))
+        elif self.arrival_profile == "flash":
+            overlap = max(
+                0.0,
+                min(now, self.flash_at + self.flash_duration) - self.flash_at,
+            )
+            x = r * (now + (self.flash_multiplier - 1.0) * overlap)
+        else:
+            raise ValueError(f"unknown arrival_profile {self.arrival_profile!r}")
+        return min(self.total_messages, int(x))
+
     def available(self, partition_total: int, now: float) -> int:
         """Messages visible in one partition at simulated time `now`."""
         if self.arrival_rate <= 0:
             return partition_total
-        arrived = int(self.arrival_rate * now / max(self.partitions, 1))
+        if self.arrival_profile == "constant":
+            # Kept in the original form (rate·now/partitions, floored
+            # once) so the paper-regime numbers stay bit-identical.
+            arrived = int(self.arrival_rate * now / max(self.partitions, 1))
+        else:
+            arrived = self.arrived(now) // max(self.partitions, 1)
         return min(partition_total, arrived)
 
 
@@ -128,6 +172,7 @@ class SimResult:
     restarts: int = 0          # supervisor-driven component relocations
     scale_events: int = 0      # autoscaler actions
     final_tasks: int = 0
+    straggler_relocations: int = 0  # gray-failure detections acted on
 
     def throughput(self) -> float:
         return self.processed / self.duration if self.duration > 0 else 0.0
@@ -356,6 +401,9 @@ def simulate_reactive(
     config: Optional[ReactiveSimConfig] = None,
     name: Optional[str] = None,
     node_speeds: Optional[List[float]] = None,
+    topology: Optional[Topology] = None,
+    vectorize: bool = True,
+    straggler_threshold: float = 0.0,
 ) -> SimResult:
     """Reactive Liquid on the live actuator: a real ``ReactiveJob``
     (virtual consumers → scheduler-routed mailboxes → supervised elastic
@@ -365,7 +413,10 @@ def simulate_reactive(
     node failure, relocation-after-``restart_cost``, and co-residency
     dilation; the ``FailureInjector`` rides the same heap."""
     cfg = config or ReactiveSimConfig()
-    cluster = Cluster(num_nodes, cores, speeds=node_speeds)
+    cluster = Cluster(
+        num_nodes, cores, speeds=node_speeds,
+        topology=topology, vectorize=vectorize,
+    )
     log = MessageLog()
     log.create_topic("stream", workload.partitions)
     job = ReactiveJob(
@@ -383,6 +434,7 @@ def simulate_reactive(
         cluster=cluster,
         restart_cost=cfg.restart_cost,
         step_cost=workload.step_cost(),
+        straggler_threshold=straggler_threshold,
         consume_cost=workload.t_consume + cfg.forward_cost,
         completion_window=None,  # the figures want the full distribution
     )
@@ -396,10 +448,7 @@ def simulate_reactive(
         published = [0]
 
         def pump() -> None:
-            target = min(
-                workload.total_messages,
-                int(workload.arrival_rate * rt.engine.now),
-            )
+            target = workload.arrived(rt.engine.now)
             for i in range(published[0], target):
                 log.publish("stream", payload=i, created_at=rt.engine.now)
             published[0] = target
@@ -426,6 +475,9 @@ def simulate_reactive(
         restarts=_restart_count(job.pool),
         scale_events=len(job.pool.controller.scale_events),
         final_tasks=len(job.pool.active_workers()),
+        straggler_relocations=int(
+            job.pool.metrics.value("job.straggler_relocations")
+        ),
     )
 
 
@@ -543,10 +595,7 @@ def simulate_dataflow(
 
     if workload.arrival_rate > 0:
         def pump() -> None:
-            target = min(
-                workload.total_messages,
-                int(workload.arrival_rate * rt.engine.now),
-            )
+            target = workload.arrived(rt.engine.now)
             for i in range(published[0], target):
                 log.publish("t0", payload=i, created_at=rt.engine.now)
             published[0] = target

@@ -7,6 +7,14 @@ paper-figure simulations drive: a ``Cluster`` the job's pools place
 workers on, plus a ``FailureInjector`` riding a ``SimEngine`` the driver
 pumps once per tick (``engine.run_until(tick)``) so node failures and
 restores interleave deterministically with the job's steps.
+
+Fleet-scale chaos flags: ``--topology R,Z`` lays the nodes out as racks
+of R in zones of Z racks, ``--correlated P`` adds rack-correlated burst
+failures at probability P per rack per interval (``--correlated-scope
+zone`` widens the domain), ``--partition-prob`` cuts whole zones off,
+``--gray-prob`` ramps node speeds down without taking them down, and
+``--diurnal`` shapes the arrival process for drivers that honor a
+``WorkloadConfig`` (see ``core.simulation.WorkloadConfig.arrival_profile``).
 """
 
 from __future__ import annotations
@@ -14,7 +22,7 @@ from __future__ import annotations
 import argparse
 from typing import Optional, Tuple
 
-from repro.core.cluster import Cluster, FailureConfig, FailureInjector
+from repro.core.cluster import Cluster, FailureConfig, FailureInjector, Topology
 from repro.core.runtime import SimEngine
 
 
@@ -41,6 +49,51 @@ def add_chaos_flags(
     ap.add_argument("--straggler-speed", type=float, default=0.25)
     ap.add_argument("--restart-cost", type=float, default=2.0,
                     help="relocation warm-up after a supervised restart")
+    ap.add_argument("--topology", type=str, default=None, metavar="R,Z",
+                    help="rack/zone layout: R nodes per rack, Z racks "
+                         "per zone (enables correlated chaos)")
+    ap.add_argument("--correlated", type=float, default=0.0, metavar="P",
+                    help="correlated burst probability per failure "
+                         "domain per --fail-interval (needs --topology)")
+    ap.add_argument("--correlated-scope", choices=("rack", "zone"),
+                    default="rack",
+                    help="failure domain for --correlated bursts")
+    ap.add_argument("--partition-prob", type=float, default=0.0,
+                    help="zone network-partition probability per "
+                         "interval (needs --topology)")
+    ap.add_argument("--gray-prob", type=float, default=0.0,
+                    help="gray-failure (speed ramp) probability per "
+                         "node per interval")
+    ap.add_argument("--gray-speed", type=float, default=0.25,
+                    help="speed multiplier while a node is gray")
+    ap.add_argument("--diurnal", type=float, default=0.0, metavar="A",
+                    help=">0: diurnal arrival profile with amplitude A "
+                         "(drivers with an arrival-rate workload)")
+    ap.add_argument("--diurnal-period", type=float, default=240.0)
+    ap.add_argument("--scalar-cluster", action="store_true",
+                    help="pin the cluster to the scalar reference path "
+                         "(vectorize=False; debugging/benchmarking)")
+
+
+def parse_topology(args) -> Optional[Topology]:
+    """The ``--topology R,Z`` layout for ``args.nodes`` nodes, or None."""
+    spec = getattr(args, "topology", None)
+    if not spec or args.nodes <= 0:
+        return None
+    try:
+        per_rack, racks_per_zone = (int(x) for x in spec.split(","))
+    except ValueError:
+        raise SystemExit(f"--topology expects R,Z (got {spec!r})")
+    return Topology(args.nodes, nodes_per_rack=per_rack,
+                    racks_per_zone=racks_per_zone)
+
+
+def apply_arrival_flags(args, workload) -> None:
+    """Shape a ``WorkloadConfig``'s arrival process from the flags."""
+    if getattr(args, "diurnal", 0.0) > 0.0:
+        workload.arrival_profile = "diurnal"
+        workload.diurnal_amplitude = args.diurnal
+        workload.diurnal_period = args.diurnal_period
 
 
 def build_cluster(
@@ -57,7 +110,16 @@ def build_cluster(
             (args.straggler_speed if i == args.straggler else 1.0)
             for i in range(args.nodes)
         ]
-    cluster = Cluster(args.nodes, args.cores, speeds=speeds)
+    topology = parse_topology(args)
+    if topology is None and (
+        getattr(args, "correlated", 0.0) > 0.0
+        or getattr(args, "partition_prob", 0.0) > 0.0
+    ):
+        raise SystemExit("--correlated/--partition-prob need --topology R,Z")
+    cluster = Cluster(
+        args.nodes, args.cores, speeds=speeds, topology=topology,
+        vectorize=not getattr(args, "scalar_cluster", False),
+    )
     engine = SimEngine()
     injector = FailureInjector(
         engine, cluster,
@@ -66,6 +128,11 @@ def build_cluster(
             interval=args.fail_interval,
             restart_delay=args.fail_restart,
             seed=args.seed,
+            burst_probability=getattr(args, "correlated", 0.0),
+            burst_scope=getattr(args, "correlated_scope", "rack"),
+            partition_probability=getattr(args, "partition_prob", 0.0),
+            gray_probability=getattr(args, "gray_prob", 0.0),
+            gray_speed=getattr(args, "gray_speed", 0.25),
         ),
     )
     return cluster, engine, injector

@@ -33,7 +33,12 @@ import json
 from repro.core.dataflow import Stage, StageGraph
 from repro.core.elastic import AutoscalerConfig
 from repro.data.topics import MessageLog
-from repro.launch.chaos import add_chaos_flags, build_cluster
+from repro.core.simulation import WorkloadConfig
+from repro.launch.chaos import (
+    add_chaos_flags,
+    apply_arrival_flags,
+    build_cluster,
+)
 
 
 def build_graph(args, cluster=None) -> StageGraph:
@@ -123,6 +128,20 @@ def main(argv=None) -> int:
             if schedule[-1] == 0:
                 schedule.pop()
         arrivals = iter(schedule)
+    elif args.diurnal > 0.0:
+        # Day/night arrival shaping: pace the submissions over one
+        # --diurnal-period using the closed-form arrival integral.
+        wl = WorkloadConfig(
+            total_messages=args.messages, partitions=1,
+            arrival_rate=args.messages / args.diurnal_period,
+        )
+        apply_arrival_flags(args, wl)
+        schedule, prev = [], 0
+        while prev < args.messages:
+            cur = min(wl.arrived(float(len(schedule) + 1)), args.messages)
+            schedule.append(cur - prev)
+            prev = cur
+        arrivals = iter(schedule)
     else:
         for i in range(args.messages):
             head.submit(i, key=(str(i) if args.keyed else None), now=0.0)
@@ -133,7 +152,8 @@ def main(argv=None) -> int:
         t_s, kill_stage = args.kill_stage_at.split(":", 1)
         kill_at = int(t_s)
 
-    tick, submitted, killed = 0, args.messages if not args.spike else 0, None
+    paced = args.spike or args.diurnal > 0.0
+    tick, submitted, killed = 0, 0 if paced else args.messages, None
     upcoming = next(arrivals, None)
     while tick < args.max_ticks:
         for _ in range(upcoming or 0):

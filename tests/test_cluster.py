@@ -72,6 +72,40 @@ def test_spawn_places_least_loaded_and_registers_residency():
         assert node.residents <= names
 
 
+def test_residency_index_is_source_of_truth():
+    """assign/release/node_of ride the name->node index (no scans):
+    re-assign moves exactly one residency, release drops it, and the
+    audit (the demoted scan) agrees after every mutation."""
+    cluster = Cluster(4, cores=2)
+    a, b = cluster.nodes[0], cluster.nodes[1]
+    cluster.assign(a, "x")
+    cluster.assign(a, "x")  # idempotent
+    assert cluster.node_of("x") is a and cluster.total_residents() == 1
+    cluster.assign(b, "x")  # moves, never duplicates
+    assert cluster.node_of("x") is b
+    assert "x" not in a.residents and "x" in b.residents
+    assert cluster.total_residents() == 1
+    cluster.audit()
+    cluster.release("x")
+    assert cluster.node_of("x") is None and cluster.total_residents() == 0
+    cluster.release("x")  # releasing a stranger is a no-op
+    cluster.audit()
+
+
+def test_dilation_cache_invalidated_on_residency_and_speed_change():
+    cluster = Cluster(1, cores=2)
+    node = cluster.nodes[0]
+    assert node.dilation() == 1.0
+    for i in range(4):
+        cluster.assign(node, f"w{i}")
+    assert node.dilation() == 2.0          # 4 residents / 2 cores
+    cluster.release("w0")
+    assert node.dilation() == 1.5
+    cluster.set_speed(node, 0.5)
+    assert node.dilation() == 3.0
+    cluster.audit()
+
+
 def test_node_down_silences_all_residents_and_supervisor_relocates():
     cluster = Cluster(3, cores=2)
     pool, sink = make_pool(cluster, n=6)
@@ -291,13 +325,17 @@ def test_cluster_invariants_under_chaos(ops):
                 pool.step(now)
                 now += 1.0
 
-        # Invariant: residency conservation, continuously.
+        # Invariant: residency conservation, continuously — including
+        # the index-vs-scan agreement the residency index must keep
+        # (the old O(N) scans live on as this debug assertion).
+        cluster.audit()
         placed = [w for w in pool.workers if getattr(w, "node", None) is not None]
         assert cluster.total_residents() == len(placed)
         for w in placed:
             assert w.name in w.node.residents
             owners = [n for n in cluster.nodes if w.name in n.residents]
             assert owners == [w.node]
+            assert cluster.node_of(w.name) is w.node
         # unplaced workers are only possible with zero healthy nodes at
         # their (re)placement attempt; if any node is healthy the
         # rebalance pass re-places them within a step, checked below.
