@@ -12,6 +12,8 @@
                       and the backpressure-throttle lag experiment
   bench_controlplane — scalar vs vectorized dispatch/forward hot loops
                       (checksums bit-identical; speedup is the claim)
+  bench_multitenant — multi-tenant fleet A/B: cost-weighted packing +
+                      cross-pool preemption vs static partitioning
   bench_kernels     — kernel tiling numbers + CPU reference timings
   bench_roofline    — the 40-cell dry-run roofline table
 
@@ -46,7 +48,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench (throughput|failure|completion|"
                          "scheduler|serving|training|dataflow|controlplane|"
-                         "fleet|kernels|roofline)")
+                         "fleet|multitenant|kernels|roofline)")
     ap.add_argument("--json", default=None, help="also dump rows as JSONL")
     args = ap.parse_args()
 
@@ -56,6 +58,7 @@ def main() -> None:
         bench_dataflow,
         bench_failure,
         bench_fleet,
+        bench_multitenant,
         bench_kernels,
         bench_roofline,
         bench_scheduler,
@@ -75,6 +78,7 @@ def main() -> None:
         "dataflow": bench_dataflow.run,
         "controlplane": bench_controlplane.run,
         "fleet": bench_fleet.run,
+        "multitenant": bench_multitenant.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }
@@ -96,7 +100,7 @@ def main() -> None:
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", flush=True)
         if name in ("serving", "decode", "training", "dataflow", "failure",
-                    "controlplane", "fleet"):
+                    "controlplane", "fleet", "multitenant"):
             out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
             with open(out, "w") as fh:
                 json.dump({"bench": name, "wall_s": round(elapsed, 1),

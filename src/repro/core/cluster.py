@@ -187,6 +187,11 @@ class Node:
     up: bool = True
     epoch: int = 0          # bumps on every failure; stale events check it
     residents: Set[str] = field(default_factory=set)
+    # Cost-weighted residency load: the sum of the placement weights of
+    # every resident (default weight 1.0, so for unweighted callers this
+    # is exactly ``len(residents)`` and placement decisions are bitwise
+    # unchanged).  Mutated only through Cluster.assign/release.
+    load: float = 0.0
     # Cached dilation; None = dirty.  Invalidated by Cluster on every
     # residency or speed change (mutate residents/speed only through the
     # Cluster so the cache — and the placement heap — stay coherent).
@@ -210,8 +215,14 @@ class Node:
 class Cluster:
     """A set of nodes plus the placement policy.
 
-    Placement is least-loaded-healthiest: among up nodes, the fewest
-    residents (ties broken by node id — deterministic).  Residency is
+    Placement is least-loaded-healthiest: among up nodes, the lowest
+    *cost-weighted* residency load (ties broken by node id —
+    deterministic).  Every resident carries a placement weight (default
+    1.0, in which case the load is simply the resident count and the
+    policy is the classic fewest-residents scan, bit-for-bit).  Weighted
+    residency is what lets a multi-tenant fleet bin-pack: a 1B-model
+    replica (weight ~t_p ratio) co-locates beside a 104B replica instead
+    of each claiming a whole node — see ``serving.fleet``.  Residency is
     tracked by component *name* so conservation is checkable; components
     that are deliberately weightless (virtual consumers: consume-and-
     forward is "much simpler than processing a message", paper §3.1) may
@@ -244,9 +255,13 @@ class Cluster:
         # Residency index — the source of truth; per-node sets are the
         # derived view (audit() asserts they agree).
         self._owner: Dict[str, Node] = {}
+        # Per-component placement weights (default 1.0 = the unweighted
+        # resident-count policy).  Kept separate from the per-node load
+        # sums so audit() can recompute and cross-check.
+        self._weights: Dict[str, float] = {}
         # Placement heap: (recorded_load, node_id), lazily invalidated.
-        self._heap: Optional[List[Tuple[int, int]]] = (
-            [(0, i) for i in range(num_nodes)] if self.vectorize else None
+        self._heap: Optional[List[Tuple[float, int]]] = (
+            [(0.0, i) for i in range(num_nodes)] if self.vectorize else None
         )
 
     # -- placement-heap bookkeeping ------------------------------------------
@@ -256,10 +271,10 @@ class Cluster:
         heap = self._heap
         if heap is None:
             return
-        heapq.heappush(heap, (len(node.residents), node.node_id))
+        heapq.heappush(heap, (node.load, node.node_id))
         if len(heap) > 8 * len(self.nodes) + 64:
             self._heap = [
-                (len(n.residents), n.node_id) for n in self.nodes if n.up
+                (n.load, n.node_id) for n in self.nodes if n.up
             ]
             heapq.heapify(self._heap)
 
@@ -278,7 +293,7 @@ class Cluster:
             ]
             if not live:
                 return None
-            return min(live, key=lambda n: (len(n.residents), n.node_id))
+            return min(live, key=lambda n: (n.load, n.node_id))
         heap = self._heap
         while heap:
             load, nid = heap[0]
@@ -286,9 +301,9 @@ class Cluster:
             if not node.up:
                 heapq.heappop(heap)
                 continue
-            if load == len(node.residents):
+            if load == node.load:
                 return node
-            heapq.heapreplace(heap, (len(node.residents), nid))
+            heapq.heapreplace(heap, (node.load, nid))
         return None
 
     # The placement policy by its contract name.
@@ -298,25 +313,55 @@ class Cluster:
         return len(self._owner)
 
     # -- residency ------------------------------------------------------------
-    def assign(self, node: Node, name: str) -> None:
-        """Make ``name`` resident on ``node`` (and nowhere else)."""
+    def assign(self, node: Node, name: str, weight: float = 1.0) -> None:
+        """Make ``name`` resident on ``node`` (and nowhere else), carrying
+        ``weight`` units of placement load (the cost-weighted packing
+        knob: a cheap tenant's replica weighs less than an expensive
+        one's, so least-loaded placement bin-packs them together)."""
         old = self._owner.get(name)
-        if old is node:
+        w_old = self._weights.get(name, 1.0)
+        if old is node and weight == w_old and name in self._weights:
             return
         if old is not None:
             old.residents.discard(name)
+            old.load = old.load - w_old if old.residents else 0.0
             old._dil = None
             self._push(old)
         self._owner[name] = node
+        self._weights[name] = float(weight)
         node.residents.add(name)
+        node.load += float(weight)
         node._dil = None
 
     def release(self, name: str) -> None:
         node = self._owner.pop(name, None)
         if node is not None:
+            w = self._weights.pop(name, 1.0)
             node.residents.discard(name)
+            node.load = node.load - w if node.residents else 0.0
             node._dil = None
             self._push(node)
+
+    def weight_of(self, name: str) -> float:
+        return self._weights.get(name, 1.0)
+
+    def total_cores(self) -> int:
+        """Core budget across up nodes — the fleet arbitration capacity
+        ceiling (one core absorbs one unit of placement weight)."""
+        return sum(n.cores for n in self.nodes if n.up)
+
+    def coresident_nodes(self) -> int:
+        """Up nodes hosting residents from more than one owner prefix
+        (``name`` up to the first ``:``) — the packing observable the
+        multi-tenant bench freezes."""
+        packed = 0
+        for n in self.nodes:
+            if not n.up or len(n.residents) < 2:
+                continue
+            prefixes = {r.split(":", 1)[0] for r in n.residents}
+            if len(prefixes) > 1:
+                packed += 1
+        return packed
 
     def node_of(self, name: str) -> Optional[Node]:
         return self._owner.get(name)
@@ -338,6 +383,11 @@ class Cluster:
             if n._dil is not None:
                 fresh = max(len(n.residents) / max(n.cores, 1), 1.0) / n.speed
                 assert n._dil == fresh, f"stale dilation cache on node {n.node_id}"
+            expect = sum(self._weights.get(r, 1.0) for r in n.residents)
+            assert math.isclose(n.load, expect, rel_tol=1e-9, abs_tol=1e-6), (
+                f"weighted load out of sync on node {n.node_id}: "
+                f"{n.load} vs {expect}"
+            )
         assert seen.keys() == self._owner.keys(), (
             "residency index out of sync with per-node sets"
         )

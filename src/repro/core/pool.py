@@ -316,6 +316,7 @@ class ElasticPool:
         cluster: Optional[Cluster] = None,
         restart_cost: float = 0.0,
         step_cost: Optional[StepCost] = None,
+        placement_weight: float = 1.0,
         straggler_threshold: float = 0.0,
         straggler_patience: int = 3,
         straggler_check_every: int = 5,
@@ -371,6 +372,12 @@ class ElasticPool:
         self.cluster = cluster
         self.restart_cost = restart_cost
         self.step_cost = step_cost
+        # Cost-weighted packing: how much placement load one of this
+        # pool's workers adds to its node (cluster.assign weight).  1.0
+        # is the classic count-based policy; a multi-tenant fleet sets it
+        # per tenant (~relative StepCost) so cheap replicas bin-pack
+        # beside expensive ones.
+        self.placement_weight = float(placement_weight)
         # Gray-failure (slow node) detection — symptom-based, because a
         # gray node is *up*: heartbeats flow, ``node.up`` holds, only
         # throughput sags.  A worker whose queue stays above
@@ -560,6 +567,49 @@ class ElasticPool:
         worker.alive = False
         return worker.name
 
+    # -- cross-pool preemption hook --------------------------------------------
+    def preempt_worker(self, index: Optional[int] = None) -> Optional[str]:
+        """Surrender one worker's capacity NOW (fleet arbitration: a
+        higher-priority pool needs this node).
+
+        Unlike :meth:`kill_worker` there is no detection window, and
+        unlike a ``retire_mode="drain"`` retire the victim does not
+        finish its in-flight work first: it is force-drained through the
+        existing restart path — ``drain_for_readmission`` strips queued
+        *and* in-flight messages (freeing any paged-KV pages), the work
+        re-admits at the front of the ingress, the node residency is
+        released, and the controller target drops by one worker's units
+        so reconcile does not immediately respawn the capacity.  When a
+        ``WorkerHandoffChannel`` is attached, processed-but-uncollected
+        results stream through it first (by the export contract they no
+        longer appear in the drain, so redelivery cannot double-apply).
+
+        The last active worker is never preempted — cross-pool
+        arbitration degrades a victim tenant, it must not starve it.
+        Returns the drained worker's name, or None when nothing was
+        preemptible."""
+        active = self.active_workers()
+        if len(active) <= 1:
+            return None
+        worker = (
+            active[index % len(active)] if index is not None
+            else min(active, key=lambda w: w.load())
+        )
+        cfg = self.controller.autoscaler.config
+        self.controller.target_size = max(
+            self.controller.target_size - self.units_per_worker,
+            cfg.min_workers,
+        )
+        if self.handoff is not None and hasattr(worker, "export_carry"):
+            carried = worker.export_carry()
+            if carried:
+                self.handoff.stream(worker.name, carried)
+        name = worker.name
+        worker.draining = True
+        self._restart_worker(worker)  # draining: pop + readmit + release
+        self.metrics.incr(f"{self._px}.{self._noun}_preemptions")
+        return name
+
     # -- placement -------------------------------------------------------------
     def _place(self, worker: Any, node: Any = None) -> None:
         """Bind a worker to a node (least-loaded healthy by default) and
@@ -568,7 +618,7 @@ class ElasticPool:
         node = node if node is not None else self.cluster.place()
         worker.node = node
         if node is not None:
-            self.cluster.assign(node, worker.name)
+            self.cluster.assign(node, worker.name, weight=self.placement_weight)
 
     def _release(self, worker: Any) -> None:
         """Departure bookkeeping: residency and metering credits."""
@@ -608,12 +658,12 @@ class ElasticPool:
                 if w.alive
                 and getattr(w, "node", None) is not None
                 and w.node.up and w.node is not target
-                and len(w.node.residents) > len(target.residents) + 1
+                and w.node.load > target.load + self.placement_weight
             ]
             if not movable:
                 break
             worker = max(
-                movable, key=lambda w: (len(w.node.residents), w.load())
+                movable, key=lambda w: (w.node.load, w.load())
             )
             self._place(worker, target)
             worker.warm_until = now + self.restart_cost

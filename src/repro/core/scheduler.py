@@ -406,12 +406,57 @@ class DeadlineScheduler(JoinShortestQueueScheduler):
         return sorted(msgs, key=_deadline_of)
 
 
+class FleetDeadlinePolicy(DeadlineScheduler):
+    """``edf`` lifted one level: cross-pool (multi-tenant) arbitration.
+
+    Message dispatch is inherited unchanged from :class:`DeadlineScheduler`
+    (EDF admission order over JSQ routing — scalar and ``pick_batch``
+    alike), so a tenant pool running this policy behaves exactly like
+    ``edf``.  On top of that, the policy ranks *tenants* the same way
+    ``order`` ranks messages: :meth:`urgency` maps a tenant's
+    ``(priority, deadline headroom)`` to a sortable key where strict
+    priority dominates (a priority-2 tenant always outranks a priority-1
+    one — that is what makes preemption *priority* preemption) and,
+    within a priority class, earlier head-of-line deadlines rank sooner
+    — the ``_deadline_of`` key family applied to pools instead of
+    payloads.  ``serving.fleet.FleetManager`` sorts tenants by this key
+    when dividing cluster capacity each arbitration round and picks
+    preemption victims from the tail of the ranking.
+    """
+
+    name = "fleet_edf"
+
+    @staticmethod
+    def urgency(priority: int, headroom: Optional[float]) -> tuple:
+        """Sort key (ascending = most urgent first): higher priority
+        first; within a priority, the smallest deadline headroom (time
+        until the oldest waiting request misses its SLO) first; tenants
+        with no waiting work (``headroom=None``) last in their class."""
+        return (
+            -float(priority or 0),
+            float(headroom) if headroom is not None else float("inf"),
+        )
+
+    def rank(self, demands: Sequence[Any]) -> List[int]:
+        """Indices of ``demands`` (objects with ``.priority`` and
+        ``.headroom``) from most to least urgent; ties stay in input
+        order (stable, deterministic)."""
+        return sorted(
+            range(len(demands)),
+            key=lambda i: self.urgency(
+                getattr(demands[i], "priority", 0),
+                getattr(demands[i], "headroom", None),
+            ),
+        )
+
+
 _REGISTRY: dict[str, Callable[[], Scheduler]] = {
     "round_robin": RoundRobinScheduler,
     "fcfs": RoundRobinScheduler,
     "jsq": JoinShortestQueueScheduler,
     "pow2": PowerOfTwoScheduler,
     "edf": DeadlineScheduler,
+    "fleet_edf": FleetDeadlinePolicy,
     "partition": PartitionAffinityScheduler,
 }
 

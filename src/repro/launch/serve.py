@@ -21,6 +21,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --stub --nodes 3 \
       --fail-prob 0.5                         # node-level chaos
   PYTHONPATH=src python -m repro.launch.serve --stub --nodes 2 --straggler 0
+  PYTHONPATH=src python -m repro.launch.serve --stub \
+      --tenants hi,mid,lo --priorities 2,1,0 --slo-ms 30,50,80 \
+      --costs 0.25,0.5,1.0                    # multi-tenant fleet demo
 
 Node-level chaos (``--nodes``/``--fail-prob``/``--straggler``) places the
 replicas on a ``core.cluster.Cluster``: a node failure silences every
@@ -56,6 +59,62 @@ def build(args):
     cfg = get_arch(args.arch, smoke=True)
     model = build_model(cfg, compute_dtype=jnp.float32)
     return model, model.init(jax.random.PRNGKey(args.seed)), cfg.vocab_size
+
+
+def run_fleet(args) -> int:
+    """Multi-tenant fleet demo (``--tenants``): N co-resident serving
+    pools on one cluster, cost-weighted packing + cross-pool priority
+    preemption, vs ``--fleet-mode static`` partitioning."""
+    from repro.serving.fleet import FleetManager, TenantSpec
+
+    model, params, vocab = build(args)
+    names = [s for s in args.tenants.split(",") if s]
+
+    def per_tenant(flag, default, cast=float):
+        vals = [cast(x) for x in flag.split(",")] if flag else []
+        vals += [cast(default)] * (len(names) - len(vals))
+        return vals[: len(names)]
+
+    priorities = per_tenant(args.priorities, 0, int)
+    slos = per_tenant(args.slo_ms, 50.0)   # 1 virtual tick ~ 1 ms
+    costs = per_tenant(args.costs, 0.5)
+    specs = [
+        TenantSpec(
+            name=n, model=model, params=params, priority=p, slo_ticks=s,
+            cost=c, weight=(2.0 if c >= 1.0 else 1.0), slots=args.slots,
+            max_len=args.max_len, max_replicas=args.max_replicas,
+        )
+        for n, p, s, c in zip(names, priorities, slos, costs)
+    ]
+    fm = FleetManager(specs, num_nodes=args.nodes or 6, cores=2,
+                      mode=args.fleet_mode)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    duration = max(args.requests, 10)
+    killed = None
+    now = 0.0
+    for tick in range(duration):
+        for i, name in enumerate(names):
+            # the first (highest-listed) tenant bursts 3x mid-run; the
+            # fleet hands it the others' idle capacity, static cannot.
+            n_req = 3 if i == 0 and duration // 3 <= tick < 2 * duration // 3 else 1
+            for _ in range(n_req):
+                plen = int(rng.integers(2, 8))
+                fm.submit(name, [int(x) for x in rng.integers(0, vocab, plen)],
+                          now=now, max_new_tokens=args.max_new_tokens)
+        if args.kill_replica >= 0 and tick == 5:
+            killed = fm.kill_replica(names[0], args.kill_replica)
+        fm.step(now)
+        now += 1.0
+    while fm.pending_work() > 0 and now < duration + 2_000:
+        fm.step(now)
+        now += 1.0
+    summary = fm.stats()
+    summary["killed_replica"] = killed
+    summary["ticks"] = int(now)
+    summary["wall_s"] = round(time.time() - t0, 2)
+    print(json.dumps(summary))
+    return 0
 
 
 def main(argv=None) -> int:
@@ -102,9 +161,29 @@ def main(argv=None) -> int:
     ap.add_argument("--split-prefill", action="store_true",
                     help="with --log-backed: run prefill as its own "
                          "elastic stage (prefill/decode disaggregation)")
+    ap.add_argument("--tenants", default=None,
+                    help="comma-separated tenant names: serve them as a "
+                         "multi-tenant fleet on one cluster (FleetManager) "
+                         "instead of a single pool")
+    ap.add_argument("--priorities", default=None,
+                    help="with --tenants: comma ints, higher wins "
+                         "arbitration/preemption (default all 0)")
+    ap.add_argument("--slo-ms", default=None,
+                    help="with --tenants: comma per-tenant SLO deadlines "
+                         "(virtual ticks ~ ms; default 50)")
+    ap.add_argument("--costs", default=None,
+                    help="with --tenants: comma per-token decode costs "
+                         "t_p (model size proxy; default 0.5)")
+    ap.add_argument("--fleet-mode", default="fleet",
+                    choices=("fleet", "static"),
+                    help="with --tenants: shared cluster + arbitration, "
+                         "or static per-tenant partitions (A/B baseline)")
     add_chaos_flags(ap, fail_interval=15.0, fail_restart=8.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.tenants:
+        return run_fleet(args)
 
     cluster, engine, injector = build_cluster(args)
     model, params, vocab = build(args)

@@ -3,3 +3,4 @@ from repro.serving.kv_cache import PagePool, PagedSpec
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.elastic import ElasticBatcher, ElasticServingPool
 from repro.serving.job import ServingJob
+from repro.serving.fleet import FleetManager, TenantSpec

@@ -66,6 +66,10 @@ class Request:
     # deadline is absolute time, priority breaks ties (higher = sooner).
     deadline: Optional[float] = None
     priority: int = 0
+    # Owning tenant (multi-tenant fleet): stamped by FleetManager.submit
+    # and carried through every payload round-trip so shed/fail events are
+    # attributable per tenant in the bench, not inferred.
+    tenant: Optional[str] = None
     # Pinned first token, set by the dedicated prefill stage when the
     # serving job splits prefill from decode (``split_prefill``).  The
     # decode stage re-materializes the KV state locally at admission but
@@ -79,11 +83,15 @@ class Request:
     enqueued_at: Optional[float] = None
     completed_at: float = 0.0
     restarts: int = 0  # times re-admitted after a replica death
+    # Why an empty completion happened ("invalid" | "oversize" | "shed");
+    # None for a normally decoded request.
+    fail_reason: Optional[str] = None
 
     def reset_for_readmission(self) -> "Request":
         """Back to the not-yet-decoded state (Let-It-Crash re-admission)."""
         self.output = None
         self.completed_at = 0.0
+        self.fail_reason = None
         self.restarts += 1
         return self
 
@@ -153,8 +161,22 @@ class ContinuousBatcher:
         self.admit_stalls = 0
         self.rejected_oversize = 0
         self.rejected_invalid = 0
+        # CRDT MetricsReplica, assigned by the owning pool worker; when set,
+        # the serving-local counters above are mirrored into it so the
+        # fleet bench reads every tenant uniformly through the hub.
+        self.metrics = None
         self.rng = jax.random.PRNGKey(0)
         self.steps = 0
+
+    def _note(self, name: str, amount: int = 1) -> None:
+        if self.metrics is not None:
+            self.metrics.incr(name, amount)
+
+    def _note_page_peak(self) -> None:
+        if self.metrics is not None and self.page_pool is not None:
+            self.metrics.record_max(
+                "serve.page_high_watermark", self.page_pool.high_watermark
+            )
 
     # -- API --------------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> None:
@@ -226,7 +248,9 @@ class ContinuousBatcher:
         need = self.page_pool.pages_for(len(req.prompt))
         ids = self.page_pool.alloc(need)
         if ids is None:
+            self._note("serve.page_alloc_failures")
             return None
+        self._note_page_peak()
         prompt = jnp.asarray(req.prompt, dtype=jnp.int32)[None, :]
         # Scratch pool: page 0 reserved + exactly the prompt's pages,
         # mapped 1:1 onto temp ids 1..need.
@@ -362,6 +386,7 @@ class ContinuousBatcher:
         self.positions[slot] = 0
         self._release_pages(slot)
         self.preemptions += 1
+        self._note("serve.slot_preemptions")
         if req is not None:
             req.reset_for_readmission()
             self._stall(
@@ -382,8 +407,10 @@ class ContinuousBatcher:
                 continue
             got = self.page_pool.alloc(1)
             if got is None:
+                self._note("serve.page_alloc_failures")
                 self._preempt(slot)
                 continue
+            self._note_page_peak()
             self._page_table[slot, len(self.slot_pages[slot])] = got[0]
             self.slot_pages[slot].extend(got)
             self._table_dirty = True
@@ -429,6 +456,8 @@ class ContinuousBatcher:
                     # also overrun the slot's page-table width).  Fail
                     # fast instead of crashing the tick.
                     self.rejected_invalid += 1
+                    self._note("serve.rejected_invalid")
+                    req.fail_reason = "invalid"
                     req.output = []
                     req.completed_at = now
                     self.completed.append(req)
@@ -443,6 +472,8 @@ class ContinuousBatcher:
                     # with every page to itself — fail it rather than
                     # livelock through endless preemption.
                     self.rejected_oversize += 1
+                    self._note("serve.rejected_oversize")
+                    req.fail_reason = "oversize"
                     req.output = []
                     req.completed_at = now
                     self.completed.append(req)
@@ -451,6 +482,7 @@ class ContinuousBatcher:
                     # pool can't grant the prompt's pages right now; wait
                     # at the head of the line for a finish/preemption.
                     self.admit_stalls += 1
+                    self._note("serve.admit_stalls")
                     self._stall(msg)
                     break
                 occupied += 1

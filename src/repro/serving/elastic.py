@@ -156,7 +156,16 @@ class ElasticServingPool:
         metrics: Optional[MetricsReplica] = None,
         paged: Optional[Any] = None,          # models.layers.PagedSpec
         admission: str = "continuous",
+        step_cost: Optional[Any] = None,      # core.cluster.StepCost
+        placement_weight: float = 1.0,
+        throttle: Optional[Any] = None,
+        name: str = "serve",
     ) -> None:
+        # Replica-name prefix (worker names are "{name}:replicaN").  A
+        # multi-tenant fleet names each pool after its tenant so node
+        # residency is attributable per tenant (Cluster.coresident_nodes
+        # keys on the prefix before ":").
+        self.name = name
         self.model = model
         self.params = params
         self.slots = slots_per_replica
@@ -208,6 +217,13 @@ class ElasticServingPool:
             metrics=metrics,
             metric_prefix="serve",
             worker_noun="replica",
+            # Multi-tenant fleet knobs: per-model decode cost (meters step
+            # credit against co-residency dilation), residency weight (a
+            # 1B tenant bin-packs beside a 104B one), and the fleet's
+            # arbitration cap on this pool's units.
+            step_cost=step_cost,
+            placement_weight=placement_weight,
+            throttle=throttle,
         )
 
     # -- pool views ----------------------------------------------------------
@@ -281,9 +297,17 @@ class ElasticServingPool:
         heartbeats and re-admits everything the replica held."""
         return self.pool.kill_worker(index)
 
+    def preempt_replica(self, index: Optional[int] = None) -> Optional[str]:
+        """Cross-pool preemption entry point: force-drain one replica NOW
+        (no detection window), freeing its pages and its node for a
+        bursting higher-priority tenant.  Queued and in-flight requests
+        are re-admitted at the front of the ingress.  Never preempts the
+        last active replica; returns the drained replica's name or None."""
+        return self.pool.preempt_worker(index)
+
     # -- internals ----------------------------------------------------------
     def _make_replica(self) -> ElasticBatcher:
-        name = f"serve:replica{next(_replica_ids)}"
+        name = f"{self.name}:replica{next(_replica_ids)}"
         speed = 1.0
         if self.replica_speeds:
             speed = self.replica_speeds[

@@ -1,0 +1,490 @@
+"""Multi-tenant model fleet: N co-resident serving pools on one cluster.
+
+The paper's headline claim is that a Reactive architecture stays
+performant when demand exceeds capacity.  This module is that claim at
+the *fleet* level: a ``FleetManager`` mounts one ``ElasticServingPool``
+per tenant (per zoo model — each with its own paged KV ``PagePool`` and
+its own durable request/response topics) on a single shared ``Cluster``
+and arbitrates the overload three ways:
+
+  * **Cost-weighted packing** — every tenant's replicas carry a
+    placement weight ~ its ``StepCost`` (``placement_weight`` →
+    ``Cluster.assign(weight=...)``), so a 1B tenant bin-packs beside a
+    104B tenant instead of claiming a whole node.  Decode is metered by
+    the same ``StepCost`` × node co-residency dilation, so packing has a
+    real price and the arbitration trades it off explicitly.
+  * **Cross-pool priority preemption** — each arbitration round ranks
+    tenants with ``FleetDeadlinePolicy.urgency`` (strict priority
+    dominates, EDF headroom within a class), grants replica budgets
+    against the cluster's core capacity, and *force-drains* a
+    lower-priority tenant's replica (``ElasticPool.preempt_worker`` →
+    ``drain_for_readmission``, freeing its KV pages and its node NOW)
+    when a bursting higher-priority tenant is owed capacity.  Every
+    tenant keeps ≥ 1 replica — arbitration degrades, it never starves.
+  * **Per-tenant shedding** — requests whose deadline already expired
+    before admission are answered immediately as ``fail_reason="shed"``
+    SLO losses *for that tenant*, instead of a global drop policy
+    letting one tenant's burst starve everyone.  Backlog beyond the
+    bounded pool ingress parks durably in the tenant's request topic
+    (defer, not shed) and is reported via ``note_rejected`` so each
+    pool's autoscaler still sees the true demand.
+
+``mode="static"`` is the measurement baseline: the same tenants, the
+same total node count, but partitioned — one private cluster slice per
+tenant, no weight-aware co-residency, no cross-tenant arbitration.  The
+``bench_multitenant`` A/B freezes fleet-vs-static aggregate goodput
+(SLO-met responses per tick) under a diurnal + flash overload trace.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.cluster import Cluster, StepCost
+from repro.core.elastic import AutoscalerConfig
+from repro.core.messages import Message
+from repro.core.scheduler import FleetDeadlinePolicy
+from repro.data.topics import MessageLog
+from repro.models.layers import PagedSpec
+from repro.serving.batcher import Request
+from repro.serving.elastic import ElasticServingPool
+from repro.serving.job import request_from_payload, request_to_payload
+from repro.telemetry.metrics import MetricsHub, MetricsReplica
+
+__all__ = ["TenantSpec", "FleetManager"]
+
+
+@dataclass
+class TenantSpec:
+    """One tenant: a model, its SLO contract, and its resource shape."""
+
+    name: str
+    model: Any
+    params: Any
+    priority: int = 0          # higher = preempts lower under overload
+    slo_ticks: float = 30.0    # deadline = submit time + slo_ticks
+    cost: float = 0.25         # t_p per decode tick (StepCost.t_process0)
+    weight: float = 1.0        # placement load per replica (~ cost scale)
+    slots: int = 4             # decode slots per replica
+    max_len: int = 64
+    max_replicas: int = 8
+    page_size: int = 16
+    pages: Optional[int] = None   # per-replica KV pages (None: slots fill)
+    loss_budget: float = 0.5   # max tolerated SLO-loss fraction (bench)
+
+    def paged_spec(self) -> PagedSpec:
+        per_slot = -(-self.max_len // self.page_size)
+        pages = self.pages or (1 + self.slots * per_slot)
+        return PagedSpec(num_pages=pages, page_size=self.page_size)
+
+    def step_cost(self) -> StepCost:
+        return StepCost(t_process0=self.cost, growth_alpha=0.0)
+
+
+@dataclass
+class _TenantState:
+    """Per-tenant runtime the manager mutates each tick."""
+
+    spec: TenantSpec
+    pool: ElasticServingPool
+    requests: Any              # request Topic
+    responses: Any             # response Topic
+    cursor: int = 0            # next unread offset in `requests`
+    cap_units: int = 0         # fleet-granted unit budget (throttle cap)
+    granted: int = 1           # fleet-granted replica count
+    collected: int = 0         # harvest index into pool.completed
+    pending: Dict[int, float] = field(default_factory=dict)  # req -> deadline
+    submitted: int = 0
+    completed: int = 0
+    slo_met: int = 0
+    slo_missed: int = 0
+    shed: int = 0
+
+    # -- arbitration inputs (FleetDeadlinePolicy.rank reads these) ---------
+    @property
+    def priority(self) -> int:
+        return self.spec.priority
+
+    @property
+    def headroom(self) -> Optional[float]:
+        """Time until the oldest in-flight request misses its SLO,
+        relative to the clock the manager passes via ``_now``."""
+        if not self.pending:
+            return None
+        return min(self.pending.values()) - self._now
+
+    _now: float = 0.0
+
+    # -- demand -> desired replicas ----------------------------------------
+    def backlog(self) -> int:
+        lag = self.requests.partitions[0].end_offset() - self.cursor
+        return lag + self.pool.queue_depth() + self.pool.occupancy()
+
+    def desired_replicas(self) -> int:
+        want = -(-self.backlog() // self.spec.slots)  # ceil
+        return max(1, min(want, self.spec.max_replicas))
+
+
+class FleetManager:
+    """N tenants, one cluster, one arbitration loop.
+
+    ``mode="fleet"``: all tenants share ``Cluster(num_nodes, cores)``;
+    capacity is granted in placement-weight units against
+    ``cluster.total_cores()`` by ``FleetDeadlinePolicy`` ranking, and a
+    tenant holding more replicas than its grant is preempted.
+
+    ``mode="static"``: each tenant gets a private
+    ``Cluster(num_nodes // N, cores)`` and a fixed replica cap — equal
+    total hardware, none of it fungible.
+    """
+
+    def __init__(
+        self,
+        tenants: List[TenantSpec],
+        *,
+        num_nodes: int = 6,
+        cores: int = 2,
+        mode: str = "fleet",
+        log: Optional[MessageLog] = None,
+        ingress_capacity: Optional[int] = None,
+        feed_batch: int = 32,
+        arbitrate_every: int = 1,
+        heartbeat_timeout: float = 3.0,
+        autoscaler: Optional[AutoscalerConfig] = None,
+    ) -> None:
+        if mode not in ("fleet", "static"):
+            raise ValueError(f"unknown fleet mode {mode!r}")
+        if not tenants:
+            raise ValueError("fleet needs at least one tenant")
+        self.mode = mode
+        self.log = log if log is not None else MessageLog()
+        self.policy = FleetDeadlinePolicy()
+        self.feed_batch = feed_batch
+        self.arbitrate_every = max(int(arbitrate_every), 1)
+        self.hub = MetricsHub()
+        self.metrics = MetricsReplica("fleet")
+        # Burst-chasing autoscaler: the fleet cap (or the static slice's
+        # replica ceiling) is the real limiter, so each pool tracks its
+        # backlog aggressively and lets arbitration do the rationing.
+        self.autoscaler = autoscaler or AutoscalerConfig(
+            high_watermark=1.5,
+            low_watermark=0.25,
+            cooldown=0.0,
+            step_fraction=1.0,
+            max_step=16,
+        )
+        self.preemptions = 0
+        self._now = 0.0
+        self.steps = 0
+
+        if mode == "fleet":
+            self.cluster: Optional[Cluster] = Cluster(num_nodes, cores=cores)
+            clusters = [self.cluster] * len(tenants)
+        else:
+            per = max(1, num_nodes // len(tenants))
+            self.cluster = None
+            self.partitions = [Cluster(per, cores=cores) for _ in tenants]
+            clusters = self.partitions
+
+        self.tenants: Dict[str, _TenantState] = {}
+        for spec, cluster in zip(tenants, clusters):
+            if spec.name in self.tenants:
+                raise ValueError(f"duplicate tenant {spec.name!r}")
+            for t in (f"{spec.name}.requests", f"{spec.name}.responses"):
+                if not self.log.exists(t):
+                    self.log.create_topic(t, 1)
+            req_topic = self.log.get(f"{spec.name}.requests")
+            resp_topic = self.log.get(f"{spec.name}.responses")
+            cap = (
+                ingress_capacity
+                if ingress_capacity is not None
+                else 4 * spec.slots
+            )
+            if mode == "static":
+                # A private slice can never borrow: hard-cap replicas at
+                # what the partition's cores absorb at this weight.
+                static_max = max(
+                    1, int(cluster.total_cores() // max(spec.weight, 1e-9))
+                )
+                max_replicas = min(spec.max_replicas, static_max)
+            else:
+                max_replicas = spec.max_replicas
+            pool = ElasticServingPool(
+                spec.model,
+                spec.params,
+                slots_per_replica=spec.slots,
+                max_len=spec.max_len,
+                max_replicas=max_replicas,
+                initial_units=spec.slots,
+                ingress_capacity=cap,
+                policy="edf",
+                overflow="defer",       # backlog parks in the topic
+                autoscaler=self.autoscaler,
+                heartbeat_timeout=heartbeat_timeout,
+                cluster=cluster,
+                metrics=MetricsReplica(f"fleet.{spec.name}"),
+                paged=spec.paged_spec(),
+                step_cost=spec.step_cost(),
+                placement_weight=spec.weight,
+                throttle=self._make_throttle(spec.name),
+                name=spec.name,
+            )
+            self.tenants[spec.name] = _TenantState(
+                spec=spec, pool=pool,
+                requests=req_topic, responses=resp_topic,
+                cap_units=pool.pool.controller.target_size,
+            )
+
+    def _make_throttle(self, name: str):
+        """Fleet arbitration cap for one tenant's pool, as the pool's
+        upstream-throttle hook: its own autoscaler still tracks demand,
+        the fleet bounds how far it may act on it."""
+
+        def cap() -> Optional[int]:
+            state = self.tenants.get(name)
+            if state is None or self.mode == "static":
+                return None  # static slices are capped by max_replicas
+            return state.cap_units
+
+        return cap
+
+    # -- API ----------------------------------------------------------------
+    def submit(
+        self,
+        tenant: str,
+        prompt: List[int],
+        now: float = 0.0,
+        max_new_tokens: int = 16,
+    ) -> int:
+        """Durably append one request to the tenant's topic: stamped with
+        the tenant tag and an absolute deadline (now + slo_ticks)."""
+        state = self.tenants[tenant]
+        req = Request(
+            prompt=list(prompt),
+            max_new_tokens=max_new_tokens,
+            deadline=now + state.spec.slo_ticks,
+            priority=state.spec.priority,
+            tenant=tenant,
+        )
+        state.requests.publish(Message(
+            topic=state.requests.name,
+            payload=request_to_payload(req),
+            key=str(req.req_id),
+            created_at=now,
+        ))
+        state.submitted += 1
+        return req.req_id
+
+    def kill_replica(self, tenant: str, index: int = 0) -> str:
+        """Chaos hook: silence one replica of ``tenant`` (supervisor
+        detection + Let-It-Crash re-admission, pages freed on drain)."""
+        return self.tenants[tenant].pool.kill_replica(index)
+
+    def total_pages_in_use(self) -> int:
+        """Zero-leak invariant across every tenant's every replica."""
+        return sum(s.pool.total_pages_in_use() for s in self.tenants.values())
+
+    # -- internals ----------------------------------------------------------
+    def _feed(self, state: _TenantState, now: float) -> None:
+        """Move durable backlog into the pool's bounded ingress.  A
+        request already past its deadline is shed *here* — answered as a
+        tenant-attributed SLO loss without burning decode capacity; a
+        full ingress defers (cursor holds, backlog stays in the topic)
+        and the lag is reported so the autoscaler scales for it."""
+        part = state.requests.partitions[0]
+        end = part.end_offset()
+        while state.cursor < end:
+            msgs = part.read(state.cursor,
+                             min(self.feed_batch, end - state.cursor))
+            if not msgs:
+                break
+            for msg in msgs:
+                req = request_from_payload(msg.payload)
+                req.enqueued_at = msg.created_at
+                if req.deadline is not None and now > req.deadline:
+                    self._shed(state, req, now)
+                    state.cursor += 1
+                    continue
+                if not state.pool.submit(req, now=msg.created_at):
+                    # defer: this offset stays unread; report the parked
+                    # lag so the pool still scales toward it.
+                    state.pool.pool.note_rejected(end - state.cursor)
+                    return
+                state.pending[req.req_id] = (
+                    req.deadline if req.deadline is not None
+                    else float("inf")
+                )
+                state.cursor += 1
+
+    def _shed(self, state: _TenantState, req: Request, now: float) -> None:
+        req.fail_reason = "shed"
+        req.output = []
+        req.completed_at = now
+        state.shed += 1
+        state.slo_missed += 1
+        state.pool.metrics.incr("serve.shed_expired")
+        self._respond(state, req, slo_met=False)
+
+    def _respond(self, state: _TenantState, req: Request,
+                 slo_met: bool) -> None:
+        payload = {
+            "req_id": req.req_id,
+            "tenant": state.spec.name,
+            "output": list(req.output or []),
+            "restarts": req.restarts,
+            "enqueued_at": req.enqueued_at,
+            "completed_at": req.completed_at,
+            "slo_met": slo_met,
+        }
+        if req.fail_reason is not None:
+            payload["fail_reason"] = req.fail_reason
+        state.responses.publish(Message(
+            topic=state.responses.name,
+            payload=payload,
+            key=str(req.req_id),
+            created_at=req.completed_at,
+        ))
+
+    def _harvest(self, state: _TenantState) -> None:
+        fresh = state.pool.completed[state.collected:]
+        state.collected = len(state.pool.completed)
+        for req in fresh:
+            state.pending.pop(req.req_id, None)
+            ok = (
+                req.fail_reason is None
+                and bool(req.output)
+                and (req.deadline is None or req.completed_at <= req.deadline)
+            )
+            state.completed += 1
+            if ok:
+                state.slo_met += 1
+            else:
+                state.slo_missed += 1
+            self._respond(state, req, slo_met=ok)
+
+    def _arbitrate(self, now: float) -> None:
+        """One fleet round: rank tenants by urgency, grant replica
+        budgets against the core capacity, preempt over-grant holders."""
+        assert self.cluster is not None
+        states = list(self.tenants.values())
+        for s in states:
+            s._now = now
+        order = self.policy.rank(states)
+
+        # Floor: every tenant keeps one replica (bounded loss, never
+        # starvation).  The remaining budget is *priority* capacity:
+        # granted greedily in urgency order — the most urgent tenant
+        # takes replicas up to its demand before the next sees any.
+        # That asymmetry is the whole point of cross-pool preemption;
+        # the floor is what keeps it from becoming starvation.
+        budget = float(self.cluster.total_cores())
+        grants = {}
+        for s in states:
+            grants[s.spec.name] = 1
+            budget -= s.spec.weight
+        for i in order:
+            s = states[i]
+            name = s.spec.name
+            while (
+                grants[name] < s.desired_replicas()
+                and s.spec.weight <= budget
+            ):
+                grants[name] += 1
+                budget -= s.spec.weight
+
+        for s in states:
+            name = s.spec.name
+            s.granted = grants[name]
+            s.cap_units = grants[name] * s.spec.slots
+
+        # Preempt from the least urgent end: a tenant holding more live
+        # replicas than its grant force-drains the excess immediately —
+        # pages freed, queued + in-flight work re-admitted at its own
+        # ingress front, node handed back for the urgent tenant's spawn.
+        for i in reversed(order):
+            s = states[i]
+            excess = len(s.pool.active_replicas()) - s.granted
+            for _ in range(max(excess, 0)):
+                if s.pool.preempt_replica() is None:
+                    break
+                self.preemptions += 1
+                self.metrics.incr("fleet.preemptions")
+
+    # -- main loop ----------------------------------------------------------
+    def step(self, now: float = 0.0) -> int:
+        """One fleet tick: feed every tenant from its durable topic,
+        arbitrate capacity (fleet mode), step every pool, harvest
+        completions to the response topics.  Returns tokens decoded."""
+        self._now = now
+        for state in self.tenants.values():
+            self._feed(state, now)
+        if self.mode == "fleet" and self.steps % self.arbitrate_every == 0:
+            self._arbitrate(now)
+        decoded = 0
+        for state in self.tenants.values():
+            decoded += state.pool.step(now)
+            self._harvest(state)
+        self.steps += 1
+        return decoded
+
+    def pending_work(self) -> int:
+        return sum(
+            (s.requests.partitions[0].end_offset() - s.cursor)
+            + s.pool.queue_depth() + s.pool.occupancy()
+            for s in self.tenants.values()
+        )
+
+    def run_until_drained(
+        self, max_steps: int = 10_000, now: float = 0.0, dt: float = 1.0
+    ) -> int:
+        decoded = 0
+        for _ in range(max_steps):
+            if self.pending_work() == 0:
+                break
+            decoded += self.step(now)
+            now += dt
+        return decoded
+
+    # -- telemetry ----------------------------------------------------------
+    def merged_metrics(self) -> MetricsHub:
+        """Every tenant pool's CRDT replicas plus the fleet's own,
+        merged through the hub (restart-proof, order-independent)."""
+        self.hub.ingest(self.metrics)
+        for s in self.tenants.values():
+            self.hub.ingest(s.pool.pool.merged_metrics())
+        return self.hub
+
+    def stats(self) -> Dict[str, Any]:
+        """Deterministic per-tenant counters (what the bench freezes)."""
+        out: Dict[str, Any] = {"mode": self.mode, "tenants": {}}
+        for name, s in self.tenants.items():
+            pool_metrics = s.pool.pool.merged_metrics()
+            loss = (
+                s.slo_missed / s.submitted if s.submitted else 0.0
+            )
+            out["tenants"][name] = {
+                "priority": s.spec.priority,
+                "submitted": s.submitted,
+                "completed": s.completed,
+                "slo_met": s.slo_met,
+                "slo_missed": s.slo_missed,
+                "shed": s.shed,
+                "loss_frac": round(loss, 4),
+                "loss_budget": s.spec.loss_budget,
+                "replica_preemptions": pool_metrics.value(
+                    "serve.replica_preemptions"
+                ),
+                "page_peak": int(pool_metrics.peak(
+                    "serve.page_high_watermark"
+                )),
+                "pages_in_use": s.pool.total_pages_in_use(),
+            }
+        out["fleet_preemptions"] = self.preemptions
+        out["pages_in_use"] = self.total_pages_in_use()
+        if self.cluster is not None:
+            out["coresident_nodes"] = self.cluster.coresident_nodes()
+        out["slo_met_total"] = sum(
+            t["slo_met"] for t in out["tenants"].values()
+        )
+        return out

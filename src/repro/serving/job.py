@@ -69,6 +69,8 @@ def request_to_payload(req: Request) -> Dict[str, Any]:
     }
     if req.first_token is not None:
         out["first_token"] = req.first_token
+    if req.tenant is not None:
+        out["tenant"] = req.tenant
     return out
 
 
@@ -80,6 +82,7 @@ def request_from_payload(d: Dict[str, Any]) -> Request:
         deadline=d.get("deadline"),
         priority=d.get("priority") or 0,
         first_token=d.get("first_token"),
+        tenant=d.get("tenant"),
     )
 
 
@@ -130,6 +133,12 @@ class _DecodeStage(Stage):
                 "enqueued_at": req.enqueued_at,
                 "completed_at": req.completed_at,
             }
+            # Only-when-set: single-tenant completions keep their legacy
+            # wire form byte-for-byte.
+            if req.tenant is not None:
+                completion["tenant"] = req.tenant
+            if req.fail_reason is not None:
+                completion["fail_reason"] = req.fail_reason
             src = self.job._source.pop(req.req_id, None)
             if src is None:
                 continue  # replay-completed in a previous life

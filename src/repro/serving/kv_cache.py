@@ -96,3 +96,15 @@ class PagePool:
     def leaked(self) -> int:
         """Pages neither free nor owned — 0 unless accounting is broken."""
         return self.capacity - self.available - self.in_use
+
+    def snapshot(self) -> dict:
+        """Counter snapshot for telemetry export (fleet bench reads these
+        uniformly through the CRDT metrics path)."""
+        return {
+            "allocs": self.allocs,
+            "frees": self.frees,
+            "alloc_failures": self.alloc_failures,
+            "high_watermark": self.high_watermark,
+            "in_use": self.in_use,
+            "leaked": self.leaked(),
+        }

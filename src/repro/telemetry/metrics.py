@@ -23,6 +23,10 @@ class MetricsReplica:
         self.worker_id = worker_id
         self.counters: Dict[str, GCounter] = {}
         self.gauges: Dict[str, LWWRegister] = {}
+        # Max-register semilattice: merge = elementwise max.  Used for
+        # high-watermark style metrics (peak pages in use) where a plain
+        # counter cannot express "largest value ever observed".
+        self.maxes: Dict[str, float] = {}
 
     def incr(self, name: str, amount: int = 1) -> None:
         if name not in self.counters:
@@ -32,6 +36,14 @@ class MetricsReplica:
     def gauge(self, name: str, value, timestamp: float) -> None:
         reg = self.gauges.get(name, LWWRegister())
         self.gauges[name] = reg.set(value, timestamp, tiebreak=self.worker_id)
+
+    def record_max(self, name: str, value: float) -> None:
+        cur = self.maxes.get(name)
+        if cur is None or value > cur:
+            self.maxes[name] = float(value)
+
+    def peak(self, name: str, default: float = 0.0) -> float:
+        return self.maxes.get(name, default)
 
     def merge(self, other: "MetricsReplica") -> "MetricsReplica":
         out = MetricsReplica(self.worker_id)
@@ -43,6 +55,9 @@ class MetricsReplica:
             mine_g = self.gauges.get(name, LWWRegister())
             theirs_g = other.gauges.get(name, LWWRegister())
             out.gauges[name] = mine_g.merge(theirs_g)
+        for name in set(self.maxes) | set(other.maxes):
+            out.maxes[name] = max(self.maxes.get(name, float("-inf")),
+                                  other.maxes.get(name, float("-inf")))
         return out
 
     def value(self, name: str) -> int:
@@ -68,6 +83,10 @@ class MetricsHub:
         with self._lock:
             reg = self._merged.gauges.get(name)
             return None if reg is None else reg.value
+
+    def peak(self, name: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._merged.peak(name, default)
 
     def snapshot(self) -> Dict[str, int]:
         with self._lock:

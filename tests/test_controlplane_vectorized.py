@@ -470,3 +470,74 @@ def test_dispatch_batch_telemetry_counters():
     rounds = pool.counter("pool.dispatch_rounds")
     assert dispatched == 48 and rounds >= 3
     assert dispatched / rounds <= 16  # realized batch size
+
+
+# --- EDF deadline ordering under vectorized admission (ISSUE 10) -------
+# Explicit (non-property) anchors for the fleet policy: pick_batch over
+# an edf-ordered batch must equal the scalar pick loop, and fleet_edf
+# must inherit that behaviour bit-for-bit while adding tenant ranking.
+
+
+@pytest.mark.parametrize("name", ["edf", "fleet_edf"])
+def test_edf_pick_batch_preserves_deadline_order(name):
+    sched, vec = scheduler_pair(name)
+    msgs = [msg(0, deadline=5.0), msg(1, deadline=1.0), msg(2),
+            msg(3, deadline=1.0), msg(4, deadline=0.5)]
+    ordered = sched.order(list(msgs))
+    # earliest deadline first; the 1.0-tie stays FIFO (1 before 3);
+    # the deadline-less message sorts last
+    assert [m.created_at for m in ordered] == [4.0, 1.0, 3.0, 0.0, 2.0]
+
+    queues = [FakeQueue(d) for d in (2, 0, 1)]
+    scalar = []
+    for m in ordered:
+        i = sched.pick_msg(m, queues)
+        queues[i]._d += 1
+        scalar.append(i)
+    view = LoadView([FakeQueue(d) for d in (2, 0, 1)], bind=False)
+    assert vec.pick_batch(vec.order(list(msgs)), view) == scalar
+    assert view.depths.tolist() == [q._d for q in queues]
+
+
+def test_fleet_edf_dispatch_identical_to_edf():
+    """fleet_edf is edf at the message level: same order, same routes."""
+    edf, fleet = make_scheduler("edf"), make_scheduler("fleet_edf")
+    msgs = [msg(i, partition=i % 3,
+                deadline=(None if i % 4 == 0 else float(i % 5)))
+            for i in range(17)]
+    assert ([m.created_at for m in edf.order(list(msgs))]
+            == [m.created_at for m in fleet.order(list(msgs))])
+    va = LoadView([FakeQueue(d) for d in (3, 1, 0, 2)], bind=False)
+    vb = LoadView([FakeQueue(d) for d in (3, 1, 0, 2)], bind=False)
+    assert (edf.pick_batch(edf.order(list(msgs)), va)
+            == fleet.pick_batch(fleet.order(list(msgs)), vb))
+
+
+def test_fleet_urgency_priority_dominates_headroom():
+    from repro.core.scheduler import FleetDeadlinePolicy
+
+    u = FleetDeadlinePolicy.urgency
+    # strict priority: a high-priority tenant with huge headroom still
+    # outranks a low-priority tenant about to miss its SLO
+    assert u(2, 1e9) < u(1, 0.0)
+    # within a class, smaller headroom is more urgent
+    assert u(1, 2.0) < u(1, 5.0)
+    # idle tenants (no waiting work) rank last in their class
+    assert u(1, 5.0) < u(1, None)
+    assert u(0, None) < u(-1, 0.0)
+
+
+def test_fleet_rank_is_stable_and_deterministic():
+    from repro.core.scheduler import FleetDeadlinePolicy
+
+    class Demand:
+        def __init__(self, priority, headroom):
+            self.priority = priority
+            self.headroom = headroom
+
+    policy = FleetDeadlinePolicy()
+    demands = [Demand(0, 3.0), Demand(2, None), Demand(1, 1.0),
+               Demand(1, 1.0), Demand(2, 7.0)]
+    order = policy.rank(demands)
+    assert order == [4, 1, 2, 3, 0]  # the (1, 1.0) tie keeps input order
+    assert order == policy.rank(demands)  # pure / repeatable

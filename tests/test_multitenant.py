@@ -1,0 +1,278 @@
+"""Multi-tenant fleet (ISSUE 10 tentpole): cost-weighted packing on the
+shared cluster, cross-pool priority preemption (force-drain, zero page
+leak, re-admission), per-tenant shedding with attributed responses, and
+the max-register metrics that surface per-tenant peaks."""
+
+import jax
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.elastic import AutoscalerConfig
+from repro.data.topics import MessageLog
+from repro.models.stub import StubModel
+from repro.serving import ElasticServingPool, FleetManager, Request, TenantSpec
+from repro.telemetry.metrics import MetricsHub, MetricsReplica
+
+
+@pytest.fixture(scope="module")
+def stub():
+    model = StubModel()
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _specs(stub, **overrides):
+    """Two-tenant default: cheap/high-priority vs expensive/low."""
+    model, params = stub
+    base = dict(model=model, params=params, slots=2, max_len=32,
+                slo_ticks=50.0)
+    hi = dict(base, name="hi", priority=1, cost=0.25, weight=0.5,
+              max_replicas=6)
+    lo = dict(base, name="lo", priority=0, cost=1.0, weight=2.0,
+              max_replicas=3)
+    hi.update(overrides.get("hi", {}))
+    lo.update(overrides.get("lo", {}))
+    return [TenantSpec(**hi), TenantSpec(**lo)]
+
+
+# --- cost-weighted packing ----------------------------------------------------
+
+
+def test_weighted_assign_packs_cheap_beside_expensive():
+    cluster = Cluster(2, cores=2)
+    a, b = cluster.nodes
+    cluster.assign(a, "lo:replica0", weight=2.0)
+    # least-loaded placement now prefers the empty node for the next
+    # heavyweight, but three lightweights fit beside the heavyweight
+    # before the loads even out
+    cluster.assign(cluster.place(), "lo:replica1", weight=2.0)
+    assert cluster.node_of("lo:replica1") is b
+    for i in range(3):
+        cluster.assign(cluster.place(), f"hi:replica{i}", weight=0.5)
+    assert cluster.weight_of("hi:replica0") == 0.5
+    # 2.0 + k*0.5 loads: the cheap replicas co-reside with expensive ones
+    assert cluster.coresident_nodes() == 2
+    assert cluster.total_cores() == 4
+    cluster.audit()
+
+
+def test_weight_rebinding_and_release_keep_loads_consistent():
+    cluster = Cluster(2, cores=2)
+    a, b = cluster.nodes
+    cluster.assign(a, "x", weight=1.5)
+    cluster.assign(b, "x", weight=0.5)   # move + reweigh in one call
+    assert a.load == 0.0 and b.load == 0.5
+    cluster.release("x")
+    assert b.load == 0.0 and cluster.weight_of("x") == 1.0  # default
+    cluster.audit()
+
+
+# --- cross-pool preemption (ElasticPool.preempt_worker) ----------------------
+
+
+def _busy_pool(stub, replicas=3):
+    model, params = stub
+    pool = ElasticServingPool(
+        model, params, slots_per_replica=2, max_len=32,
+        max_replicas=replicas, initial_units=2 * replicas,
+        # hold the autoscaler still: this test drives scale by hand
+        autoscaler=AutoscalerConfig(high_watermark=1e9, low_watermark=-1.0),
+        paged=TenantSpec(name="t", model=model, params=params,
+                         slots=2, max_len=32).paged_spec(),
+        name="t",
+    )
+    for i in range(6):
+        assert pool.submit(Request(prompt=[1 + i, 2, 3],
+                                   max_new_tokens=8), now=0.0)
+    pool.step(0.0)  # spawn replicas, admit, decode one tick
+    return pool
+
+
+def test_preempt_replica_force_drains_and_readmits(stub):
+    pool = _busy_pool(stub)
+    assert len(pool.active_replicas()) >= 2
+    in_flight = pool.occupancy()
+    assert in_flight > 0
+    target_before = pool.pool.controller.target_size
+    victim = pool.preempt_replica()
+    assert victim is not None and victim.startswith("t:replica")
+    # the victim's pages are freed the moment it drains — no leak window
+    assert all(r.page_pool.leaked() == 0 for r in pool.replicas
+               if r.page_pool is not None)
+    # its work re-admitted (ingress front or another replica), not lost
+    assert pool.queue_depth() + pool.occupancy() >= in_flight - 0
+    # the controller target dropped so reconcile won't respawn the unit
+    assert pool.pool.controller.target_size < target_before
+    assert pool.pool.merged_metrics().value("serve.replica_preemptions") == 1
+    # nothing dropped: everything still completes
+    for t in range(1, 200):
+        pool.step(float(t))
+        if pool.queue_depth() == 0 and pool.occupancy() == 0:
+            break
+    assert len(pool.completed) == 6
+    assert all(r.output for r in pool.completed)
+    assert pool.total_pages_in_use() == 0
+
+
+def test_preempt_never_takes_the_last_replica(stub):
+    model, params = stub
+    pool = ElasticServingPool(model, params, slots_per_replica=2,
+                              max_len=32, max_replicas=2, initial_units=2)
+    pool.submit(Request(prompt=[1, 2], max_new_tokens=4), now=0.0)
+    pool.step(0.0)
+    assert len(pool.active_replicas()) == 1
+    assert pool.preempt_replica() is None  # degrade, never starve
+
+
+# --- the fleet end-to-end -----------------------------------------------------
+
+
+def test_fleet_burst_preempts_low_priority_tenant(stub):
+    fm = FleetManager(_specs(stub), num_nodes=3, cores=2, mode="fleet")
+    # warm the low-priority tenant into multiple replicas
+    for t in range(8):
+        for _ in range(4):
+            fm.submit("lo", [1, 2, 3], now=float(t), max_new_tokens=6)
+        fm.step(float(t))
+    assert len(fm.tenants["lo"].pool.active_replicas()) >= 2
+    # now the high-priority tenant bursts far past its share
+    for t in range(8, 20):
+        for _ in range(10):
+            fm.submit("hi", [4, 5], now=float(t), max_new_tokens=6)
+        fm.step(float(t))
+    assert fm.preemptions >= 1
+    assert fm.tenants["lo"].granted < fm.tenants["lo"].spec.max_replicas
+    # preemption degraded lo but never starved it
+    assert len(fm.tenants["lo"].pool.active_replicas()) >= 1
+    fm.run_until_drained(now=20.0)
+    assert fm.pending_work() == 0
+    assert fm.total_pages_in_use() == 0
+    # every submitted request was answered durably, tenant-attributed
+    for name, s in fm.tenants.items():
+        part = s.responses.partitions[0]
+        msgs = part.read(0, part.end_offset())
+        assert len(msgs) == s.submitted
+        assert all(m.payload["tenant"] == name for m in msgs)
+
+
+def test_fleet_sheds_expired_requests_with_attribution(stub):
+    fm = FleetManager(_specs(stub, hi={"slo_ticks": 2.0}),
+                      num_nodes=2, cores=2)
+    fm.submit("hi", [1, 2, 3], now=0.0, max_new_tokens=4)
+    # the deadline (0 + 2.0) passes before the request is ever fed
+    fm.step(10.0)
+    s = fm.tenants["hi"]
+    assert s.shed == 1 and s.slo_missed == 1
+    part = s.responses.partitions[0]
+    (msg,) = part.read(0, part.end_offset())
+    assert msg.payload["fail_reason"] == "shed"
+    assert msg.payload["tenant"] == "hi"
+    assert msg.payload["slo_met"] is False
+    assert msg.payload["output"] == []
+    assert fm.run_until_drained() >= 0
+    assert fm.tenants["hi"].pool.metrics.value("serve.shed_expired") == 1
+
+
+def test_fleet_oversize_fail_fast_is_tenant_attributed(stub):
+    # pages=2 -> one usable page (16 tokens): a legal-length prompt that
+    # still cannot fit even with the whole pool to itself fails fast
+    fm = FleetManager(_specs(stub, lo={"pages": 2}), num_nodes=2, cores=2)
+    fm.submit("lo", list(range(20)), now=0.0, max_new_tokens=4)
+    for t in range(5):
+        fm.step(float(t))
+    s = fm.tenants["lo"]
+    part = s.responses.partitions[0]
+    (msg,) = part.read(0, part.end_offset())
+    assert msg.payload["fail_reason"] == "oversize"
+    assert msg.payload["tenant"] == "lo"
+    assert msg.payload["slo_met"] is False
+    assert fm.merged_metrics().counter("serve.rejected_oversize") == 1
+
+
+def test_fleet_chaos_kill_leaks_no_pages(stub):
+    fm = FleetManager(_specs(stub), num_nodes=3, cores=2)
+    for t in range(6):
+        for _ in range(4):
+            fm.submit("hi", [1, 2, 3, 4], now=float(t), max_new_tokens=6)
+            fm.submit("lo", [5, 6], now=float(t), max_new_tokens=6)
+        fm.step(float(t))
+    killed = fm.kill_replica("hi", 0)
+    assert killed.startswith("hi:replica")
+    fm.run_until_drained(now=6.0)
+    assert fm.pending_work() == 0
+    assert fm.total_pages_in_use() == 0
+    stats = fm.stats()
+    assert stats["pages_in_use"] == 0
+    for s in fm.tenants.values():
+        assert s.completed + s.shed == s.submitted
+
+
+def test_static_mode_partitions_and_never_preempts(stub):
+    fm = FleetManager(_specs(stub), num_nodes=4, cores=2, mode="static")
+    assert fm.cluster is None and len(fm.partitions) == 2
+    for t in range(10):
+        for _ in range(6):
+            fm.submit("hi", [1, 2], now=float(t), max_new_tokens=4)
+            fm.submit("lo", [3, 4], now=float(t), max_new_tokens=4)
+        fm.step(float(t))
+        # the private slice hard-caps lo at cores // weight = 2 replicas
+        # no matter the backlog — static capacity is not fungible
+        assert len(fm.tenants["lo"].pool.active_replicas()) <= 2
+    assert fm.preemptions == 0
+    fm.run_until_drained(now=10.0)
+    assert fm.total_pages_in_use() == 0
+
+
+def test_fleet_shared_log_and_duplicate_tenant_rejected(stub):
+    log = MessageLog()
+    fm = FleetManager(_specs(stub), num_nodes=2, cores=2, log=log)
+    assert log.exists("hi.requests") and log.exists("lo.responses")
+    model, params = stub
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetManager([TenantSpec(name="x", model=model, params=params),
+                      TenantSpec(name="x", model=model, params=params)])
+    with pytest.raises(ValueError, match="mode"):
+        FleetManager(_specs(stub), mode="bogus")
+    del fm
+
+
+# --- max-register metrics (satellite: per-tenant peaks over CRDT) ------------
+
+
+def test_record_max_is_a_semilattice():
+    a = MetricsReplica("a")
+    b = MetricsReplica("b")
+    a.record_max("peak", 3.0)
+    a.record_max("peak", 1.0)   # lower: no-op
+    b.record_max("peak", 5.0)
+    b.record_max("only_b", 2.0)
+    ab = a.merge(b)
+    ba = b.merge(a)
+    assert ab.peak("peak") == 5.0 == ba.peak("peak")      # commutative
+    assert ab.peak("only_b") == 2.0
+    assert a.merge(a).peak("peak") == 3.0                 # idempotent
+    assert ab.merge(b).peak("peak") == 5.0                # absorbing
+    assert a.peak("missing", default=-1.0) == -1.0
+
+
+def test_metrics_hub_surfaces_peaks():
+    hub = MetricsHub()
+    r1 = MetricsReplica("r1")
+    r1.record_max("serve.page_high_watermark", 7.0)
+    r2 = MetricsReplica("r2")
+    r2.record_max("serve.page_high_watermark", 4.0)
+    hub.ingest(r1)
+    hub.ingest(r2)
+    assert hub.peak("serve.page_high_watermark") == 7.0
+    assert hub.peak("absent") == 0.0
+
+
+def test_fleet_stats_report_page_peaks(stub):
+    fm = FleetManager(_specs(stub), num_nodes=2, cores=2)
+    fm.submit("hi", [1, 2, 3], now=0.0, max_new_tokens=4)
+    fm.step(0.0)
+    fm.run_until_drained(now=1.0)
+    stats = fm.stats()
+    assert stats["tenants"]["hi"]["page_peak"] > 0
+    assert stats["tenants"]["hi"]["slo_met"] == 1
+    assert stats["slo_met_total"] == 1
